@@ -1,0 +1,58 @@
+"""Ablations beyond the paper's tables:
+
+* β (significance threshold of Eq. 5 / update scale of Eq. 3) — the paper
+  fixes β=0.2 with a one-line justification; we sweep it.
+* DP-noise defence (§4.2 discussion, option 1): privacy-utility trade-off
+  when the pilot adds Gaussian noise to its upload.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, make_sim, make_task, timed
+from repro.core.fedpc import FedPCConfig
+
+ROUNDS = 10
+
+
+def run() -> dict:
+    task = make_task(seed=11)
+    results = {}
+
+    # --- beta sweep ------------------------------------------------------
+    for beta in (0.05, 0.2, 0.5, 0.9):
+        sim, _ = make_sim(task, 5, seed=11)
+        sim.fed_cfg = FedPCConfig(n_workers=5, beta=beta)
+        res, us = timed(lambda: sim.run_fedpc(ROUNDS, eval_every=ROUNDS))
+        acc = res.eval_history[-1][1]
+        results[("beta", beta)] = acc
+        emit(f"ablate_beta_{beta}", us,
+             f"acc={acc:.4f} final_cost={res.costs[-1]:.4f}")
+
+    # --- DP noise on the pilot upload (worker defence 1) -------------------
+    import jax
+    from repro.core.privacy import dp_noise_tree
+
+    for sigma in (0.0, 0.01, 0.05, 0.2):
+        sim, _ = make_sim(task, 5, seed=12)
+
+        # wrap each worker's train_round to noise its (potential) upload
+        for k, w in enumerate(sim.workers):
+            orig = w.train_round
+
+            def noisy(params, _orig=orig, _k=k, _s=sigma):
+                q, c = _orig(params)
+                if _s > 0:
+                    q = dp_noise_tree(q, jax.random.PRNGKey(_k + 1), _s)
+                return q, c
+            w.train_round = noisy
+
+        res, us = timed(lambda: sim.run_fedpc(ROUNDS, eval_every=ROUNDS))
+        acc = res.eval_history[-1][1]
+        results[("dp", sigma)] = acc
+        emit(f"ablate_dp_sigma_{sigma}", us, f"acc={acc:.4f}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Tables 1–3 analog: accuracy approximation of FedPC vs FedAvg vs Phong
+vs the centralized upper bound, across worker counts (synthetic task)."""
+from __future__ import annotations
+
+from benchmarks.common import central_worker, emit, make_sim, make_task, timed
+
+ROUNDS = 12
+WORKER_COUNTS = (3, 5, 10)
+
+
+def run() -> dict:
+    task = make_task()
+    results: dict = {}
+
+    # Table 1: centralized upper bound
+    sim, _ = make_sim(task, 3, seed=0)
+    (res_c, us) = timed(lambda: sim.run_centralized(
+        ROUNDS, central_worker(task), eval_every=ROUNDS))
+    acc_central = res_c.eval_history[-1][1]
+    results["central"] = acc_central
+    emit("table1_central_acc", us, f"{acc_central:.4f}")
+
+    # Tables 2/3: per algorithm × N
+    for n in WORKER_COUNTS:
+        row = {}
+        for algo in ("fedpc", "fedavg", "phong"):
+            sim, _ = make_sim(task, n, seed=n)
+            runner = getattr(sim, f"run_{algo}")
+            res, us = timed(lambda r=runner: r(ROUNDS, eval_every=ROUNDS))
+            acc = res.eval_history[-1][1]
+            row[algo] = acc
+            approx = acc / max(acc_central, 1e-9)
+            emit(f"table2_{algo}_N{n}_acc", us,
+                 f"{acc:.4f} (approx {approx:.3f} of central)")
+        results[n] = row
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Shared benchmark scaffolding: simulator setup + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import BatchIterator, federated_loaders
+from repro.data.synthetic import (SyntheticClassification, dirichlet_split,
+                                  random_share_split)
+from repro.fed.simulator import FedSimulator
+from repro.fed.worker import Worker, make_worker_configs
+from repro.models.mlp import init_mlp_classifier, mlp_accuracy, \
+    mlp_loss_and_grad
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, (time.time() - t0) * 1e6
+
+
+def make_task(n_samples=2400, n_features=24, n_classes=8, seed=0):
+    t = SyntheticClassification(n_samples=n_samples, n_features=n_features,
+                                n_classes=n_classes, seed=seed)
+    x, y = t.generate()
+    n_tr = int(0.8 * n_samples)
+    return (x[:n_tr], y[:n_tr], x[n_tr:], y[n_tr:])
+
+
+def make_sim(task, n_workers, seed=0, dirichlet=None):
+    xtr, ytr, xte, yte = task
+    if dirichlet is None:
+        splits = random_share_split(ytr, n_workers, seed=seed)
+    else:
+        splits = dirichlet_split(ytr, n_workers, alpha=dirichlet, seed=seed)
+    loaders = federated_loaders((xtr, ytr), splits, seed=seed,
+                                batch_menu=(64, 32))
+    cfgs = make_worker_configs(n_workers, [len(s) for s in splits],
+                               seed=seed, batch_menu=(64, 32))
+    workers = [Worker(cfg=cfgs[k], loader=loaders[k],
+                      loss_and_grad=mlp_loss_and_grad)
+               for k in range(n_workers)]
+    params = init_mlp_classifier(jax.random.PRNGKey(0),
+                                 xtr.shape[1], int(ytr.max()) + 1,
+                                 hidden=(48, 48))
+    sim = FedSimulator(workers, params,
+                       eval_fn=lambda p: mlp_accuracy(p, xte, yte))
+    return sim, params
+
+
+def central_worker(task, seed=0):
+    xtr, ytr, _, _ = task
+    cfgs = make_worker_configs(1, [len(ytr)], seed=seed, batch_menu=(64,))
+    return Worker(cfg=cfgs[0], loader=BatchIterator((xtr, ytr), 64, seed=seed),
+                  loss_and_grad=mlp_loss_and_grad)

@@ -1,0 +1,60 @@
+"""Kernel micro-bench: latency of the FedPC round ops (interpret mode on
+CPU — correctness-weighted; TPU timings come from real hardware) and the
+equivalent jnp reference, plus per-parameter byte costs."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+M = 1 << 20            # 1M params
+N_WORKERS = 8
+
+
+def _bench(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run() -> dict:
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (M,))
+    p1 = jax.random.normal(jax.random.fold_in(k, 1), (M,))
+    p2 = jax.random.normal(jax.random.fold_in(k, 2), (M,))
+    tern = jax.random.randint(jax.random.fold_in(k, 3),
+                              (N_WORKERS, M), -1, 2).astype(jnp.int8)
+    w = jnp.full((N_WORKERS,), 0.02)
+
+    us = _bench(lambda: ops.ternary_encode(q, p1, p2, 0.2, interpret=True))
+    us_ref = _bench(lambda: jax.jit(
+        lambda a, b, c: ref.ternary_encode_ref(a, b, c, 0.2))(q, p1, p2))
+    emit("kernel_ternary_encode_1M", us, f"ref_jnp={us_ref:.0f}us")
+
+    t = ops.ternary_encode(q, p1, p2, 0.2, interpret=True)
+    us = _bench(lambda: ops.pack2bit(t, interpret=True))
+    us_ref = _bench(jax.jit(ref.pack2bit_ref), t.reshape(-1, 4).reshape(-1))
+    emit("kernel_pack2bit_1M", us,
+         f"ref_jnp={us_ref:.0f}us bytes_out={M // 4}")
+
+    us = _bench(lambda: ops.master_update(q, tern, w, p1, p2, interpret=True))
+    us_ref = _bench(jax.jit(ref.master_update_ref), q, tern, w, p1, p2)
+    emit("kernel_master_update_1M_8w", us, f"ref_jnp={us_ref:.0f}us")
+
+    # correctness spot check rides along
+    out = ops.master_update(q, tern, w, p1, p2, interpret=True)
+    want = ref.master_update_ref(q, tern, w, p1, p2)
+    err = float(jnp.max(jnp.abs(out - want)))
+    emit("kernel_master_update_maxerr", 0.0, f"{err:.2e}")
+    return {}
+
+
+if __name__ == "__main__":
+    run()

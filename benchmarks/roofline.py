@@ -1,0 +1,72 @@
+"""Roofline report from the dry-run JSON (launch/dryrun.py output).
+
+Prints, per (arch × shape × mesh): the three terms in seconds, the dominant
+bottleneck, MODEL_FLOPS, and the useful-compute ratio — the §Roofline table
+of EXPERIMENTS.md is generated from this."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+
+def load(path: str | None = None) -> list:
+    path = path or RESULTS
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_row(r: dict) -> str:
+    rl = r["roofline"]
+    return (f"compute={rl['compute_s']:.3f}s memory={rl['memory_s']:.3f}s "
+            f"collective={rl['collective_s']:.3f}s dom={rl['dominant']} "
+            f"useful={rl['useful_ratio']:.2f}")
+
+
+def run() -> dict:
+    records = load()
+    ok = [r for r in records if r["status"] == "ok"]
+    fails = [r for r in records if r["status"] == "fail"]
+    skips = [r for r in records if r["status"] == "skipped"]
+    for r in sorted(ok, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             r.get("compile_s", 0) * 1e6, fmt_row(r))
+    emit("roofline_summary", 0.0,
+         f"{len(ok)} ok / {len(fails)} fail / {len(skips)} skipped")
+    if not records:
+        emit("roofline_summary", 0.0,
+             "no dryrun.json — run: PYTHONPATH=src python -m "
+             "repro.launch.dryrun --all")
+    return {"ok": len(ok), "fail": len(fails), "skip": len(skips)}
+
+
+def table_markdown(mesh: str = "16x16") -> str:
+    """EXPERIMENTS.md §Roofline table."""
+    rows = [r for r in load() if r["mesh"] == mesh]
+    out = ["| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL_FLOPS | useful |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped | — | — |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | |")
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3f} | "
+            f"{rl['memory_s']:.3f} | {rl['collective_s']:.3f} | "
+            f"{rl['dominant']} | {rl['model_flops_total']:.2e} | "
+            f"{rl['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Quickstart: the FedPC protocol in ~60 lines.
+
+Three hospitals jointly train a classifier without any of them revealing
+weights or gradients — only the pilot-of-the-round uploads a model; everyone
+else uploads 2-bit evolution codes (Eqs. 1, 3, 4, 5 of the paper).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.data.pipeline import federated_loaders
+from repro.data.synthetic import SyntheticClassification, random_share_split
+from repro.fed.simulator import FedSimulator
+from repro.fed.worker import Worker, make_worker_configs
+from repro.models.mlp import init_mlp_classifier, mlp_accuracy, \
+    mlp_loss_and_grad
+
+
+def main():
+    # --- private data: three silos of different size ----------------------
+    x, y = SyntheticClassification(n_samples=1800, n_features=24,
+                                   n_classes=6, seed=0).generate()
+    xtr, ytr, xte, yte = x[:1500], y[:1500], x[1500:], y[1500:]
+    splits = random_share_split(ytr, n_workers=3, seed=1)
+    print("silo sizes:", [len(s) for s in splits])
+
+    # --- workers with PRIVATE hyper-parameters (batch size, lr decay, ...) -
+    loaders = federated_loaders((xtr, ytr), splits, seed=2)
+    cfgs = make_worker_configs(3, [len(s) for s in splits], seed=3)
+    workers = [Worker(cfg=cfgs[k], loader=loaders[k],
+                      loss_and_grad=mlp_loss_and_grad) for k in range(3)]
+
+    # --- federated training ----------------------------------------------
+    params = init_mlp_classifier(jax.random.PRNGKey(0), 24, 6)
+    sim = FedSimulator(workers, params,
+                       eval_fn=lambda p: mlp_accuracy(p, xte, yte))
+    res = sim.run_fedpc(rounds=15, eval_every=5)
+
+    print("\nround costs:", [f"{c:.3f}" for c in res.costs])
+    print("pilot per round:", res.pilot_history)
+    print("eval accuracy:", [(t, f"{a:.3f}") for t, a in res.eval_history])
+    print(f"bytes/round: {res.bytes_per_round[0]/1e3:.1f} KB "
+          f"(FedAvg would be {2 * 3 * res.bytes_per_round[0] / (3 + 1 + 2/16) / 1e3:.1f} KB)")
+    print("\nuplink kinds seen by the master:",
+          sorted({k for (_, _, k, _) in sim.ledger.events}))
+
+
+if __name__ == "__main__":
+    main()

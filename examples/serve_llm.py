@@ -1,0 +1,79 @@
+"""Batched serving driver: prefill a prompt batch, then greedy-decode.
+
+Exercises the production serving path (parallel prefill → KV/state caches →
+one-token decode steps) for any assigned architecture, including the
+recurrent ones (xLSTM/Jamba run with O(1) state).
+
+Run:  PYTHONPATH=src python examples/serve_llm.py --arch xlstm-350m \
+          --batch 4 --prompt-len 32 --new-tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--full-size", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_size:
+        cfg = cfg.reduced()
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = args.batch, args.prompt_len
+
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)}
+    if cfg.mrope:
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+    if cfg.is_encdec:
+        batch["audio_embed"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_frames, cfg.d_model))
+    if cfg.arch_type == "vlm":
+        batch["vision_embed"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.n_patches, cfg.d_model))
+
+    state = m.init_decode_state(B, S + args.new_tokens)
+
+    t0 = time.time()
+    prefill = jax.jit(m.prefill)
+    logits, state = prefill(params, batch, state)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+    print(f"[serve] {cfg.name}: prefill {B}×{S} in {t_prefill*1e3:.0f} ms")
+
+    decode = jax.jit(m.decode_step)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out_tokens = [tok]
+    t0 = time.time()
+    for i in range(args.new_tokens - 1):
+        sb = {"token": tok, "pos": jnp.asarray(S + i, jnp.int32)}
+        if cfg.mrope:
+            sb["positions"] = jnp.full((3, B, 1), S + i, jnp.int32)
+        logits, state = decode(params, state, sb)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    per_tok = t_decode / max(args.new_tokens - 1, 1) * 1e3
+    print(f"[serve] decoded {args.new_tokens} tokens "
+          f"({per_tok:.1f} ms/token incl. first-call compile)")
+    seqs = jnp.concatenate(out_tokens, axis=1)
+    print(f"[serve] sample continuation (batch 0): "
+          f"{[int(t) for t in seqs[0][:12]]} ...")
+
+
+if __name__ == "__main__":
+    main()

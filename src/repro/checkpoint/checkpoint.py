@@ -1,0 +1,93 @@
+"""Pytree checkpointing: .npz tensor store + JSON manifest.
+
+Keeps FedPC state (global model + history + costs) restartable. Paths are
+keyed by the flattened pytree path so restores are structure-checked.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+from repro.utils import PyTree
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str, tree: PyTree, step: int,
+                    metadata: dict | None = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_path_str(p): np.asarray(v) for p, v in flat}
+    ckpt = os.path.join(directory, f"ckpt_{step:08d}")
+    # npz cannot store bf16/fp8 — persist as a same-width uint view, the
+    # manifest records the true dtype for restore.
+    storable = {
+        k: (v.view(np.uint16) if v.dtype == ml_dtypes.bfloat16 else v)
+        for k, v in arrays.items()
+    }
+    np.savez(ckpt + ".npz", **storable)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+        "shapes": {k: list(v.shape) for k, v in arrays.items()},
+        "metadata": metadata or {},
+    }
+    with open(ckpt + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+    return ckpt + ".npz"
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(f[len("ckpt_"):-len(".npz")])
+        for f in os.listdir(directory)
+        if f.startswith("ckpt_") and f.endswith(".npz")
+    ]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, like: PyTree,
+                    step: int | None = None) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``like`` (strict key/shape check)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    ckpt = os.path.join(directory, f"ckpt_{step:08d}")
+    with open(ckpt + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(ckpt + ".npz")
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, v in paths:
+        key = _path_str(p)
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if manifest["dtypes"].get(key) == "bfloat16" and arr.dtype == np.uint16:
+            arr = arr.view(ml_dtypes.bfloat16)
+        if tuple(arr.shape) != tuple(v.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != expected {v.shape}")
+        leaves.append(jnp.asarray(arr, dtype=v.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest

@@ -1,0 +1,31 @@
+"""FedPC core: the paper's contribution as composable JAX functions.
+
+Public API:
+  - ternary:   Eq. (4)/(5) evolution ternarization
+  - goodness:  Eq. (1) pilot selection
+  - update:    Eq. (3) master update rule
+  - packing:   2-bit wire format (§3.3, 16× compression)
+  - protocol:  messages + Eq. (8) communication accounting
+  - fedpc:     round orchestration (Algorithms 1 & 2)
+  - baselines: FedAvg, Phong et al. sequential weight transmission
+  - privacy:   §4.2 information-flow ledger and worker defences
+"""
+from repro.core.fedpc import (  # noqa: F401
+    FedPCConfig,
+    FedPCState,
+    WorkerResult,
+    init_state,
+    master_round,
+    worker_ternary,
+)
+from repro.core.goodness import goodness, select_pilot  # noqa: F401
+from repro.core.packing import pack2bit, packed_size, unpack2bit  # noqa: F401
+from repro.core.protocol import (  # noqa: F401
+    CommLedger,
+    fedavg_bytes_per_round,
+    fedpc_bytes_per_round,
+    phong_bytes_per_round,
+    reduction_vs_fedavg,
+)
+from repro.core.ternary import ternarize, ternarize_round1  # noqa: F401
+from repro.core.update import master_update, master_update_round1  # noqa: F401

@@ -1,0 +1,53 @@
+"""Baselines the paper compares against (§5): FedAvg and Phong et al.
+
+* FedAvg (McMahan et al., 2017): every round, all N workers train locally and
+  upload full weights; the master takes the data-share weighted average.
+* Phong & Phuong (2019), "weight transmission": the model travels
+  *sequentially* through the workers — worker k trains, passes weights to
+  worker k+1. One "epoch" = one full pass over all workers. No averaging.
+
+Both exchange full weights (2·V·N bytes per epoch — see protocol.py), which
+is the communication bar FedPC undercuts.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import PyTree, tree_weighted_sum
+
+
+def fedavg_aggregate(local_params: Sequence[PyTree], sizes) -> PyTree:
+    """Data-share weighted parameter average."""
+    sizes = jnp.asarray(sizes, jnp.float32)
+    weights = sizes / jnp.sum(sizes)
+    return tree_weighted_sum(local_params, list(weights))
+
+
+def fedavg_aggregate_stacked(stacked: PyTree, sizes) -> PyTree:
+    """FedAvg over a stacked (N, ...) worker axis — used by the distributed
+    runtime where worker models live on different mesh slices."""
+    sizes = jnp.asarray(sizes, jnp.float32)
+    w = sizes / jnp.sum(sizes)
+    def avg(x):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(x.astype(jnp.float32) * wb, axis=0).astype(x.dtype)
+    return jax.tree_util.tree_map(avg, stacked)
+
+
+def phong_sequential_round(
+    params: PyTree,
+    train_fns: Sequence[Callable[[PyTree], tuple[PyTree, jax.Array]]],
+) -> tuple[PyTree, list]:
+    """One Phong et al. epoch: the model visits each worker in order.
+
+    ``train_fns[k]`` runs worker k's local training from the given weights and
+    returns (new_params, cost). Returns final params and per-worker costs.
+    """
+    costs = []
+    for fn in train_fns:
+        params, cost = fn(params)
+        costs.append(cost)
+    return params, costs

@@ -1,0 +1,135 @@
+"""FedPC round logic — Algorithms 1 & 2 of the paper, as pure functions.
+
+The master state carries the global model and its two-step history (needed by
+both Eq. (5) on workers and Eq. (3) on the master) plus last-round costs for
+the goodness function. A round is::
+
+    results_k = worker local training (private hparams)      [Alg. 2 line 1]
+    costs     = gather scalar costs                          [Alg. 1 line 3]
+    k*        = argmax goodness(costs, prev_costs, sizes)    [Alg. 1 line 4]
+    Q_pilot   = full weights from k*                         [Alg. 1 line 5]
+    T_k       = ternary(Q_k, P^{t-1}, P^{t-2}, beta_k)       [Alg. 1 line 6]
+    P^t       = Eq. (3)                                      [Alg. 1 line 7]
+
+This module is runtime-agnostic: ``repro.fed.simulator`` drives it with an
+in-process list of workers (the paper's testbed), ``repro.fed.distributed``
+drives the same math through shard_map collectives on the TPU mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.goodness import select_pilot as _select_pilot
+from repro.core.ternary import ternarize_tree, ternarize_tree_round1
+from repro.core.update import master_update_tree
+from repro.utils import PyTree
+
+
+@dataclass(frozen=True)
+class FedPCConfig:
+    n_workers: int
+    alpha0: float = 0.01          # master lr for the round-1 rule of Eq. (3)
+    beta: float = 0.2             # significance threshold (paper: (0,1), e.g. 0.2)
+    alpha_round1: float = 0.01    # Eq. (4) threshold (worker lr at round 1)
+    pack_bits: int = 2            # wire width per ternary code
+    weight_bits: int = 32         # wire width per weight (paper uses fp32)
+
+
+class FedPCState(NamedTuple):
+    """Master-side state between rounds (all public to every participant)."""
+    params: PyTree        # P^{t-1} — current global model
+    params_prev: PyTree   # P^{t-2} — needed by Eq. (3)/(5)
+    prev_costs: jax.Array  # (N,) last-round worker costs, +inf before round 1
+    round: jax.Array       # scalar int32, 1-based round about to run
+
+
+class WorkerResult(NamedTuple):
+    """What worker k produces locally before any communication."""
+    params: PyTree        # Q_k^t — stays on the worker unless pilot
+    cost: jax.Array       # C_k^t — the only always-uploaded value
+
+
+def init_state(params: PyTree, n_workers: int) -> FedPCState:
+    return FedPCState(
+        params=params,
+        params_prev=jax.tree_util.tree_map(jnp.zeros_like, params),
+        prev_costs=jnp.full((n_workers,), jnp.inf, jnp.float32),
+        round=jnp.asarray(1, jnp.int32),
+    )
+
+
+def worker_ternary(
+    cfg: FedPCConfig,
+    local_params: PyTree,
+    state: FedPCState,
+) -> PyTree:
+    """Alg. 2 line 8: Eq. (4) at round 1, Eq. (5) afterwards.
+
+    Both branches are evaluated and selected on the (possibly traced) round
+    index — they are elementwise and cheap relative to training.
+    """
+    t1 = ternarize_tree_round1(local_params, state.params, cfg.alpha_round1)
+    # At round 1 params_prev is zeros; the selected branch ignores it.
+    tt = ternarize_tree(local_params, state.params, state.params_prev, cfg.beta)
+    pick = jnp.asarray(state.round) <= 1
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(pick, a, b), t1, tt
+    )
+
+
+def master_round(
+    cfg: FedPCConfig,
+    state: FedPCState,
+    stacked_params: PyTree,   # (N, ...) leaves — all workers' local models
+    costs: jax.Array,         # (N,)
+    sizes: jax.Array,         # (N,)
+) -> tuple[FedPCState, dict]:
+    """Alg. 1 lines 3–8 given gathered worker outputs.
+
+    NOTE on fidelity vs. the wire protocol: mathematically the master needs
+    only the pilot row of ``stacked_params`` plus everyone else's ternary
+    codes. The simulator/distributed runtimes enforce that split (and account
+    bytes accordingly); this function expresses the *math* over the stacked
+    representation so it can be jit/shard_map'ed with static shapes.
+    """
+    k_star, scores = _select_pilot(costs, state.prev_costs, sizes, state.round)
+
+    # Every worker's ternary codes (the pilot's row is masked in Eq. (3)).
+    ternaries = jax.vmap(lambda p: worker_ternary(cfg, p, state))(stacked_params)
+
+    q_pilot = jax.tree_util.tree_map(lambda x: x[k_star], stacked_params)
+    p_shares = sizes.astype(jnp.float32) / jnp.sum(sizes.astype(jnp.float32))
+    betas = jnp.full((cfg.n_workers,), cfg.beta, jnp.float32)
+
+    new_params = master_update_tree(
+        q_pilot, ternaries, p_shares, betas, k_star,
+        state.params, state.params_prev, state.round, cfg.alpha0,
+    )
+
+    new_state = FedPCState(
+        params=new_params,
+        params_prev=state.params,
+        prev_costs=costs.astype(jnp.float32),
+        round=state.round + 1,
+    )
+    aux = {
+        "k_star": k_star,
+        "goodness": scores,
+        "ternary_density": jnp.mean(
+            jnp.stack([
+                jnp.mean(jnp.abs(l.astype(jnp.float32)))
+                for l in jax.tree_util.tree_leaves(ternaries)
+            ])
+        ),
+    }
+    return new_state, aux
+
+
+def fedpc_round_jit(cfg: FedPCConfig):
+    """A jit-compiled (state, stacked_params, costs, sizes) -> (state, aux)."""
+    return jax.jit(partial(master_round, cfg))

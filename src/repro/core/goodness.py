@@ -1,0 +1,52 @@
+"""Goodness function — Eq. (1) of the paper.
+
+The master scores each worker's round from (cost, dataset size) only::
+
+    G_k^t = S_k / C_k^t                  if t == 1
+    G_k^t = S_k (C_k^{t-1} - C_k^t)      if t  > 1
+
+and selects the argmax as the *pilot* worker k* — the only worker asked to
+upload its full model instance this round. Everything here is pure and
+jit-able; the costs are N scalars so this is communication-free in the
+distributed runtime (one tiny all_gather).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def goodness(
+    costs: jax.Array,        # (N,) float — C_k^t
+    prev_costs: jax.Array,   # (N,) float — C_k^{t-1} (ignored when t == 1)
+    sizes: jax.Array,        # (N,) float or int — S_k
+    t: jax.Array | int,      # round index, 1-based
+) -> jax.Array:
+    """Eq. (1). Returns (N,) goodness scores."""
+    sizes = sizes.astype(jnp.float32)
+    costs = costs.astype(jnp.float32)
+    prev_costs = prev_costs.astype(jnp.float32)
+    g1 = sizes / jnp.maximum(costs, 1e-12)
+    gt = sizes * (prev_costs - costs)
+    return jnp.where(jnp.asarray(t) <= 1, g1, gt)
+
+
+def select_pilot(
+    costs: jax.Array,
+    prev_costs: jax.Array,
+    sizes: jax.Array,
+    t: jax.Array | int,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (k_star, scores). Ties break to the lowest index (argmax)."""
+    scores = goodness(costs, prev_costs, sizes, t)
+    return jnp.argmax(scores), scores
+
+
+def rotation_entropy(pilot_history: jax.Array, n_workers: int) -> jax.Array:
+    """Diagnostic for the privacy discussion of §4.2: empirical entropy of the
+    pilot-selection distribution over a window. High entropy ⇒ the master
+    cannot repeatedly poll one victim worker; ~0 ⇒ the evasion rules of the
+    paper's discussion section should trigger on the worker side."""
+    counts = jnp.bincount(pilot_history, length=n_workers).astype(jnp.float32)
+    p = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0))

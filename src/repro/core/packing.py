@@ -1,0 +1,77 @@
+"""2-bit packing of ternary codes — the wire format of §3.3.
+
+The paper: "we can represent these three values by 2 bits … we can compress 4
+ternary values into 1 Byte", giving the 16× upload reduction of Eq. (8)
+(vs. float32 weights; 32× vs. float64).
+
+Code mapping (biased): t + 1 ∈ {0, 1, 2} → 2-bit field. Four fields pack
+little-endian into one uint8: byte = c0 | c1<<2 | c2<<4 | c3<<6.
+
+These are the jnp reference semantics; ``repro.kernels.pack2bit`` implements
+the same transform as a Pallas TPU kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import PyTree, round_up
+
+PACK_FACTOR = 4  # ternary codes per byte
+
+
+def packed_size(n: int) -> int:
+    """Bytes needed for n ternary codes."""
+    return round_up(n, PACK_FACTOR) // PACK_FACTOR
+
+
+def pack2bit(t: jax.Array) -> jax.Array:
+    """Pack int8 ternary codes {-1,0,1} (flat or any shape) into uint8.
+
+    Returns a 1-D uint8 array of ``packed_size(t.size)`` bytes. Input is
+    zero-padded up to a multiple of 4 codes.
+    """
+    flat = t.reshape(-1).astype(jnp.int8)
+    n = flat.shape[0]
+    pad = round_up(n, PACK_FACTOR) - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.int8)])
+    codes = (flat + 1).astype(jnp.uint8).reshape(-1, PACK_FACTOR)  # {0,1,2}
+    shifts = jnp.array([0, 2, 4, 6], jnp.uint8)
+    return jnp.sum(codes << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack2bit(packed: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`pack2bit`; returns the first ``n`` int8 codes."""
+    b = packed.reshape(-1, 1).astype(jnp.uint8)
+    shifts = jnp.array([0, 2, 4, 6], jnp.uint8)
+    fields = (b >> shifts) & jnp.uint8(0x3)          # (bytes, 4)
+    codes = fields.reshape(-1).astype(jnp.int8) - 1  # back to {-1,0,1}
+    return codes[:n]
+
+
+def pack_tree(t: PyTree) -> tuple[jax.Array, list]:
+    """Pack a whole pytree of ternary codes into one uint8 buffer.
+
+    Returns (buffer, layout) where layout records (treedef, shapes) so the
+    receiver can unpack without out-of-band information beyond the public
+    model architecture (which the master already has).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(t)
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves]).astype(jnp.int8)
+    layout = (treedef, [l.shape for l in leaves])
+    return pack2bit(flat), layout
+
+
+def unpack_tree(packed: jax.Array, layout) -> PyTree:
+    treedef, shapes = layout
+    n = sum(int(jnp.prod(jnp.array(s))) if s else 1 for s in shapes)
+    flat = unpack2bit(packed, n)
+    leaves, off = [], 0
+    for s in shapes:
+        size = 1
+        for d in s:
+            size *= d
+        leaves.append(flat[off : off + size].reshape(s))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,111 @@
+"""Privacy machinery of §4.2 — enforced information-flow + worker defences.
+
+What FedPC's privacy argument actually rests on (Thms 2–4):
+
+  1. Non-pilot workers reveal only ternary signs w.r.t. *public* history
+     (the master's own P^{t-1}, P^{t-2}) — never weights, never gradients.
+  2. Worker hyper-parameters (lr, batch size, local epochs) are private, so
+     even the pilot's weight delta is a sum of n unknown mini-batch gradients
+     scaled by an unknown lr — a subset-sum-style non-linear inversion.
+  3. The goodness rotation stops the master from polling one victim; if it
+     *does* get stuck (collusion, Thm 4), the worker-side defences below
+     trigger.
+
+On a TPU pod all mesh slices belong to one job, so this module provides the
+*protocol discipline* (a leakage ledger that fails tests if weight tensors of
+non-pilot workers ever enter master-visible messages) and the worker-side
+defences of the §4.2 discussion, not a cryptographic boundary. DESIGN.md
+records this honestly as the changed trust assumption.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import PyTree
+
+# Message fields that are allowed to leave a worker slice.
+ALLOWED_UPLINK_FIELDS = {
+    "cost",            # scalar loss — Thm 2's only always-shared signal
+    "packed_ternary",  # 2-bit codes — Thm 3
+    "pilot_params",    # full weights, ONLY when commanded SEND_MODEL
+    "worker_id",
+    "round",
+}
+
+
+class LeakageError(RuntimeError):
+    pass
+
+
+@dataclass
+class LeakageLedger:
+    """Records every value that crosses the worker→master boundary and
+    enforces that full-precision parameters cross only on the pilot path."""
+    events: list = field(default_factory=list)
+
+    def record(self, worker_id: int, round_: int, kind: str,
+               is_pilot: bool) -> None:
+        if kind not in ALLOWED_UPLINK_FIELDS:
+            raise LeakageError(f"disallowed uplink field {kind!r}")
+        if kind == "pilot_params" and not is_pilot:
+            raise LeakageError(
+                f"worker {worker_id} attempted full-weight upload without "
+                f"SEND_MODEL command at round {round_}"
+            )
+        self.events.append((round_, worker_id, kind, is_pilot))
+
+    def pilot_rounds(self, worker_id: int) -> list[int]:
+        return [r for (r, w, k, p) in self.events
+                if w == worker_id and k == "pilot_params"]
+
+    def consecutive_pilot_streak(self, worker_id: int) -> int:
+        rounds = sorted(self.pilot_rounds(worker_id))
+        streak = best = 0
+        prev = None
+        for r in rounds:
+            streak = streak + 1 if prev is not None and r == prev + 1 else 1
+            best = max(best, streak)
+            prev = r
+        return best
+
+
+# ---------------------------------------------------------------------------
+# Worker-side defences (discussion of §4.2)
+# ---------------------------------------------------------------------------
+
+def should_evade(pilot_streak: int, max_streak: int = 3) -> bool:
+    """Paper: 'after a fixed number of steps, if the global model … is always
+    identical to its local model instance', the worker defends itself."""
+    return pilot_streak >= max_streak
+
+
+def evade_cost(prev_cost: jax.Array) -> jax.Array:
+    """Defence (2): report the cost unchanged so goodness (Eq. 1) is zero and
+    the master must pick someone else."""
+    return prev_cost
+
+
+def dp_noise_tree(params: PyTree, key: jax.Array, sigma: float) -> PyTree:
+    """Defence (1): Gaussian-mechanism noise on the uploaded instance."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [
+        l + sigma * jax.random.normal(k, l.shape, jnp.float32).astype(l.dtype)
+        for l, k in zip(leaves, keys)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, noisy)
+
+
+def gradient_inversion_hardness(n_batches: int, known_lr: bool) -> dict:
+    """Thm 2 bookkeeping: unknowns vs. equations available to an
+    honest-but-curious master observing one worker for 2(n+1) epochs."""
+    unknowns = n_batches + (0 if known_lr else 1)
+    equations = 1  # per observed consecutive-epoch pair: one vector equation
+    return {
+        "unknowns_per_epoch": unknowns,
+        "equations_per_pair": equations,
+        "underdetermined": unknowns > equations,
+    }

@@ -1,0 +1,73 @@
+"""Ternarization of parameter evolution — Eq. (4) and Eq. (5) of the paper.
+
+Workers never upload weights or gradients; they upload, per parameter, the
+*direction of evolution* quantized to {-1, 0, +1}:
+
+Round 1 (Eq. 4) — no history yet, threshold is the worker's own lr ``alpha_k``
+against the public random init ``P^0``::
+
+    T = -1  if  Q - P0 < -alpha
+    T =  0  if |Q - P0| <= alpha
+    T = +1  if  Q - P0 >  alpha
+
+Round t >= 2 (Eq. 5) — threshold is ``beta_k |P^{t-1} - P^{t-2}|`` (a fraction
+of the global model's own previous step)::
+
+    T = 0        if |Q - P1| < beta * |P1 - P2|
+    T = sign(f)  otherwise,  f = (Q - P1) * (P1 - P2)
+
+All functions are elementwise over arbitrary-shaped arrays and are the pure
+jnp *reference* semantics; ``repro.kernels`` provides Pallas TPU kernels with
+identical numerics (validated against these in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import PyTree
+
+TERNARY_DTYPE = jnp.int8
+
+
+def ternarize_round1(q: jax.Array, p0: jax.Array, alpha: jax.Array | float) -> jax.Array:
+    """Eq. (4): ternary code for the first round, vs. the initial model."""
+    d = (q - p0).astype(jnp.float32)
+    pos = (d > alpha).astype(TERNARY_DTYPE)
+    neg = (d < -alpha).astype(TERNARY_DTYPE)
+    return pos - neg
+
+
+def ternarize(
+    q: jax.Array,
+    p_prev: jax.Array,
+    p_prev2: jax.Array,
+    beta: jax.Array | float,
+) -> jax.Array:
+    """Eq. (5): ternary code from round 2 onward, vs. global-model history."""
+    q = q.astype(jnp.float32)
+    p1 = p_prev.astype(jnp.float32)
+    p2 = p_prev2.astype(jnp.float32)
+    step = p1 - p2
+    delta = q - p1
+    significant = jnp.abs(delta) >= beta * jnp.abs(step)
+    f = delta * step
+    return jnp.where(significant, jnp.sign(f), 0.0).astype(TERNARY_DTYPE)
+
+
+def ternarize_tree_round1(q: PyTree, p0: PyTree, alpha: float) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda a, b: ternarize_round1(a, b, alpha), q, p0
+    )
+
+
+def ternarize_tree(q: PyTree, p_prev: PyTree, p_prev2: PyTree, beta: float) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda a, b, c: ternarize(a, b, c, beta), q, p_prev, p_prev2
+    )
+
+
+def ternary_density(t: jax.Array) -> jax.Array:
+    """Fraction of non-zero codes — diagnostic for how much signal a worker
+    contributes (all-zero vectors are the paper's §4.2 evasion behaviour)."""
+    return jnp.mean(jnp.abs(t.astype(jnp.float32)))

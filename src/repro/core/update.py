@@ -1,0 +1,81 @@
+"""Master update rule — Eq. (3) of the paper.
+
+Given the pilot's full weights and the other workers' ternary codes, the
+master forms the next global model::
+
+    t == 1:  P^1 = Q_{k*}^1 - alpha_0 * sum_{k != k*} p_k T_k
+    t  > 1:  P^t = Q_{k*}^t - sum_{k != k*} p_k beta_k T_k (P^{t-1} - P^{t-2})
+
+where p_k = S_k / S is each worker's data share. The non-pilot contribution
+nudges every parameter along (or against) the global model's *own previous
+step*, scaled by how much data agrees with that direction.
+
+Array-level reference semantics live here; ``repro.kernels.master_update``
+fuses the t>1 rule (codes stacked over a worker axis) into one Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import PyTree
+
+
+def masked_weights(p_shares: jax.Array, betas: jax.Array, k_star) -> jax.Array:
+    """Per-worker coefficients p_k * beta_k with the pilot masked out."""
+    n = p_shares.shape[0]
+    mask = jnp.arange(n) != k_star
+    return jnp.where(mask, p_shares * betas, 0.0)
+
+
+def master_update_round1(
+    q_pilot: jax.Array,
+    ternaries: jax.Array,   # (N, *shape) int8 — pilot row may be garbage, masked
+    p_shares: jax.Array,    # (N,)
+    k_star,
+    alpha0: float,
+) -> jax.Array:
+    n = p_shares.shape[0]
+    mask = (jnp.arange(n) != k_star).astype(jnp.float32)
+    w = mask * p_shares  # (N,)
+    contrib = jnp.tensordot(w, ternaries.astype(jnp.float32), axes=1)
+    return (q_pilot.astype(jnp.float32) - alpha0 * contrib).astype(q_pilot.dtype)
+
+
+def master_update(
+    q_pilot: jax.Array,
+    ternaries: jax.Array,   # (N, *shape) int8
+    p_shares: jax.Array,    # (N,)
+    betas: jax.Array,       # (N,)
+    k_star,
+    p_prev: jax.Array,
+    p_prev2: jax.Array,
+) -> jax.Array:
+    """Eq. (3), t > 1."""
+    w = masked_weights(p_shares, betas, k_star)              # (N,)
+    coeff = jnp.tensordot(w, ternaries.astype(jnp.float32), axes=1)
+    step = (p_prev - p_prev2).astype(jnp.float32)
+    return (q_pilot.astype(jnp.float32) - coeff * step).astype(q_pilot.dtype)
+
+
+def master_update_tree(
+    q_pilot: PyTree,
+    ternaries: PyTree,      # pytree of (N, *leaf.shape) int8 stacks
+    p_shares: jax.Array,
+    betas: jax.Array,
+    k_star,
+    p_prev: PyTree,
+    p_prev2: PyTree,
+    t,
+    alpha0: float = 0.01,
+) -> PyTree:
+    """Pytree-level Eq. (3) handling both the t==1 and t>1 branches.
+
+    ``t`` may be a traced scalar; both branches are cheap elementwise ops so
+    we evaluate both and select (keeps the function jit-friendly)."""
+    def per_leaf(qp, tern, p1, p2):
+        r1 = master_update_round1(qp, tern, p_shares, k_star, alpha0)
+        rt = master_update(qp, tern, p_shares, betas, k_star, p1, p2)
+        return jnp.where(jnp.asarray(t) <= 1, r1, rt)
+
+    return jax.tree_util.tree_map(per_leaf, q_pilot, ternaries, p_prev, p_prev2)

@@ -1,0 +1,7 @@
+from repro.data.synthetic import (  # noqa: F401
+    SyntheticClassification,
+    SyntheticLM,
+    dirichlet_split,
+    random_share_split,
+)
+from repro.data.pipeline import BatchIterator, federated_loaders  # noqa: F401

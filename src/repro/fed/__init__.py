@@ -1,0 +1,2 @@
+from repro.fed.worker import WorkerConfig, make_worker_configs  # noqa: F401
+from repro.fed.simulator import FedSimulator, SimResult  # noqa: F401

@@ -1,0 +1,227 @@
+"""FedPC on the TPU mesh: fed workers = slices of a mesh axis.
+
+Mapping (DESIGN.md §2): each federated worker owns one index of the fed
+mesh axis ('data' on a single pod → up to 16 workers; 'pod' across pods).
+Within a worker slice the model is tensor-sharded over 'model' (kept as an
+*auto* axis — XLA SPMD handles it; only the fed axis is manual).
+
+The round sync is a ``shard_map`` over the fed axis so the wire format is
+explicit in the HLO:
+
+  fedpc:        all_gather(int8 ternary)           — faithful Eq. (3)-(5)
+  fedpc_packed: all_gather(uint8 2-bit codes)      — beyond-paper: the
+                paper packs for TCP; we pack *before the collective* so ICI
+                moves 4× fewer bytes than int8 (16× fewer than fp32)
+  fedavg:       psum(weighted params)              — baseline all-reduce
+
+Pilot weights travel as a masked psum over the fed axis (the mesh analogue
+of the star-topology upload+broadcast; see EXPERIMENTS.md for the honest
+star-vs-all-reduce byte comparison).
+
+Every shard_map instance runs the *same* master math on public inputs, so
+the update stays consistent without a physical master — the master of the
+paper is replicated control flow here.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.goodness import select_pilot as _select_pilot
+from repro.core.packing import pack2bit, unpack2bit
+from repro.core.ternary import ternarize, ternarize_round1
+from repro.models.model import Model
+from repro.utils import PyTree
+
+from repro.sharding.specs import param_specs
+
+
+# ---------------------------------------------------------------------------
+# Sync strategies (shard_map bodies over the fed axis)
+# ---------------------------------------------------------------------------
+
+def _eq3_leaf(q_local, tern_all, w, k_star, p_prev, p_prev2, t, alpha0,
+              axis: str):
+    """Per-leaf Eq. (3) with fed-axis collectives.
+
+    q_local: (1, *shape) this worker's weights; tern_all: (F, *shape) int8.
+    """
+    idx = jax.lax.axis_index(axis)
+    # pilot upload+broadcast == masked all-reduce over the fed axis
+    q_pilot = jax.lax.psum(
+        jnp.where(idx == k_star, q_local[0].astype(jnp.float32), 0.0),
+        axis)
+    wf = w.astype(jnp.float32)                        # (F,) masked p_k*beta_k
+    coeff = jnp.tensordot(wf, tern_all.astype(jnp.float32), axes=1)
+    step = (p_prev - p_prev2).astype(jnp.float32)
+    r1 = q_pilot - alpha0 * coeff
+    rt = q_pilot - coeff * step
+    return jnp.where(t <= 1, r1, rt).astype(q_local.dtype)
+
+
+def _ternary_leaf(q_local, p_prev, p_prev2, t, beta, alpha1):
+    t1 = ternarize_round1(q_local[0], p_prev, alpha1)
+    tt = ternarize(q_local[0], p_prev, p_prev2, beta)
+    return jnp.where(t <= 1, t1, tt)
+
+
+def _sync_fedpc_body(q_leaf, p_prev_leaf, p_prev2_leaf, *, k_star, w, t,
+                     alpha0, beta, alpha1, axis, mode):
+    tern = _ternary_leaf(q_leaf, p_prev_leaf, p_prev2_leaf, t, beta, alpha1)
+    if mode == "reduce":
+        # Beyond-paper: Eq. (3) needs only Σ_k w_k T_k — reduce in-network
+        # instead of gathering N ternary vectors. On an all-reduce fabric
+        # this caps the sync at one bf16 all-reduce regardless of N (the
+        # gather grows linearly with N); every instance ends with the same
+        # sum so the replicated-master math is unchanged.
+        idx = jax.lax.axis_index(axis)
+        w_me = jnp.take(w, idx).astype(jnp.float32)
+        # f16 on the wire (bf16 triggers an XLA-CPU AllReducePromotion
+        # crash in this container; on TPU use bf16 — same byte count)
+        contrib = (w_me * tern.astype(jnp.float32)).astype(jnp.float16)
+        coeff = jax.lax.psum(contrib, axis).astype(jnp.float32)
+        step = (p_prev_leaf - p_prev2_leaf).astype(jnp.float32)
+        q_pilot = jax.lax.psum(
+            jnp.where(idx == k_star, q_leaf[0].astype(jnp.float32), 0.0),
+            axis)
+        r1 = q_pilot - alpha0 * coeff
+        rt = q_pilot - coeff * step
+        return jnp.where(t <= 1, r1, rt).astype(q_leaf.dtype)
+    if mode == "packed":
+        flat = tern.reshape(-1)
+        pk = pack2bit(flat)                               # uint8 on the wire
+        pk_all = jax.lax.all_gather(pk, axis)             # (F, bytes)
+        tern_all = jax.vmap(lambda b: unpack2bit(b, flat.shape[0]))(pk_all)
+        tern_all = tern_all.reshape((-1,) + tern.shape)
+    else:
+        tern_all = jax.lax.all_gather(tern, axis)         # (F, *shape) int8
+    return _eq3_leaf(q_leaf, tern_all, w, k_star, p_prev_leaf, p_prev2_leaf,
+                     t, alpha0, axis)
+
+
+def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
+                   strategy: str = "fedpc", alpha0: float = 0.01,
+                   beta: float = 0.2, alpha1: float = 0.01) -> Callable:
+    """Returns sync(params_F, state) -> (new_global_params, aux).
+
+    params_F leaves are stacked (F, ...) over the fed axis; state carries
+    the public history (params, params_prev — replicated) plus per-round
+    costs (F,) and the 1-based round index.
+    """
+    F = mesh.shape[fed_axis]
+
+    def sync(params_F: PyTree, costs: jax.Array, sizes: jax.Array,
+             state: dict) -> tuple[PyTree, dict]:
+        t = state["round"]
+        k_star, scores = _select_pilot(costs, state["prev_costs"], sizes, t)
+        p_shares = sizes.astype(jnp.float32) / jnp.sum(sizes)
+
+        if strategy == "fedavg":
+            def avg(x):
+                wb = p_shares.reshape((-1,) + (1,) * (x.ndim - 1))
+                return jnp.sum(x.astype(jnp.float32) * wb, axis=0).astype(x.dtype)
+            new_params = jax.tree_util.tree_map(avg, params_F)
+        else:
+            mask = (jnp.arange(F) != k_star).astype(jnp.float32)
+            w = mask * p_shares * beta
+
+            # fed axis is the stacked leading dim; model axes stay auto.
+            in_q = jax.tree_util.tree_map(lambda _: P(fed_axis), params_F)
+            in_rep = jax.tree_util.tree_map(lambda _: P(), state["params"])
+            out = jax.tree_util.tree_map(lambda _: P(), state["params"])
+
+            body = partial(
+                _sync_fedpc_body, k_star=k_star, w=w, t=t, alpha0=alpha0,
+                beta=beta, alpha1=alpha1, axis=fed_axis,
+                mode={"fedpc_packed": "packed",
+                      "fedpc_reduce": "reduce"}.get(strategy, "gather"))
+
+            def tree_body(q, p1, p2):
+                return jax.tree_util.tree_map(body, q, p1, p2)
+
+            new_params = jax.shard_map(
+                tree_body,
+                mesh=mesh,
+                in_specs=(in_q, in_rep, in_rep),
+                out_specs=out,
+                axis_names=frozenset({fed_axis}),
+                check_vma=False,
+            )(params_F, state["params"], state["params_prev"])
+
+        new_state = {
+            "params": new_params,
+            "params_prev": state["params"],
+            "prev_costs": costs.astype(jnp.float32),
+            "round": t + 1,
+        }
+        aux = {"k_star": k_star, "goodness": scores}
+        return new_params, {"state": new_state, **aux}
+
+    return sync
+
+
+# ---------------------------------------------------------------------------
+# Full federated step: local training (vmap over fed axis) + sync
+# ---------------------------------------------------------------------------
+
+def build_fed_step(model: Model, mesh: Mesh, fed_axis: str = "data",
+                   strategy: str = "fedpc", local_steps: int = 1,
+                   lr: float = 0.01) -> Callable:
+    """fed_step(state, opt_states_F, batch_F, sizes) ->
+       (state', opt_states_F', metrics)
+
+    batch_F: pytree with leaves (F, local_steps, B_local, ...) — each fed
+    worker's private micro-batches for this round. Worker k trains
+    ``local_steps`` steps from the shared global params (its private
+    optimizer state persists), reports its final loss as the round cost.
+    """
+    sync = build_fed_sync(model, mesh, fed_axis, strategy)
+
+    def local_train(params, opt_state, batches):
+        def step(carry, b):
+            p, os = carry
+            p, os, m = model.train_step(p, os, b, lr)
+            return (p, os), m["loss"]
+        (p, os), losses = jax.lax.scan(step, (params, opt_state), batches)
+        return p, os, losses[-1]
+
+    def fed_step(state: dict, opt_states_F: PyTree, batch_F: PyTree,
+                 sizes: jax.Array):
+        params_F, opt_F, costs = jax.vmap(
+            local_train, in_axes=(None, 0, 0))(
+                state["params"], opt_states_F, batch_F)
+        new_params, aux = sync(params_F, costs, sizes, state)
+        metrics = {"cost_mean": jnp.mean(costs), "k_star": aux["k_star"]}
+        return aux["state"], opt_F, metrics
+
+    return fed_step
+
+
+def fed_state_init(params: PyTree, n_fed: int) -> dict:
+    return {
+        "params": params,
+        "params_prev": jax.tree_util.tree_map(jnp.zeros_like, params),
+        "prev_costs": jnp.full((n_fed,), jnp.inf, jnp.float32),
+        "round": jnp.asarray(1, jnp.int32),
+    }
+
+
+def fed_shardings(model: Model, mesh: Mesh, fed_axis: str,
+                  params: PyTree) -> dict:
+    """NamedShardings for the fed-step arguments."""
+    pspecs = param_specs(params, mesh)
+
+    def prepend_fed(spec: P) -> P:
+        return P(fed_axis, *spec)
+
+    stacked = jax.tree_util.tree_map(prepend_fed, pspecs)
+    return {
+        "params": jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), pspecs),
+        "params_F": jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), stacked),
+    }

@@ -1,0 +1,188 @@
+"""Single-process federated simulator — the paper's experimental testbed.
+
+Drives FedPC, FedAvg and Phong et al. over N in-process workers with private
+data shards and private hyper-parameters, with exact Eq. (8) byte accounting
+and the §4.2 information-flow ledger enforced on every round.
+
+This is what the paper-table benchmarks (Tables 2–4, Figs 4/6) run on; the
+TPU-mesh counterpart with the same math as collectives is
+``repro.fed.distributed``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import fedpc as fp
+from repro.core import protocol as proto
+from repro.core.convergence import CostHistory
+from repro.core.packing import pack_tree, unpack_tree
+from repro.core.privacy import LeakageLedger, should_evade
+from repro.core.ternary import ternarize_tree, ternarize_tree_round1
+from repro.fed.worker import Worker
+from repro.utils import PyTree, tree_size
+
+
+@dataclass
+class SimResult:
+    algorithm: str
+    params: PyTree
+    costs: list = field(default_factory=list)          # per-round mean cost
+    pilot_history: list = field(default_factory=list)  # FedPC only
+    bytes_per_round: list = field(default_factory=list)
+    eval_history: list = field(default_factory=list)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(np.sum(self.bytes_per_round))
+
+
+class FedSimulator:
+    def __init__(self, workers: list[Worker], init_params: PyTree,
+                 fed_cfg: Optional[fp.FedPCConfig] = None,
+                 eval_fn: Optional[Callable[[PyTree], float]] = None,
+                 evade_streak: int = 0):
+        self.workers = workers
+        self.init_params = init_params
+        self.n = len(workers)
+        self.fed_cfg = fed_cfg or fp.FedPCConfig(n_workers=self.n)
+        self.sizes = np.array([w.loader.n for w in workers], np.float32)
+        self.eval_fn = eval_fn
+        self.ledger = LeakageLedger()
+        self.evade_streak = evade_streak  # 0 = defence off
+
+    # ------------------------------------------------------------------
+    # FedPC (Algorithms 1 & 2)
+    # ------------------------------------------------------------------
+    def run_fedpc(self, rounds: int, eval_every: int = 0) -> SimResult:
+        cfg = self.fed_cfg
+        state = fp.init_state(self.init_params, self.n)
+        model_bytes = proto.model_size_bytes(self.init_params)
+        n_params = tree_size(self.init_params)
+        res = SimResult("fedpc", state.params)
+        prev_costs_rep = [np.inf] * self.n
+
+        for t in range(1, rounds + 1):
+            # --- workers train locally (parallel in the real system) ---
+            locals_, costs = [], []
+            for w in self.workers:
+                q, c = w.train_round(state.params)
+                locals_.append(q)
+                costs.append(c)
+                self.ledger.record(w.cfg.worker_id, t, "cost", False)
+
+            # --- worker-side evasion defence (§4.2 discussion) ---
+            rep_costs = list(costs)
+            if self.evade_streak:
+                for k in range(self.n):
+                    if (self.ledger.consecutive_pilot_streak(k)
+                            >= self.evade_streak):
+                        rep_costs[k] = prev_costs_rep[k]  # goodness → 0
+
+            costs_arr = jnp.asarray(rep_costs, jnp.float32)
+            from repro.core.goodness import select_pilot
+            k_star, _ = select_pilot(
+                costs_arr, state.prev_costs, jnp.asarray(self.sizes), t)
+            k_star = int(k_star)
+
+            # --- uplinks: pilot sends weights; others send 2-bit codes ---
+            self.ledger.record(k_star, t, "pilot_params", True)
+            ternaries = []
+            for k in range(self.n):
+                if cfg is not None and t == 1:
+                    tern = ternarize_tree_round1(
+                        locals_[k], state.params, cfg.alpha_round1)
+                else:
+                    tern = ternarize_tree(
+                        locals_[k], state.params, state.params_prev, cfg.beta)
+                if k != k_star:
+                    packed, layout = pack_tree(tern)      # the actual wire op
+                    tern = unpack_tree(packed, layout)
+                    self.ledger.record(k, t, "packed_ternary", False)
+                ternaries.append(tern)
+
+            stacked_t = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *ternaries)
+            p_shares = jnp.asarray(self.sizes / self.sizes.sum())
+            betas = jnp.full((self.n,), cfg.beta, jnp.float32)
+            from repro.core.update import master_update_tree
+            new_params = master_update_tree(
+                locals_[k_star], stacked_t, p_shares, betas, k_star,
+                state.params, state.params_prev, t, cfg.alpha0)
+
+            state = fp.FedPCState(
+                params=new_params, params_prev=state.params,
+                prev_costs=costs_arr, round=jnp.asarray(t + 1))
+            prev_costs_rep = rep_costs
+
+            res.costs.append(float(np.average(costs, weights=self.sizes)))
+            res.pilot_history.append(k_star)
+            res.bytes_per_round.append(proto.fedpc_bytes_per_round(
+                model_bytes, self.n))
+            if eval_every and self.eval_fn and t % eval_every == 0:
+                res.eval_history.append((t, self.eval_fn(new_params)))
+        res.params = state.params
+        return res
+
+    # ------------------------------------------------------------------
+    # FedAvg baseline
+    # ------------------------------------------------------------------
+    def run_fedavg(self, rounds: int, eval_every: int = 0) -> SimResult:
+        params = self.init_params
+        model_bytes = proto.model_size_bytes(self.init_params)
+        res = SimResult("fedavg", params)
+        for t in range(1, rounds + 1):
+            locals_, costs = [], []
+            for w in self.workers:
+                q, c = w.train_round(params)
+                locals_.append(q)
+                costs.append(c)
+            params = bl.fedavg_aggregate(locals_, self.sizes)
+            res.costs.append(float(np.average(costs, weights=self.sizes)))
+            res.bytes_per_round.append(proto.fedavg_bytes_per_round(
+                model_bytes, self.n))
+            if eval_every and self.eval_fn and t % eval_every == 0:
+                res.eval_history.append((t, self.eval_fn(params)))
+        res.params = params
+        return res
+
+    # ------------------------------------------------------------------
+    # Phong et al. baseline (sequential weight transmission)
+    # ------------------------------------------------------------------
+    def run_phong(self, rounds: int, eval_every: int = 0) -> SimResult:
+        params = self.init_params
+        model_bytes = proto.model_size_bytes(self.init_params)
+        res = SimResult("phong", params)
+        for t in range(1, rounds + 1):
+            costs = []
+            for w in self.workers:          # model travels worker→worker
+                params, c = w.train_round(params)
+                costs.append(c)
+            res.costs.append(float(np.mean(costs)))
+            res.bytes_per_round.append(proto.phong_bytes_per_round(
+                model_bytes, self.n))
+            if eval_every and self.eval_fn and t % eval_every == 0:
+                res.eval_history.append((t, self.eval_fn(params)))
+        res.params = params
+        return res
+
+    # ------------------------------------------------------------------
+    # Centralized upper bound (Table 1)
+    # ------------------------------------------------------------------
+    def run_centralized(self, rounds: int, central_worker: Worker,
+                        eval_every: int = 0) -> SimResult:
+        params = self.init_params
+        res = SimResult("centralized", params)
+        for t in range(1, rounds + 1):
+            params, c = central_worker.train_round(params)
+            res.costs.append(c)
+            res.bytes_per_round.append(0.0)
+            if eval_every and self.eval_fn and t % eval_every == 0:
+                res.eval_history.append((t, self.eval_fn(params)))
+        res.params = params
+        return res

@@ -1,0 +1,104 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Handles: flat (or pytree) → padded (rows, 128) layout, interpret-mode
+selection (Python execution on CPU, compiled on TPU), and un-padding.
+These are drop-in replacements for the core/* reference functions and are
+what the distributed sync uses when ``use_kernels=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import pack2bit as pk
+from repro.kernels import master_update as mu
+from repro.kernels import ternary_encode as te
+from repro.utils import round_up
+
+LANES = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _to_2d(x: jax.Array, row_multiple: int, lane_multiple: int = LANES):
+    """Flatten + zero-pad to (rows, lane_multiple), rows % row_multiple == 0."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    per_row = lane_multiple
+    rows = round_up(max(-(-n // per_row), 1), row_multiple)
+    padded = rows * per_row
+    flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(rows, per_row), n
+
+
+def _block_rows_for(rows: int, want: int) -> int:
+    b = min(want, rows)
+    while rows % b:
+        b -= 1
+    return max(b, 1)
+
+
+def ternary_encode(q, p1, p2, beta: float, interpret: bool | None = None):
+    """Eq. (5) over an arbitrary-shape array; returns int8 of q.shape."""
+    interpret = _default_interpret() if interpret is None else interpret
+    q2, n = _to_2d(q, 8)
+    p12, _ = _to_2d(p1, 8)
+    p22, _ = _to_2d(p2, 8)
+    br = _block_rows_for(q2.shape[0], te.BLOCK_ROWS)
+    out = te.ternary_encode_2d(q2, p12, p22, beta, interpret=interpret,
+                               block_rows=br)
+    return out.reshape(-1)[:n].reshape(q.shape)
+
+
+def ternary_encode_round1(q, p0, alpha: float, interpret: bool | None = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    q2, n = _to_2d(q, 8)
+    p02, _ = _to_2d(p0, 8)
+    br = _block_rows_for(q2.shape[0], te.BLOCK_ROWS)
+    out = te.ternary_encode_round1_2d(q2, p02, alpha, interpret=interpret,
+                                      block_rows=br)
+    return out.reshape(-1)[:n].reshape(q.shape)
+
+
+def pack2bit(t, interpret: bool | None = None):
+    """int8 codes any shape → uint8 (ceil(n/4),) flat packed buffer."""
+    interpret = _default_interpret() if interpret is None else interpret
+    t2, n = _to_2d(t, 8, LANES * pk.PACK)
+    br = _block_rows_for(t2.shape[0], pk.BLOCK_ROWS)
+    out = pk.pack2bit_2d(t2, interpret=interpret, block_rows=br)
+    n_bytes = -(-n // pk.PACK)
+    return out.reshape(-1)[:n_bytes]
+
+
+def unpack2bit(b, n: int, interpret: bool | None = None):
+    """uint8 packed buffer → int8 (n,) codes."""
+    interpret = _default_interpret() if interpret is None else interpret
+    b2, nb = _to_2d(b, 8, LANES)
+    br = _block_rows_for(b2.shape[0], pk.BLOCK_ROWS)
+    out = pk.unpack2bit_2d(b2, interpret=interpret, block_rows=br)
+    return out.reshape(-1)[:n]
+
+
+def master_update(q_pilot, tern_stacked, w, p1, p2,
+                  interpret: bool | None = None):
+    """Fused Eq. (3), t>1. tern_stacked (N, *shape) int8; w (N,) masked.
+
+    Returns array of q_pilot.shape/dtype.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    n_workers = tern_stacked.shape[0]
+    q2, n = _to_2d(q_pilot, 8)
+    p12, _ = _to_2d(p1, 8)
+    p22, _ = _to_2d(p2, 8)
+    rows = q2.shape[0]
+    t2 = jnp.stack([_to_2d(tern_stacked[k], 8)[0]
+                    for k in range(n_workers)])
+    br = _block_rows_for(rows, mu.BLOCK_ROWS)
+    out = mu.master_update_2d(q2, t2, w.astype(jnp.float32), p12, p22,
+                              interpret=interpret, block_rows=br)
+    return out.reshape(-1)[:n].reshape(q_pilot.shape)

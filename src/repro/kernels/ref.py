@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+These share semantics with repro.core.{ternary,packing,update} but operate
+on the flat, padded layouts the kernels use, so tests compare exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ternary_encode_ref(q: jax.Array, p1: jax.Array, p2: jax.Array,
+                       beta: float) -> jax.Array:
+    """Eq. (5) on flat fp32 arrays → int8 codes."""
+    qf, p1f, p2f = (t.astype(jnp.float32) for t in (q, p1, p2))
+    step = p1f - p2f
+    delta = qf - p1f
+    significant = jnp.abs(delta) >= beta * jnp.abs(step)
+    return jnp.where(significant, jnp.sign(delta * step), 0.0).astype(jnp.int8)
+
+
+def ternary_encode_round1_ref(q: jax.Array, p0: jax.Array,
+                              alpha: float) -> jax.Array:
+    """Eq. (4)."""
+    d = (q - p0).astype(jnp.float32)
+    return ((d > alpha).astype(jnp.int8) - (d < -alpha).astype(jnp.int8))
+
+
+def pack2bit_ref(t: jax.Array) -> jax.Array:
+    """int8 codes (..., 4k) → uint8 (..., k); biased 2-bit fields, LE."""
+    codes = (t.astype(jnp.int32) + 1).astype(jnp.uint8)
+    g = codes.reshape(t.shape[:-1] + (t.shape[-1] // 4, 4))
+    shifts = jnp.array([0, 2, 4, 6], jnp.uint8)
+    return jnp.sum(g << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack2bit_ref(b: jax.Array) -> jax.Array:
+    """uint8 (..., k) → int8 codes (..., 4k)."""
+    shifts = jnp.array([0, 2, 4, 6], jnp.uint8)
+    fields = (b[..., None] >> shifts) & jnp.uint8(0x3)
+    return (fields.astype(jnp.int8) - 1).reshape(b.shape[:-1] + (-1,))
+
+
+def master_update_ref(q_pilot: jax.Array, tern: jax.Array, w: jax.Array,
+                      p1: jax.Array, p2: jax.Array) -> jax.Array:
+    """Eq. (3) t>1 on flat arrays. tern (N, M) int8, w (N,) already masked
+    p_k * beta_k (pilot row zeroed)."""
+    coeff = jnp.einsum("n,nm->m", w.astype(jnp.float32),
+                       tern.astype(jnp.float32))
+    step = (p1 - p2).astype(jnp.float32)
+    return (q_pilot.astype(jnp.float32) - coeff * step).astype(q_pilot.dtype)

@@ -1,0 +1,239 @@
+"""Compiled-artifact analysis: collective bytes, roofline terms, MODEL_FLOPS.
+
+Sources (§ROOFLINE of the brief):
+  * ``compiled.cost_analysis()``  → HLO FLOPs / bytes accessed (per device —
+    the compiled module is the SPMD-partitioned per-device program);
+  * ``compiled.as_text()``        → post-partitioning HLO; we parse every
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute and sum operand sizes;
+  * analytic 6·N·D model FLOPs for the useful-compute ratio.
+
+Collective byte model (per participating device, ring algorithms):
+  all-reduce      2·(g-1)/g · result_bytes
+  all-gather      (g-1)/g   · result_bytes      (result = gathered)
+  reduce-scatter  (g-1)/g   · operand_bytes
+  all-to-all      (g-1)/g   · result_bytes
+  collective-permute  result_bytes
+where g = replica-group size parsed from the op.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[16,1024,128]{...} all-gather(
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_ALT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_TUPLE_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    bytes_by_kind: dict = field(default_factory=dict)
+    total_device_bytes: float = 0.0
+    ops: list = field(default_factory=list)
+
+    def add(self, kind: str, result_bytes: int, group: int):
+        g = max(group, 2)
+        if kind == "all-reduce":
+            moved = 2.0 * (g - 1) / g * result_bytes
+        elif kind in ("all-gather", "all-to-all"):
+            moved = (g - 1) / g * result_bytes
+        elif kind == "reduce-scatter":
+            moved = (g - 1) / g * result_bytes * g  # operand = result * g
+        else:  # collective-permute
+            moved = float(result_bytes)
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+        self.bytes_by_kind[kind] = self.bytes_by_kind.get(kind, 0.0) + moved
+        self.total_device_bytes += moved
+        self.ops.append((kind, result_bytes, g, moved))
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_part, dtype, dims, kind = m.groups()
+        if tuple_part is not None:
+            result_bytes = sum(
+                _shape_bytes(dt, dm)
+                for dt, dm in _TUPLE_SHAPE_RE.findall(tuple_part))
+        else:
+            result_bytes = _shape_bytes(dtype, dims)
+        g = 2
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len([x for x in gm.group(1).split(",") if x.strip() != ""])
+        else:
+            gm2 = _GROUPS_ALT_RE.search(line)
+            if gm2:
+                g = int(gm2.group(2))
+        stats.add(kind, result_bytes, g)
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (6·N·D dense / 6·N_active·D MoE)
+# ---------------------------------------------------------------------------
+
+def active_params(cfg: ArchConfig) -> tuple[int, int]:
+    """(total_params, active_params_per_token) for the backbone."""
+    D, dh = cfg.d_model, cfg.resolved_head_dim
+    total = cfg.vocab * D * (1 if cfg.tie_embeddings else 2)
+    act = total
+
+    def attn_p():
+        return D * (cfg.n_heads * dh) * 2 + D * (cfg.n_kv_heads * dh) * 2
+
+    def mlp_p(dff):
+        mult = 3 if cfg.ffn_act == "swiglu" else 2
+        return mult * D * dff
+
+    def mamba_p():
+        di, ds, dtr = cfg.d_inner, cfg.d_state, cfg.resolved_dt_rank
+        return (D * 2 * di + di * (dtr + 2 * ds) + dtr * di + di * ds
+                + di * D)
+
+    def mlstm_p():
+        di = int(cfg.lstm_proj_factor * D)
+        di = (di // cfg.n_heads) * cfg.n_heads
+        return D * 2 * di + 3 * di * di + di * 2 * cfg.n_heads + di * D
+
+    def slstm_p():
+        return D * 4 * D + D * 4 * D + D * D
+
+    for mixer, f in cfg.pattern * cfg.n_units:
+        pass
+    per_unit_total = per_unit_active = 0
+    for mixer, f in cfg.pattern:
+        if mixer in ("attn", "swa"):
+            m = attn_p()
+        elif mixer == "mamba":
+            m = mamba_p()
+        elif mixer == "mlstm":
+            m = mlstm_p()
+        else:
+            m = slstm_p()
+        per_unit_total += m
+        per_unit_active += m
+        if f == "mlp":
+            per_unit_total += mlp_p(cfg.d_ff)
+            per_unit_active += mlp_p(cfg.d_ff)
+        elif f == "moe":
+            routed = cfg.n_experts * mlp_p(cfg.d_expert_ff) * 0 \
+                + cfg.n_experts * 3 * D * cfg.d_expert_ff
+            shared = (3 * D * cfg.n_shared_experts * cfg.d_expert_ff
+                      if cfg.n_shared_experts else 0)
+            per_unit_total += routed + shared + D * cfg.n_experts
+            per_unit_active += (cfg.top_k * 3 * D * cfg.d_expert_ff
+                                + shared + D * cfg.n_experts)
+    total += per_unit_total * cfg.n_units
+    act += per_unit_active * cfg.n_units
+    if cfg.first_k_dense:
+        dense = attn_p() + mlp_p(cfg.d_ff_dense or cfg.d_ff)
+        total += dense * cfg.first_k_dense
+        act += dense * cfg.first_k_dense
+    if cfg.is_encdec:
+        enc = (attn_p() + mlp_p(cfg.d_ff)) * cfg.n_encoder_layers
+        cross = attn_p() * cfg.n_layers
+        total += enc + cross + D * D
+        act += enc + cross + D * D
+    return int(total), int(act)
+
+
+def model_flops(cfg: ArchConfig, n_tokens: int, kind: str) -> float:
+    """6·N_active·D for train, 2·N_active·D for forward-only kinds."""
+    _, act = active_params(cfg)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * act * n_tokens
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_device: float
+    bytes_device: float
+    collective_bytes_device: float
+    model_flops_total: float
+    useful_ratio: float
+    dominant: str
+
+    def to_dict(self):
+        return {k: getattr(self, k) for k in (
+            "compute_s", "memory_s", "collective_s", "flops_device",
+            "bytes_device", "collective_bytes_device", "model_flops_total",
+            "useful_ratio", "dominant")}
+
+
+def roofline_from_stats(stats, n_chips: int, cfg: ArchConfig,
+                        n_tokens: int, kind: str) -> Roofline:
+    """Roofline terms from loop-aware HLO stats (launch/hlo_stats.py).
+
+    stats.flops/bytes are per-device (the compiled module is the SPMD
+    per-device program); MODEL_FLOPS is the global 6·N_active·D and the
+    useful ratio divides by chips."""
+    flops_dev = float(stats.flops)
+    bytes_dev = float(stats.bytes)
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    coll_s = stats.collective_device_bytes / ICI_BW
+    mf = model_flops(cfg, n_tokens, kind)
+    useful = mf / (flops_dev * n_chips) if flops_dev else float("nan")
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    return Roofline(compute_s, memory_s, coll_s, flops_dev, bytes_dev,
+                    stats.collective_device_bytes, mf, useful, dominant)
+
+
+def roofline(cost: dict, coll: CollectiveStats, n_chips: int,
+             cfg: ArchConfig, n_tokens: int, kind: str) -> Roofline:
+    flops_dev = float(cost.get("flops", 0.0) or 0.0)
+    bytes_dev = float(cost.get("bytes accessed", 0.0) or 0.0)
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll.total_device_bytes / ICI_BW
+    mf = model_flops(cfg, n_tokens, kind)
+    useful = mf / (flops_dev * n_chips) if flops_dev else float("nan")
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    return Roofline(compute_s, memory_s, coll_s, flops_dev, bytes_dev,
+                    coll.total_device_bytes, mf, useful, dominant)

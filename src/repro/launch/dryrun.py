@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes and extract the roofline inputs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod, all combos
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+Results are appended to benchmarks/results/dryrun.json (one record per
+combo) for benchmarks/roofline.py and EXPERIMENTS.md.
+
+NOTE: the XLA_FLAGS line above must execute before ANY jax import — jax
+locks the device count at first init. Do not set this flag globally:
+smoke tests and benches should see 1 device.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax  # noqa: E402  (must come after the XLA_FLAGS line)
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch import analysis as an
+from repro.launch import hlo_stats
+from repro.launch.mesh import chips, make_production_mesh
+from repro.launch.specs import SHAPES, input_specs, shape_supported
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results")
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            save_hlo: bool = False, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    ok, why = shape_supported(cfg, shape_name)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "skipped", "reason": why,
+    }
+    if not ok:
+        if verbose:
+            print(f"[dryrun] SKIP {arch} × {shape_name}: {why}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = chips(mesh)
+    t0 = time.time()
+    try:
+        spec = input_specs(cfg, shape_name, mesh)
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(spec.fn).lower(*spec.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        stats = hlo_stats.analyze(hlo)        # loop-aware FLOPs/bytes/colls
+        info = SHAPES[shape_name]
+        n_tokens = info["batch"] * (info["seq"] if info["kind"] != "decode"
+                                    else 1)
+        rl = an.roofline_from_stats(stats, n_chips, cfg, n_tokens,
+                                    info["kind"])
+
+        mem_rec = {}
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_rec[k] = int(v)
+
+        rec.update({
+            "status": "ok",
+            "chips": n_chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": mem_rec,
+            "cost_raw": {k: float(v) for k, v in cost.items()
+                         if isinstance(v, (int, float))
+                         and k in ("flops", "bytes accessed",
+                                   "transcendentals")},
+            "collectives": {
+                "counts": stats.collective_counts,
+                "bytes_by_kind": {k: float(v) for k, v in
+                                  stats.collective_bytes_by_kind.items()},
+                "device_bytes": float(stats.collective_device_bytes),
+            },
+            "loop_trip_counts": stats.loop_trip_counts,
+            "roofline": rl.to_dict(),
+        })
+        if save_hlo:
+            os.makedirs(RESULTS, exist_ok=True)
+            with open(os.path.join(
+                    RESULTS, f"hlo_{arch}_{shape_name}_{rec['mesh']}.txt"),
+                    "w") as f:
+                f.write(hlo)
+        if verbose:
+            dom = rl.dominant
+            print(f"[dryrun] OK   {arch} × {shape_name} × {rec['mesh']} "
+                  f"(lower {t_lower:.1f}s, compile {t_compile:.1f}s) "
+                  f"compute {rl.compute_s*1e3:.2f}ms | "
+                  f"memory {rl.memory_s*1e3:.2f}ms | "
+                  f"collective {rl.collective_s*1e3:.2f}ms → {dom}-bound")
+    except Exception as e:  # a failure here is a bug in the system
+        rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+        if verbose:
+            print(f"[dryrun] FAIL {arch} × {shape_name}: "
+                  f"{type(e).__name__}: {str(e)[:400]}")
+    return rec
+
+
+def run_fed(arch: str, strategy: str, multi_pod: bool = False,
+            local_steps: int = 1, local_batch: int = 16, seq: int = 4096,
+            save_hlo: bool = False, verbose: bool = True) -> dict:
+    """Dry-run one federated round step (local train × sync strategy).
+
+    Fed workers = the 'data'/'pod'-axis slices; this measures the paper's
+    protocol as mesh collectives: fedavg (fp weights) vs fedpc (int8
+    ternary) vs fedpc_packed (2-bit codes) — the Fig. 6 comparison in HLO
+    bytes.
+    """
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.fed.distributed import build_fed_step, fed_state_init
+    from repro.models.model import build_model
+    from repro.optim.optimizers import momentum
+    from repro.sharding.specs import param_specs
+
+    cfg = get_config(arch).replace(param_dtype="bfloat16")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fed_axis = "pod" if multi_pod else "data"
+    F = mesh.shape[fed_axis]
+    rec = {
+        "arch": arch, "shape": f"fed_{strategy}",
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok", "fed_workers": F,
+    }
+    t0 = time.time()
+    from repro.sharding import activations as _act
+    try:
+        _act.set_disabled(True)
+        model = build_model(cfg, optimizer=momentum(accum_dtype=jnp.bfloat16))
+        fed_step = build_fed_step(model, mesh, fed_axis, strategy, lr=0.01)
+
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        raw_specs = param_specs(params_shape, mesh)
+
+        def _drop(spec):
+            # the fed axis is consumed by the worker dimension; within a
+            # slice the model is sharded over 'model' only
+            def drop_ax(s):
+                if s == fed_axis:
+                    return None
+                if isinstance(s, tuple):
+                    kept = tuple(a for a in s if a != fed_axis)
+                    return kept if len(kept) > 1 else (kept[0] if kept
+                                                       else None)
+                return s
+            return P(*[drop_ax(s) for s in spec])
+
+        pspecs = jax.tree_util.tree_map(
+            _drop, raw_specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+        def sds(leaf, spec, lead=()):
+            return jax.ShapeDtypeStruct(
+                tuple(lead) + leaf.shape, leaf.dtype,
+                sharding=NamedSharding(mesh, P(*( (fed_axis,) if lead else ())
+                                               , *spec)))
+
+        params = jax.tree_util.tree_map(
+            lambda l, s: sds(l, s), params_shape, pspecs)
+        params_F = jax.tree_util.tree_map(
+            lambda l, s: sds(l, s, lead=(F,)), params_shape, pspecs)
+        opt_shape = jax.eval_shape(model.optimizer.init, params_shape)
+        opt_specs = jax.tree_util.tree_map(
+            _drop, param_specs(opt_shape, mesh),
+            is_leaf=lambda x: isinstance(x, P))
+        opt_F = jax.tree_util.tree_map(
+            lambda l, s: jax.ShapeDtypeStruct(
+                (F,) + l.shape, l.dtype,
+                sharding=NamedSharding(mesh, P(fed_axis, *s))),
+            opt_shape, opt_specs)
+        state = {
+            "params": params,
+            "params_prev": params,
+            "prev_costs": jax.ShapeDtypeStruct((F,), jnp.float32),
+            "round": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        batch_F = {"tokens": jax.ShapeDtypeStruct(
+            (F, local_steps, local_batch, seq), jnp.int32,
+            sharding=NamedSharding(mesh, P(fed_axis, None, None, None)))}
+        sizes = jax.ShapeDtypeStruct((F,), jnp.float32)
+
+        with jax.set_mesh(mesh):
+            lowered = jax.jit(fed_step).lower(state, opt_F, batch_F, sizes)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        hlo = compiled.as_text()
+        stats = hlo_stats.analyze(hlo)
+        n_tokens = F * local_steps * local_batch * seq
+        rl = an.roofline_from_stats(stats, chips(mesh), cfg, n_tokens,
+                                    "train")
+        mem = compiled.memory_analysis()
+        rec.update({
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "collectives": {
+                "counts": stats.collective_counts,
+                "bytes_by_kind": {k: float(v) for k, v in
+                                  stats.collective_bytes_by_kind.items()},
+                "device_bytes": float(stats.collective_device_bytes),
+            },
+            "memory": {"temp_size_in_bytes":
+                       int(getattr(mem, "temp_size_in_bytes", 0) or 0)},
+            "roofline": rl.to_dict(),
+        })
+        if save_hlo:
+            os.makedirs(RESULTS, exist_ok=True)
+            with open(os.path.join(
+                    RESULTS,
+                    f"hlo_fed_{arch}_{strategy}_{rec['mesh']}.txt"), "w") as f:
+                f.write(hlo)
+        if verbose:
+            print(f"[dryrun] OK   fed/{strategy} {arch} × {rec['mesh']} "
+                  f"(compile {t_compile:.1f}s) "
+                  f"collective {rl.collective_s*1e3:.2f}ms "
+                  f"({stats.collective_device_bytes/1e9:.2f} GB/device)")
+    except Exception as e:
+        rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]})
+        if verbose:
+            print(f"[dryrun] FAIL fed/{strategy} {arch}: "
+                  f"{type(e).__name__}: {str(e)[:300]}")
+    finally:
+        _act.set_disabled(False)
+    return rec
+
+
+def append_result(rec: dict, path: str | None = None):
+    path = path or os.path.join(RESULTS, "dryrun.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    records = []
+    if os.path.exists(path):
+        with open(path) as f:
+            records = json.load(f)
+    # replace any prior record for the same combo
+    records = [r for r in records
+               if (r["arch"], r["shape"], r["mesh"])
+               != (rec["arch"], rec["shape"], rec["mesh"])]
+    records.append(rec)
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ASSIGNED),
+                    help="architecture id (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES),
+                    help="input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2×16×16 two-pod mesh")
+    ap.add_argument("--all", action="store_true", help="run every combo")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--fed", default=None,
+                    choices=["fedpc", "fedpc_packed", "fedpc_reduce", "fedavg"],
+                    help="dry-run one federated round step instead of the "
+                         "plain train/serve step")
+    args = ap.parse_args()
+
+    if args.fed:
+        rec = run_fed(args.arch or "mistral-nemo-12b", args.fed,
+                      multi_pod=args.multi_pod, save_hlo=args.save_hlo)
+        append_result(rec, args.out)
+        raise SystemExit(1 if rec["status"] == "fail" else 0)
+
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            rec = run_one(arch, shape, multi_pod=args.multi_pod,
+                          save_hlo=args.save_hlo)
+            append_result(rec, args.out)
+            n_ok += rec["status"] == "ok"
+            n_fail += rec["status"] == "fail"
+            n_skip += rec["status"] == "skipped"
+    print(f"[dryrun] done: {n_ok} ok, {n_fail} fail, {n_skip} skipped")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

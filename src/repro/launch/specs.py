@@ -1,0 +1,145 @@
+"""Abstract input specs per (architecture × input shape) for the dry-run.
+
+``input_specs`` returns ShapeDtypeStructs with NamedShardings attached —
+weak-type-correct, shardable, zero allocation. ``build_step`` returns the
+function to ``jit(...).lower(...)`` for each shape kind.
+
+Input shapes (assigned):
+  train_4k     seq 4096,   global_batch 256   (training)      -> train_step
+  prefill_32k  seq 32768,  global_batch 32    (prefill)       -> prefill
+  decode_32k   seq 32768 cache, global_batch 128 (decode)     -> decode_step
+  long_500k    seq 524288 cache, global_batch 1  (long decode)-> decode_step
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model, build_model
+from repro.optim.optimizers import momentum
+from repro.sharding.specs import batch_spec, cache_specs, data_axes, param_specs
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def shape_supported(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    info = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_decode:
+        return False, ("full-attention architecture: 500k decode cache is "
+                       "quadratic-history; skipped per DESIGN.md §4")
+    if info["kind"] == "decode" and not cfg.supports_decode:
+        return False, "encoder-only architecture has no decode step"
+    return True, ""
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _tree_sds(tree, mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: _sds(leaf.shape, leaf.dtype, mesh, spec),
+        tree, spec_tree)
+
+
+@dataclass
+class StepSpec:
+    fn: Callable          # to jit
+    args: tuple           # ShapeDtypeStructs
+    out_shardings: Any    # or None
+    meta: dict
+
+
+def _extra_batch(cfg: ArchConfig, mesh: Mesh, batch: int, seq: int,
+                 dtype) -> dict:
+    """Modality-stub inputs (brief carve-out): precomputed embeddings."""
+    extras = {}
+    dp = data_spec = batch_spec(mesh, batch, extra_dims=2)
+    if cfg.arch_type == "vlm":
+        n_p = min(cfg.n_patches, seq)
+        extras["vision_embed"] = _sds((batch, n_p, cfg.d_model), dtype,
+                                      mesh, data_spec)
+        extras["positions"] = _sds((3, batch, seq), jnp.int32, mesh,
+                                   P(None, *batch_spec(mesh, batch, 1)))
+    if cfg.is_encdec:
+        extras["audio_embed"] = _sds((batch, cfg.n_frames, cfg.d_model),
+                                     dtype, mesh, data_spec)
+    return extras
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, mesh: Mesh,
+                model: Model | None = None) -> StepSpec:
+    """Build the (function, abstract-args) pair for one dry-run combo."""
+    info = SHAPES[shape_name]
+    seq, batch = info["seq"], info["batch"]
+    cfg = cfg.replace(param_dtype="bfloat16")
+    model = model or build_model(cfg, optimizer=momentum(accum_dtype=jnp.bfloat16))
+    dtype = jnp.bfloat16
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = param_specs(params_shape, mesh)
+    params = _tree_sds(params_shape, mesh, pspecs)
+
+    tok_spec = batch_spec(mesh, batch, extra_dims=1)
+
+    if info["kind"] == "train":
+        opt_shape = jax.eval_shape(model.optimizer.init, params_shape)
+        opt_specs = param_specs(opt_shape, mesh)
+        opt_state = _tree_sds(opt_shape, mesh, opt_specs)
+        batch_tree = {
+            "tokens": _sds((batch, seq), jnp.int32, mesh, tok_spec),
+            **_extra_batch(cfg, mesh, batch, seq, dtype),
+        }
+        lr = jax.ShapeDtypeStruct((), jnp.float32)
+        return StepSpec(
+            fn=model.train_step,
+            args=(params, opt_state, batch_tree, lr),
+            out_shardings=None,
+            meta=dict(cfg=cfg, kind="train", seq=seq, batch=batch),
+        )
+
+    if info["kind"] == "prefill":
+        state_shape = jax.eval_shape(lambda: model.init_decode_state(batch, seq))
+        sspecs = cache_specs(state_shape, mesh, batch)
+        state = _tree_sds(state_shape, mesh, sspecs)
+        batch_tree = {
+            "tokens": _sds((batch, seq), jnp.int32, mesh, tok_spec),
+            **_extra_batch(cfg, mesh, batch, seq, dtype),
+        }
+        return StepSpec(
+            fn=model.prefill,
+            args=(params, batch_tree, state),
+            out_shardings=None,
+            meta=dict(cfg=cfg, kind="prefill", seq=seq, batch=batch),
+        )
+
+    # decode: one new token against a seq-length cache
+    state_shape = jax.eval_shape(lambda: model.init_decode_state(batch, seq))
+    sspecs = cache_specs(state_shape, mesh, batch)
+    state = _tree_sds(state_shape, mesh, sspecs)
+    step_batch = {
+        "token": _sds((batch, 1), jnp.int32, mesh,
+                      batch_spec(mesh, batch, 1)),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if cfg.mrope:
+        step_batch["positions"] = _sds(
+            (3, batch, 1), jnp.int32, mesh,
+            P(None, *batch_spec(mesh, batch, 1)))
+    return StepSpec(
+        fn=model.decode_step,
+        args=(params, state, step_batch),
+        out_shardings=None,
+        meta=dict(cfg=cfg, kind="decode", seq=seq, batch=batch),
+    )

@@ -1,0 +1,331 @@
+"""Attention: GQA, optional qk-norm, sliding window, KV caches, cross-attn.
+
+Three entry points:
+  * ``attn_train``   — full-sequence causal (or bidirectional) attention;
+  * ``attn_decode``  — one-token step against a (possibly ring) KV cache;
+  * ``cross_attn``   — decoder→encoder attention with precomputed K/V.
+
+Caches are plain dicts of arrays so they shard/scan cleanly:
+  self-attn cache: {'k': (B, S_cache, Hk, dh), 'v': ..., 'pos': (B,) int32}
+For sliding-window archs S_cache == window and writes wrap (ring buffer);
+RoPE is applied to keys at insert time so ring eviction is safe.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm
+from repro.sharding import activations as act
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg: ArchConfig, key, cross: bool = False) -> dict:
+    dh = cfg.resolved_head_dim
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    from repro.models.layers import dtype_of
+    dt = dtype_of(cfg.param_dtype)
+    p = {
+        "wq": dense_init(ks[0], D, cfg.n_heads * dh, dt),
+        "wk": dense_init(ks[1], D, cfg.n_kv_heads * dh, dt),
+        "wv": dense_init(ks[2], D, cfg.n_kv_heads * dh, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * dh, D, dt),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((dh,), dt)
+        p["k_norm"] = jnp.ones((dh,), dt)
+    return p
+
+
+def _split_heads(x, n, dh):
+    return x.reshape(x.shape[:-1] + (n, dh))
+
+
+def _repeat_kv(k, n_heads):
+    """(B, S, Hk, dh) -> (B, S, H, dh) by group repetition."""
+    hk = k.shape[2]
+    if hk == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // hk, axis=2)
+
+
+def _qkv(p, cfg: ArchConfig, x, cos, sin):
+    dh = cfg.resolved_head_dim
+    q = _split_heads(x @ p["wq"], cfg.n_heads, dh)
+    k = _split_heads(x @ p["wk"], cfg.n_kv_heads, dh)
+    v = _split_heads(x @ p["wv"], cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return act.heads(q), act.heads(k), act.heads(v)
+
+
+def _sdpa(q, k, v, mask, dh):
+    """GQA attention. q (B,Sq,H,dh); k/v (B,Sk,Hk,dh) UN-repeated.
+
+    Sharding-aware path choice (§Perf):
+      * Hk divides 'model' → grouped (Hk,G) einsum: K/V read once, heads
+        sharded (deepseek, whisper).
+      * only H divides 'model' → repeat K/V to H heads *after which the
+        head dim shards cleanly*; without this, a head-sharded Q meets a
+        sequence-sharded K and the partitioner falls into "involuntary full
+        rematerialization" (measured: replicated 96-head Q projections on
+        mistral-large prefill_32k).
+      * neither divides → grouped einsum; the act.heads fallback
+        sequence-shards Q and K consistently (qwen3, phi4, qwen2-vl).
+    Matmuls take bf16 operands with fp32 accumulation — MXU-native, no f32
+    cache copies. mask: (B|1, 1, Sq, Sk) bool keep.
+    """
+    b, sq, h, _ = q.shape
+    hk = k.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    msize = act.model_size()
+    if msize > 1 and hk % msize != 0 and h % msize == 0:
+        k = act.heads(_repeat_kv(k, h))
+        v = act.heads(_repeat_kv(v, h))
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                            preferred_element_type=jnp.float32) * scale
+        if mask is not None:
+            logits = jnp.where(mask, logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return act.heads(out.astype(v.dtype))
+    g = h // hk
+    qg = q.reshape(b, sq, hk, g, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, :, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.astype(v.dtype).reshape(b, sq, h, dh)
+    return act.heads(out)
+
+
+# §Perf toggles: blocked (flash-style) attention for full-sequence passes.
+# Measured (EXPERIMENTS.md §Perf 5): 6× memory win on PREFILL for
+# head-sharded archs (mistral-large prefill_32k 58.6 s → 9.7 s, fits HBM),
+# but a large REGRESSION on the gradient path (scan residuals store every
+# tile) and for sequence-sharded-Q archs (per-tile resharding). Hence:
+# blocked is applied to inference prefill of head-sharded archs only.
+ATTN_BLOCK = [None]           # train path (grad): None = baseline
+ATTN_BLOCK_PREFILL = [512]    # inference prefill
+
+
+def set_attn_block(b):
+    ATTN_BLOCK[0] = b
+
+
+def set_attn_block_prefill(b):
+    ATTN_BLOCK_PREFILL[0] = b
+
+
+def _sdpa_blocked(q, k, v, dh, causal: bool, window: Optional[int],
+                  block: int):
+    """Two-level blocked online-softmax attention (flash-style).
+
+    Outer scan over QUERY tiles (outputs collected as ys — no big carry),
+    inner scan over KEY blocks with a (…, q_tile, dh) accumulator. §Perf
+    note: a single-level key scan carrying the full-Sq accumulator was
+    measured WORSE than materialized scores (the lax.scan carry round-trips
+    HBM every block — the reason flash attention is a fused kernel);
+    q-tiling shrinks the spilled carry by Sq/q_tile.
+    """
+    b, sq, h, _ = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    qg = q.reshape(b, sq, hk, g, dh)
+    qt = min(block, sq)
+    if sq % qt:
+        qt = sq
+    nq = sq // qt
+    nb = sk // block
+
+    def q_tile_body(_, iq):
+        q_tile = jax.lax.dynamic_slice_in_dim(qg, iq * qt, qt, axis=1)
+        q_idx = iq * qt + jnp.arange(qt)
+
+        def kb_body(carry, ib):
+            m_run, l_run, acc = carry
+            k_blk = jax.lax.dynamic_slice_in_dim(k, ib * block, block,
+                                                 axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, ib * block, block,
+                                                 axis=1)
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", q_tile, k_blk,
+                                preferred_element_type=jnp.float32) * scale
+            if causal:
+                k_idx = ib * block + jnp.arange(block)
+                keep = k_idx[None, :] <= q_idx[:, None]
+                if window is not None:
+                    keep &= (q_idx[:, None] - k_idx[None, :]) < window
+                logits = jnp.where(keep[None, None, None], logits, NEG_INF)
+            m_blk = jnp.max(logits, axis=-1)               # (b,hk,g,qt)
+            m_new = jnp.maximum(m_run, m_blk)
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(v.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hk, g, qt), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, qt), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, qt, dh), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kb_body, (m0, l0, a0),
+                                          jnp.arange(nb))
+        out_t = acc / jnp.maximum(l_f, 1e-30)[..., None]   # (b,hk,g,qt,dh)
+        return None, out_t.astype(v.dtype)
+
+    _, outs = jax.lax.scan(q_tile_body, None, jnp.arange(nq))
+    # outs (nq, b, hk, g, qt, dh) → (b, sq, h, dh)
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, hk, g, sq, dh)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, dh)
+    return act.heads(out)
+
+
+def _sdpa_full_seq(q, k, v, dh, causal: bool, window: Optional[int],
+                   grad_path: bool = True):
+    """Full-sequence attention dispatcher: blocked when enabled, the key
+    length divides the block, and the heads shard (see toggle notes);
+    else the materialized-score baseline."""
+    s = k.shape[1]
+    blk = ATTN_BLOCK[0] if grad_path else ATTN_BLOCK_PREFILL[0]
+    msize = act.model_size()
+    heads_shard = (msize == 1 or k.shape[2] % msize == 0
+                   or q.shape[2] % msize == 0)
+    if blk and s % blk == 0 and s > blk and heads_shard:
+        if not grad_path and msize > 1 and k.shape[2] % msize != 0 \
+                and q.shape[2] % msize == 0:
+            # repeat so the head dim shards inside the blocked scan too
+            k = act.heads(_repeat_kv(k, q.shape[2]))
+            v = act.heads(_repeat_kv(v, q.shape[2]))
+        return _sdpa_blocked(q, k, v, dh, causal, window, blk)
+    mask = causal_mask(s, window) if causal else None
+    return _sdpa(q, k, v, mask, dh)
+
+
+def causal_mask(s: int, window: Optional[int] = None) -> jax.Array:
+    """(1, 1, S, S) keep-mask: causal, optionally sliding-window."""
+    qi = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    keep = ki <= qi
+    if window is not None:
+        keep &= (qi - ki) < window
+    return keep[None, None]
+
+
+def attn_train(p, cfg: ArchConfig, x, cos, sin, causal: bool = True) -> jax.Array:
+    """Full-sequence attention. x (B, S, D)."""
+    dh = cfg.resolved_head_dim
+    q, k, v = _qkv(p, cfg, x, cos, sin)
+    out = _sdpa_full_seq(q, k, v, dh, causal, cfg.sliding_window)
+    return out.reshape(x.shape[:-1] + (-1,)) @ p["wo"]
+
+
+def attn_prefill(p, cfg: ArchConfig, x, cos, sin, cache: dict
+                 ) -> tuple[jax.Array, dict]:
+    """Full-sequence causal attention that also fills the KV cache.
+
+    The cache ring layout matches :func:`attn_decode`: slot j holds position
+    p with p % S_cache == j, so for S <= S_cache this is a plain prefix
+    write; for SWA prompts longer than the window, the last `window`
+    positions land in their ring slots.
+    """
+    dh = cfg.resolved_head_dim
+    q, k, v = _qkv(p, cfg, x, cos, sin)
+    s = x.shape[1]
+    out = _sdpa_full_seq(q, k, v, dh, True, cfg.sliding_window,
+                         grad_path=False)
+    y = out.reshape(x.shape[:-1] + (-1,)) @ p["wo"]
+
+    s_cache = cache["k"].shape[1]
+    kd = k.astype(cache["k"].dtype)
+    vd = v.astype(cache["v"].dtype)
+    if s <= s_cache:
+        ck = jax.lax.dynamic_update_slice(cache["k"], kd, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vd, (0, 0, 0, 0))
+    else:
+        # keep the last window, placed at their ring slots
+        tail_k, tail_v = kd[:, -s_cache:], vd[:, -s_cache:]
+        shift = s % s_cache
+        ck = jnp.roll(tail_k, shift, axis=1)
+        cv = jnp.roll(tail_v, shift, axis=1)
+    return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype) -> dict:
+    """Self-attention cache; for sliding-window archs the cache is the ring
+    of the last `min(window, max_len)` positions."""
+    s_cache = max_len if cfg.sliding_window is None \
+        else min(cfg.sliding_window, max_len)
+    dh = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, s_cache, cfg.n_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, s_cache, cfg.n_kv_heads, dh), dtype),
+    }
+
+
+def attn_decode(p, cfg: ArchConfig, x, pos, cache: dict,
+                cos, sin) -> tuple[jax.Array, dict]:
+    """One-token decode. x (B, 1, D); pos scalar int32 (uniform across batch
+    in our serving step); cos/sin (B, 1, dh//2) at absolute position.
+
+    Keys are stored post-RoPE; the ring write index is pos % S_cache.
+    """
+    dh = cfg.resolved_head_dim
+    q, k, v = _qkv(p, cfg, x, cos, sin)
+    s_cache = cache["k"].shape[1]
+    slot = (pos % s_cache).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+
+    # keep-mask over cache slots: slot index valid iff it holds a position
+    # <= pos and (for SWA) within the window. With ring writes, a slot j
+    # holds position: the largest p' <= pos with p' % S == j.
+    ki = jnp.arange(s_cache)
+    filled = ki <= jnp.minimum(pos, s_cache - 1)  # before wrap: only <= pos
+    wrapped = pos >= s_cache
+    keep = jnp.where(wrapped, jnp.ones_like(filled, bool), filled)
+    mask = keep[None, None, None, :]             # (1,1,1,S_cache)
+
+    out = _sdpa(q, ck, cv, mask, dh)
+    y = out.reshape(x.shape[:-1] + (-1,)) @ p["wo"]
+    return y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_kv(p, cfg: ArchConfig, enc_out) -> dict:
+    """Precompute encoder K/V once per request (prefill)."""
+    dh = cfg.resolved_head_dim
+    k = _split_heads(enc_out @ p["wk"], cfg.n_kv_heads, dh)
+    v = _split_heads(enc_out @ p["wv"], cfg.n_kv_heads, dh)
+    return {"k": k, "v": v}
+
+
+def cross_attn(p, cfg: ArchConfig, x, kv: dict) -> jax.Array:
+    """x (B, Sq, D) attends over encoder memory (no mask, no rope)."""
+    dh = cfg.resolved_head_dim
+    q = _split_heads(x @ p["wq"], cfg.n_heads, dh)
+    out = _sdpa(q, kv["k"], kv["v"], None, dh)
+    return out.reshape(x.shape[:-1] + (-1,)) @ p["wo"]

@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, dtype_of, silu
+from repro.sharding import activations as act
+
+
+def init_mlp(cfg: ArchConfig, key, d_ff: int | None = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = dtype_of(cfg.param_dtype)
+    if cfg.ffn_act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(k1, D, F, dt),
+            "w_up": dense_init(k2, D, F, dt),
+            "w_down": dense_init(k3, F, D, dt),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_up": dense_init(k1, D, F, dt),
+        "w_down": dense_init(k2, F, D, dt),
+    }
+
+
+def mlp(p: dict, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if "w_gate" in p:
+        h = silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"], approximate=True)
+    if h.ndim == 3:
+        h = act.ffn_hidden(h)
+    return h @ p["w_down"]

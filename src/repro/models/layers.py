@@ -1,0 +1,114 @@
+"""Primitive layers: init helpers, norms, rotary embeddings (incl. M-RoPE)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    """Truncated-normal fan-in init."""
+    std = 1.0 / np.sqrt(d_in)
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, (d_in, d_out), jnp.float32)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (0.02 * jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """positions (...,) int → cos/sin (..., head_dim//2) fp32."""
+    inv = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, dh); cos/sin (..., S, dh//2) broadcast over heads.
+
+    Rotate-half convention: pairs are (x[..., :half], x[..., half:]).
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1
+    ).astype(x.dtype)
+
+
+def mrope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                  sections: tuple[int, ...]):
+    """Qwen2-VL M-RoPE. positions (3, B, S) — temporal/height/width ids.
+
+    The head_dim//2 frequency slots are partitioned into ``sections``
+    (t, h, w); each partition rotates by its own position component.
+    Returns cos/sin (B, S, head_dim//2).
+    """
+    assert positions.shape[0] == 3 and sum(sections) == head_dim // 2
+    inv = rope_freqs(head_dim, theta)                     # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (3, B, S, half)
+    sec_ids = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                         total_repeat_length=head_dim // 2)  # (half,)
+    picked = sum(
+        jnp.where(sec_ids == c, ang[c], 0.0) for c in range(3)
+    )                                                      # (B, S, half)
+    return jnp.cos(picked), jnp.sin(picked)
+
+
+def sinusoidal_at(pos, d: int) -> jax.Array:
+    """Sinusoidal embedding at a (traced) scalar position → (d,) fp32."""
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10000.0 ** (2 * dim / d))
+    out = jnp.zeros((d,), jnp.float32)
+    out = out.at[0::2].set(jnp.sin(ang))
+    out = out.at[1::2].set(jnp.cos(ang))
+    return out
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    """Whisper-style fixed sinusoidal table (n, d)."""
+    pos = np.arange(n)[:, None].astype(np.float64)
+    dim = np.arange(d // 2)[None, :].astype(np.float64)
+    ang = pos / (10000.0 ** (2 * dim / d))
+    out = np.zeros((n, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out

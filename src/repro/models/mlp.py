@@ -1,0 +1,55 @@
+"""Compact MLP classifier — the paper-analog model for Tables 1–4.
+
+The paper's CIFAR-10/ResNet50-FIXUP experiment is reproduced structurally on
+synthetic classification (see data/synthetic.py); this model plays the role
+of the network being federated. Deliberately BatchNorm-free, like the
+paper's §5.2.1 choice (BatchNorm statistics would leak data distribution).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_mlp_classifier(key, n_features: int, n_classes: int,
+                        hidden: Sequence[int] = (64, 64)) -> dict:
+    dims = [n_features, *hidden, n_classes]
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"layer{i}": {
+            "w": dense_init(ks[i], dims[i], dims[i + 1], jnp.float32),
+            "b": jnp.zeros((dims[i + 1],), jnp.float32),
+        }
+        for i in range(len(dims) - 1)
+    }
+
+
+def mlp_logits(params: dict, x: jax.Array) -> jax.Array:
+    n = len(params)
+    for i in range(n):
+        p = params[f"layer{i}"]
+        x = x @ p["w"] + p["b"]
+        if i < n - 1:
+            x = jnp.tanh(x)
+    return x
+
+
+def mlp_loss(params: dict, batch: tuple) -> tuple[jax.Array, dict]:
+    x, y = batch
+    logits = mlp_logits(params, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    return jnp.mean(lse - gold), {}
+
+
+def mlp_accuracy(params: dict, x, y) -> float:
+    pred = jnp.argmax(mlp_logits(params, jnp.asarray(x)), axis=-1)
+    return float(jnp.mean((pred == jnp.asarray(y)).astype(jnp.float32)))
+
+
+mlp_loss_and_grad = jax.jit(jax.value_and_grad(mlp_loss, has_aux=True))

@@ -1,0 +1,244 @@
+"""Model facade: build any assigned architecture from its ArchConfig.
+
+API (all pure functions, pjit/shard_map friendly):
+
+    m = build_model(get_config("qwen3-14b"))
+    params = m.init(key)
+    loss, aux = m.loss(params, batch)
+    params, opt_state, metrics = m.train_step(params, opt_state, batch, lr)
+    cache = m.init_decode_state(batch, max_len)
+    cache = m.prefill(params, batch, cache)         # (audio/vlm set up here)
+    logits, cache = m.decode_step(params, cache, batch_step)
+
+Batch conventions:
+  LM:    {"tokens": (B, S) i32}
+  VLM:   + {"vision_embed": (B, P, D), "positions": (3, B, S) i32}
+  audio: {"tokens": (B, S) i32, "audio_embed": (B, F, D)}
+Decode step: {"token": (B, 1) i32, "pos": () i32} (+ "positions" (3,B,1) vlm).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.models.layers import dtype_of, rms_norm, rope_cos_sin, mrope_cos_sin, \
+    sinusoidal_positions
+from repro.optim.optimizers import Optimizer, apply_updates, momentum
+from repro.sharding import activations as act
+
+PyTree = Any
+
+
+def _needs_rope(cfg: ArchConfig) -> bool:
+    return not cfg.is_encdec  # whisper uses sinusoidal tables instead
+
+
+def _rope_for(cfg: ArchConfig, batch: dict, S: int):
+    if not _needs_rope(cfg):
+        return None, None
+    dh = cfg.resolved_head_dim
+    if cfg.mrope and "positions" in batch:
+        cos, sin = mrope_cos_sin(batch["positions"], dh, cfg.rope_theta,
+                                 cfg.mrope_sections)
+        return cos, sin  # (B, S, dh//2)
+    pos = jnp.arange(S, dtype=jnp.int32)[None]              # (1, S)
+    return rope_cos_sin(pos, dh, cfg.rope_theta)
+
+
+def _embed(cfg: ArchConfig, params: PyTree, batch: dict) -> jax.Array:
+    x = params["embed"][batch["tokens"]]
+    if cfg.arch_type == "vlm" and "vision_embed" in batch:
+        patches = batch["vision_embed"] @ params["patch_proj"]
+        n_p = patches.shape[1]
+        x = jnp.concatenate(
+            [x[:, :n_p] + patches.astype(x.dtype), x[:, n_p:]], axis=1)
+    if cfg.is_encdec:
+        pe = jnp.asarray(sinusoidal_positions(x.shape[1], cfg.d_model), x.dtype)
+        x = x + pe
+    return act.residual(x)
+
+
+def _logits(cfg: ArchConfig, params: PyTree, x) -> jax.Array:
+    x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return act.logits(x @ head)
+
+
+def _xent(logits, labels) -> jax.Array:
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    train_step: Callable
+    init_decode_state: Callable
+    prefill: Callable
+    prefill_sequential: Callable
+    decode_step: Callable
+    optimizer: Optimizer
+
+
+def build_model(cfg: ArchConfig, optimizer: Optional[Optimizer] = None) -> Model:
+    opt = optimizer or momentum()
+    act_dtype = dtype_of(cfg.param_dtype)
+
+    def init(key) -> PyTree:
+        return tf.init_stack(cfg, key)
+
+    # ---------------- forward / loss ----------------
+    def forward(params: PyTree, batch: dict):
+        S = batch["tokens"].shape[1]
+        cos, sin = _rope_for(cfg, batch, S)
+        x = _embed(cfg, params, batch)
+        cross_kvs = None
+        if cfg.is_encdec:
+            enc = tf.apply_encoder(cfg, params, batch["audio_embed"])
+            cross_kvs = tf.encoder_cross_kvs(cfg, params, enc)
+        x = tf.apply_dense_prefix_train(cfg, params, x, cos, sin)
+        x, aux = tf.apply_units_train(cfg, params, x, cos, sin,
+                                      cross_kvs=cross_kvs)
+        return _logits(cfg, params, x), aux
+
+    def loss(params: PyTree, batch: dict):
+        logits, aux = forward(params, batch)
+        labels = batch["tokens"][:, 1:]
+        l = _xent(logits[:, :-1], labels)
+        n_moe = sum(1 for _, f in cfg.pattern if f == "moe") * cfg.n_units
+        if n_moe:
+            l = l + cfg.router_aux_weight * aux["load_balance"] / n_moe \
+                  + 1e-3 * aux["z_loss"] / n_moe
+        return l, aux
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(params: PyTree, opt_state: PyTree, batch: dict, lr):
+        (l, aux), grads = grad_fn(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree_util.tree_leaves(grads)))
+        return params, opt_state, {"loss": l, "grad_norm": gnorm, **aux}
+
+    # ---------------- serving ----------------
+    def init_decode_state(batch: int, max_len: int) -> dict:
+        state = {
+            "units": tf.init_unit_caches(cfg, batch, max_len, act_dtype),
+        }
+        dp = tf.init_dense_prefix_caches(cfg, batch, max_len, act_dtype)
+        if dp is not None:
+            state["dense"] = dp
+        if cfg.is_encdec:
+            dh = cfg.resolved_head_dim
+            kv = {
+                "k": jnp.zeros((batch, cfg.n_frames, cfg.n_kv_heads, dh),
+                               act_dtype),
+                "v": jnp.zeros((batch, cfg.n_frames, cfg.n_kv_heads, dh),
+                               act_dtype),
+            }
+            state["cross"] = {
+                f"b{j}": jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(
+                        a, (cfg.n_units,) + a.shape), kv)
+                for j in range(len(cfg.pattern))
+            }
+        return state
+
+    def prefill(params: PyTree, batch: dict, state: dict):
+        """Parallel prefill: full-sequence forward that fills the decode
+        caches in one pass (what production serving lowers for prefill_32k).
+        Returns (last_logits (B,1,V), state)."""
+        S = batch["tokens"].shape[1]
+        cos, sin = _rope_for(cfg, batch, S)
+        x = _embed(cfg, params, batch)
+        new_state = dict(state)
+        if cfg.is_encdec:
+            enc = tf.apply_encoder(cfg, params, batch["audio_embed"])
+            new_state["cross"] = tf.encoder_cross_kvs(cfg, params, enc)
+        if "dense" in state:
+            x, new_state["dense"] = tf.apply_dense_prefix_prefill(
+                cfg, params, x, cos, sin, state["dense"])
+        x, new_state["units"], _aux = tf.apply_units_prefill(
+            cfg, params, x, cos, sin, state["units"],
+            cross_kvs=new_state.get("cross"))
+        logits = _logits(cfg, params, x[:, -1:])
+        return logits, new_state
+
+    def prefill_sequential(params: PyTree, batch: dict, state: dict):
+        """Prompt processing as a scan of decode steps — kept as the exact
+        cache-parity oracle for tests (slow; O(S) sequential)."""
+        if cfg.is_encdec:
+            enc = tf.apply_encoder(cfg, params, batch["audio_embed"])
+            state = dict(state)
+            state["cross"] = tf.encoder_cross_kvs(cfg, params, enc)
+
+        S = batch["tokens"].shape[1]
+
+        def step(carry, i):
+            st, _ = carry
+            tok = jax.lax.dynamic_slice_in_dim(batch["tokens"], i, 1, axis=1)
+            step_batch = {"token": tok, "pos": i}
+            if cfg.mrope and "positions" in batch:
+                step_batch["positions"] = jax.lax.dynamic_slice_in_dim(
+                    batch["positions"], i, 1, axis=2)
+            logits, st = _decode_core(params, st, step_batch)
+            return (st, logits), None
+
+        zero_logits = jnp.zeros(
+            (batch["tokens"].shape[0], 1, cfg.vocab), act_dtype)
+        (state, logits), _ = jax.lax.scan(
+            step, (state, zero_logits), jnp.arange(S))
+        return logits, state
+
+    def _decode_core(params: PyTree, state: dict, step_batch: dict):
+        tok = step_batch["token"]            # (B, 1)
+        pos = step_batch["pos"]              # scalar
+        x = params["embed"][tok]
+        if cfg.is_encdec:
+            from repro.models.layers import sinusoidal_at
+            pe = sinusoidal_at(jnp.asarray(pos), cfg.d_model).astype(x.dtype)
+            x = x + pe[None, None]
+            cos = sin = None
+        elif cfg.mrope and "positions" in step_batch:
+            cos, sin = mrope_cos_sin(step_batch["positions"],
+                                     cfg.resolved_head_dim, cfg.rope_theta,
+                                     cfg.mrope_sections)
+        else:
+            cos, sin = rope_cos_sin(
+                jnp.full((1, 1), pos, jnp.int32),
+                cfg.resolved_head_dim, cfg.rope_theta)
+
+        new_state = dict(state)
+        if "dense" in state:
+            x, new_state["dense"] = tf.apply_dense_prefix_decode(
+                cfg, params, x, pos, state["dense"], cos, sin)
+        x, new_state["units"] = tf.apply_units_decode(
+            cfg, params, x, pos, state["units"], cos, sin,
+            cross_kvs=state.get("cross"))
+        return _logits(cfg, params, x), new_state
+
+    def decode_step(params: PyTree, state: dict, step_batch: dict):
+        return _decode_core(params, state, step_batch)
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        loss=loss,
+        train_step=train_step,
+        init_decode_state=init_decode_state,
+        prefill=prefill,
+        prefill_sequential=prefill_sequential,
+        decode_step=decode_step,
+        optimizer=opt,
+    )

@@ -1,0 +1,143 @@
+"""Mixture-of-Experts: top-k routing with capacity-based scatter dispatch.
+
+TPU-native design notes (DESIGN.md §2): dispatch is a *scatter/gather*, not
+a one-hot matmul — the Mesh-TF-style `einsum('te,td->etd')` dispatch inflates
+HLO FLOPs by the full T×E×C×D product and would corrupt the roofline
+analysis. Here:
+
+  1. router logits (T, E) in fp32, softmax, top-k, renormalize;
+  2. position-in-expert via cumsum over the flat (T·k,) assignment stream;
+  3. tokens scattered into (E, C, D) expert buffers (overflow dropped — the
+     classic capacity-factor discipline);
+  4. per-expert SwiGLU via batched einsum over the E axis (expert-parallel
+     sharding over 'model' when E divides it — sharding/specs.py);
+  5. gather back, combine with gate weights, add shared-expert output.
+
+Aux losses: switch-style load balance + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.ffn import init_mlp, mlp
+from repro.models.layers import dense_init, dtype_of, silu
+from repro.sharding import activations as act
+
+
+def init_moe(cfg: ArchConfig, key) -> dict:
+    D, E, Fe = cfg.d_model, cfg.n_experts, cfg.d_expert_ff
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    import numpy as np
+    std = 1.0 / np.sqrt(D)
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "experts_gate": (std * jax.random.truncated_normal(
+            ks[1], -2, 2, (E, D, Fe), jnp.float32)).astype(dt),
+        "experts_up": (std * jax.random.truncated_normal(
+            ks[2], -2, 2, (E, D, Fe), jnp.float32)).astype(dt),
+        "experts_down": ((1.0 / np.sqrt(Fe)) * jax.random.truncated_normal(
+            ks[3], -2, 2, (E, Fe, D), jnp.float32)).astype(dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(cfg, ks[4],
+                               d_ff=cfg.n_shared_experts * cfg.d_expert_ff)
+    return p
+
+
+# §Perf toggle: force the paper-standard global-capacity dispatch even on a
+# mesh (the "before" of the shard-local dispatch hillclimb).
+FORCE_GLOBAL_DISPATCH = [False]
+
+
+def capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / max(cfg.n_experts, 1))
+    return max(c, cfg.top_k)
+
+
+def moe(p: dict, cfg: ArchConfig, x: jax.Array) -> tuple[jax.Array, dict]:
+    """x (B, S, D) → (out, aux). aux: load_balance_loss, z_loss, drop_frac.
+
+    Dispatch is SHARD-LOCAL (§Perf): the token stream is viewed as
+    (s, T/s) blocks matching the data-parallel shards and
+    position-in-expert is computed *within each block*, so the scatter into
+    (E, s, C_loc, D) buffers never crosses shards — the global-cumsum
+    scatter otherwise forces (E, C, D)-sized all-reduces on every MoE layer
+    (observed ~1.9 TB/device on grok train_4k). Per-device capacity is also
+    what production routers implement. Off-mesh (unit tests) s == 1 and the
+    semantics are the paper-standard global capacity.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    s_blk = act.dp_size()
+    # Block-local dispatch pays off for tensor-parallel experts (E does not
+    # divide 'model'); with expert-parallel buffers the (model×data) 2-D
+    # resharding of blocked buffers regressed 10× on deepseek — measured,
+    # see EXPERIMENTS.md §Perf — so expert-parallel keeps global dispatch.
+    if T % s_blk or FORCE_GLOBAL_DISPATCH[0] \
+            or (act.dp_size() > 1 and E % act.model_size() == 0):
+        s_blk = 1
+    Tl = T // s_blk
+    C = capacity(cfg, Tl)                                    # per-block
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, e_idx = jax.lax.top_k(probs, K)               # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- block-local position-in-expert --------------------------------
+    flat_e = e_idx.reshape(s_blk, Tl * K)                    # (s, Tl*K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)      # (s, Tl*K, E)
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot            # within block
+    pos = jnp.take_along_axis(
+        pos_all, flat_e[..., None], axis=2)[..., 0]          # (s, Tl*K)
+    keep = pos < C
+    gate_flat = gate_vals.reshape(s_blk, Tl * K) * keep.astype(jnp.float32)
+
+    # ---- block-local scatter into expert buffers ------------------------
+    token_idx = jnp.repeat(jnp.arange(Tl), K)                # within block
+    blk_idx = jnp.broadcast_to(jnp.arange(s_blk)[:, None], (s_blk, Tl * K))
+    buf = jnp.zeros((E, s_blk, C, D), x.dtype)
+    e_safe = jnp.where(keep, flat_e, 0)
+    pos_safe = jnp.where(keep, pos, C - 1)
+    xb = xf.reshape(s_blk, Tl, D)
+    contrib = jnp.where(keep[..., None], xb[:, token_idx], 0).astype(x.dtype)
+    buf = act.expert_block_buf(
+        buf.at[e_safe, blk_idx, pos_safe].add(contrib, mode="drop"))
+
+    # ---- expert SwiGLU over the E axis ----------------------------------
+    w_gate = act.expert_weights(p["experts_gate"])
+    w_up = act.expert_weights(p["experts_up"])
+    w_down = act.expert_weights(p["experts_down"], transposed=True)
+    h = silu(jnp.einsum("escd,edf->escf", buf, w_gate)) * \
+        jnp.einsum("escd,edf->escf", buf, w_up)
+    h = act.expert_block_hidden(h)
+    out_buf = act.expert_block_buf(
+        jnp.einsum("escf,efd->escd", h, w_down))             # (E, s, C, D)
+
+    # ---- block-local gather + combine -----------------------------------
+    y_flat = out_buf[e_safe, blk_idx, pos_safe]              # (s, Tl*K, D)
+    y = jnp.sum(
+        (y_flat.astype(jnp.float32)
+         * gate_flat[..., None]).reshape(T, K, D),
+        axis=1,
+    ).astype(x.dtype)
+
+    if "shared" in p:
+        y = y + mlp(p["shared"], cfg, xf)
+
+    # ---- aux losses ----------------------------------------------------
+    # Switch load balance: E * sum_e (token_frac_e * prob_frac_e)
+    assign_frac = jnp.mean(
+        jax.nn.one_hot(e_idx, E, dtype=jnp.float32).sum(1), axis=0)  # (E,)
+    prob_frac = jnp.mean(probs, axis=0)
+    lb = E * jnp.sum(assign_frac / K * prob_frac)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    drop_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {"load_balance": lb, "z_loss": z, "drop_frac": drop_frac}
+    return y.reshape(B, S, D), aux

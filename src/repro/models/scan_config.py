@@ -1,0 +1,22 @@
+"""Global scan-unroll switch.
+
+XLA's HLO cost analysis counts a while-loop body ONCE regardless of trip
+count, so a scanned layer stack under-reports FLOPs/bytes/collectives by
+~n_layers×. The dry-run therefore lowers with structural scans (layer
+stacks, mamba chunk loops) fully unrolled — exact counting at the price of
+compile time. Training/serving runs keep scans rolled (small HLO).
+
+Time-step recurrences (mLSTM/sLSTM) stay rolled even when this flag is on —
+unrolling S=32k steps is infeasible; their roofline rows carry an analytic
+correction instead (see launch/analysis.py + EXPERIMENTS.md notes).
+"""
+
+_UNROLL = [False]
+
+
+def set_unroll(value: bool) -> None:
+    _UNROLL[0] = bool(value)
+
+
+def unroll() -> bool:
+    return _UNROLL[0]

@@ -1,0 +1,425 @@
+"""Recurrent mixers: Mamba (selective SSM) and xLSTM (mLSTM / sLSTM).
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel becomes a
+*chunked* scan — an outer ``lax.scan`` over sequence chunks carrying the
+(B, d_inner, d_state) state, with an ``associative_scan`` inside each chunk.
+Only one chunk's (B, Q, d_inner, d_state) tensor is ever materialized, which
+is the VMEM-friendly analogue of the kernel's SRAM blocking, and the inner
+scan exposes MXU-parallel work instead of a 1-step-at-a-time recurrence.
+
+mLSTM keeps its exact recurrence (exponential gating with the max-stabilizer
+from the xLSTM paper) under a time-step scan whose carry is the matrix
+memory (B, H, dh, dh); q/k/v/gate projections are hoisted out of the scan so
+the sequential part is only the rank-1 state update. sLSTM is inherently
+sequential (h_{t-1} feeds the gates) — a time-step scan is the architecture,
+not an implementation shortcut.
+
+Decode paths update the same states one token at a time — O(1) in context,
+which is what qualifies these archs for ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init, dtype_of, rms_norm, silu
+from repro.models.scan_config import unroll as _unroll
+from repro.sharding import activations as act
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+def init_mamba(cfg: ArchConfig, key) -> dict:
+    D, di, ds, dc = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.d_conv
+    dtr = cfg.resolved_dt_rank
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # S4-style A init: A_log = log(1..ds) per channel.
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di, dt),
+        "conv_w": (jax.random.normal(ks[1], (dc, di), jnp.float32)
+                   / np.sqrt(dc)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds, dt),
+        "dt_proj": dense_init(ks[3], dtr, di, dt),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(
+                ks[4], (di,), jnp.float32,
+                np.log(1e-3), np.log(1e-1))), 1e-4, None))).astype(dt),
+        "A_log": jnp.log(a),          # fp32 (di, ds)
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, D, dt),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B, S, di), w (dc, di)."""
+    dc = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    out = sum(pad[:, j : j + x.shape[1]] * w[j] for j in range(dc))
+    return out + b
+
+
+def _ssm_scan_chunk(a, b, h0):
+    """One chunk of the diagonal SSM recurrence h_t = a_t h_{t-1} + b_t.
+
+    a, b: (B, Q, di, ds); h0 (B, di, ds). Uses an associative scan for the
+    homogeneous part and a stable cumulative-decay term for the carry-in
+    (a ∈ (0,1] so cumprod never overflows). Returns (h_all, h_last).
+    """
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    a_cum, h_zero = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_all = h_zero + a_cum * h0[:, None]
+    return h_all, h_all[:, -1]
+
+
+def mamba_train(p: dict, cfg: ArchConfig, x: jax.Array,
+                chunk: int = 256) -> jax.Array:
+    """Full-sequence Mamba mixer. x (B, S, D) → (B, S, D)."""
+    y, _ = _mamba_forward(p, cfg, x, chunk, return_state=False)
+    return y
+
+
+def mamba_prefill(p: dict, cfg: ArchConfig, x: jax.Array,
+                  chunk: int = 256) -> tuple[jax.Array, dict]:
+    """Full-sequence Mamba that also returns the decode state."""
+    return _mamba_forward(p, cfg, x, chunk, return_state=True)
+
+
+def _mamba_forward(p: dict, cfg: ArchConfig, x: jax.Array,
+                   chunk: int = 256, return_state: bool = False):
+    B, S, D = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    dtr = cfg.resolved_dt_rank
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+
+    xz = act.ffn_hidden(x @ p["in_proj"])
+    xp, z = jnp.split(xz, 2, axis=-1)                       # (B,S,di) each
+    xc = silu(_causal_conv(xp, p["conv_w"], p["conv_b"]))
+    proj = xc @ p["x_proj"]                                 # (B,S,dtr+2ds)
+    dt_r = proj[..., :dtr]
+    Bm = proj[..., dtr : dtr + ds].astype(jnp.float32)      # (B,S,ds)
+    Cm = proj[..., dtr + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (dt_r @ p["dt_proj"]).astype(jnp.float32) +
+        p["dt_bias"].astype(jnp.float32))                   # (B,S,di)
+    A = -jnp.exp(p["A_log"])                                # (di, ds) fp32
+
+    nc = S // Q
+    xcf = xc.astype(jnp.float32)
+
+    def chunk_body(h, idx):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, idx * Q, Q, axis=1)
+        dt_c, b_c, c_c, x_c = sl(dt), sl(Bm), sl(Cm), sl(xcf)
+        a = jnp.exp(dt_c[..., None] * A)                    # (B,Q,di,ds)
+        binc = (dt_c * x_c)[..., None] * b_c[:, :, None, :]  # (B,Q,di,ds)
+        h_all, h_last = _ssm_scan_chunk(a, binc, h)
+        y = jnp.einsum("bqns,bqs->bqn", h_all, c_c)         # (B,Q,di)
+        return h_last, y
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_body, h0, jnp.arange(nc),
+                               unroll=_unroll())
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)            # (B,S,di)
+    y = y + p["D_skip"] * xcf
+    y = (y * silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if not return_state:
+        return out, None
+    dc = cfg.d_conv
+    conv_state = xp[:, -(dc - 1):].astype(x.dtype) if dc > 1 else \
+        jnp.zeros((B, 0, di), x.dtype)
+    if S < dc - 1:
+        conv_state = jnp.concatenate(
+            [jnp.zeros((B, dc - 1 - S, di), x.dtype), xp.astype(x.dtype)], axis=1)
+    return out, {"h": h_last, "conv": conv_state}
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype) -> dict:
+    di, ds, dc = cfg.d_inner, cfg.d_state, cfg.d_conv
+    return {
+        "h": jnp.zeros((batch, di, ds), jnp.float32),
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+    }
+
+
+def mamba_decode(p: dict, cfg: ArchConfig, x: jax.Array,
+                 state: dict) -> tuple[jax.Array, dict]:
+    """One-token Mamba step. x (B, 1, D)."""
+    di, ds = cfg.d_inner, cfg.d_state
+    dtr = cfg.resolved_dt_rank
+    xz = x[:, 0] @ p["in_proj"]
+    xp, z = jnp.split(xz, 2, axis=-1)                       # (B, di)
+    window = jnp.concatenate([state["conv"],
+                              xp[:, None].astype(state["conv"].dtype)], axis=1)
+    xc = jnp.einsum("bci,ci->bi", window.astype(jnp.float32),
+                    p["conv_w"].astype(jnp.float32)) + \
+        p["conv_b"].astype(jnp.float32)
+    xc = silu(xc)
+    proj = xc.astype(x.dtype) @ p["x_proj"]
+    dt_r = proj[..., :dtr]
+    Bm = proj[..., dtr : dtr + ds].astype(jnp.float32)
+    Cm = proj[..., dtr + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A)                          # (B,di,ds)
+    h = a * state["h"] + (dt * xc)[..., None] * Bm[:, None, :]
+    y = jnp.einsum("bns,bs->bn", h, Cm) + p["D_skip"] * xc
+    y = (y * silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix memory, exponential gating with stabilizer)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(cfg: ArchConfig, key) -> dict:
+    D = cfg.d_model
+    di = int(cfg.lstm_proj_factor * D)
+    H = cfg.n_heads
+    di = (di // H) * H
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di, dt),
+        "wq": dense_init(ks[1], di, di, dt),
+        "wk": dense_init(ks[2], di, di, dt),
+        "wv": dense_init(ks[3], di, di, dt),
+        "gates_w": dense_init(ks[4], di, 2 * H, jnp.float32),
+        "gates_b": jnp.concatenate([
+            jnp.zeros((H,), jnp.float32),             # input gate bias
+            3.0 * jnp.ones((H,), jnp.float32),        # forget gate bias (open)
+        ]),
+        "norm": jnp.ones((di,), dt),                  # per-head output norm
+        "out_proj": dense_init(ks[5], di, D, dt),
+    }
+
+
+def _mlstm_qkvg(p, cfg, x):
+    """Hoisted projections. x (B,S,D) → q,k,v (B,S,H,dh), li/lf (B,S,H), z."""
+    di = p["wq"].shape[0]
+    H = cfg.n_heads
+    dh = di // H
+    xz = x @ p["in_proj"]
+    xm, z = jnp.split(xz, 2, axis=-1)
+    q = (xm @ p["wq"]).reshape(*xm.shape[:-1], H, dh)
+    k = (xm @ p["wk"]).reshape(*xm.shape[:-1], H, dh) / np.sqrt(dh)
+    v = (xm @ p["wv"]).reshape(*xm.shape[:-1], H, dh)
+    gates = xm.astype(jnp.float32) @ p["gates_w"] + p["gates_b"]
+    li, lf_raw = jnp.split(gates, 2, axis=-1)               # (B,S,H)
+    lf = jax.nn.log_sigmoid(lf_raw)
+    return q, k, v, li, lf, z
+
+
+def _mlstm_step(carry, inp):
+    """One stabilized mLSTM cell step.
+
+    carry: C (B,H,dhv,dhk), n (B,H,dhk), m (B,H)
+    inp:   q,k,v (B,H,dh), li,lf (B,H)
+    """
+    C, n, m, = carry
+    q, k, v, li, lf = inp
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    m_new = jnp.maximum(lf + m, li)
+    i_g = jnp.exp(li - m_new)[..., None]                    # (B,H,1)
+    f_g = jnp.exp(lf + m - m_new)[..., None]
+    C = f_g[..., None] * C + i_g[..., None] * (vf[..., :, None] * kf[..., None, :])
+    n = f_g * n + i_g * kf
+    num = jnp.einsum("bhvk,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)),
+                      jnp.exp(-m_new))[..., None]
+    h = num / den
+    return (C, n, m_new), h
+
+
+# Chunked-remat switch for the recurrent time scans (§Perf hillclimb):
+# chunk size C checkpoints the carry every C steps — backward residual
+# memory drops from O(S · state) to O(S/C · state) at the cost of one
+# in-chunk forward recompute. None = naive (residuals at every step).
+LSTM_CHUNK = [64]
+
+
+def set_lstm_chunk(c):
+    LSTM_CHUNK[0] = c
+
+
+def mlstm_train(p: dict, cfg: ArchConfig, x: jax.Array,
+                return_state: bool = False):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    q, k, v, li, lf, z = _mlstm_qkvg(p, cfg, x)
+    di = q.shape[-1] * H
+
+    def step(carry, inp):
+        return _mlstm_step(carry, inp)
+
+    dh = q.shape[-1]
+    carry = (
+        jnp.zeros((B, H, dh, dh), jnp.float32),
+        jnp.zeros((B, H, dh), jnp.float32),
+        jnp.full((B, H), -1e30, jnp.float32),
+    )
+    chunk = LSTM_CHUNK[0]
+    if chunk and S % min(chunk, S) == 0 and S > min(chunk, S):
+        Q = min(chunk, S)
+        nc = S // Q
+
+        def chunk_body(c, idx):
+            sl = tuple(
+                jnp.moveaxis(
+                    jax.lax.dynamic_slice_in_dim(t, idx * Q, Q, axis=1),
+                    1, 0)
+                for t in (q, k, v, li, lf))
+            c2, hs_c = jax.lax.scan(step, c, sl)
+            return c2, hs_c                                  # (Q,B,H,dh)
+
+        final, hs = jax.lax.scan(jax.checkpoint(chunk_body), carry,
+                                 jnp.arange(nc))             # (nc,Q,B,H,dh)
+        hs = hs.reshape(S, B, H, dh)
+    else:
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, li, lf))
+        final, hs = jax.lax.scan(step, carry, xs)            # (S,B,H,dh)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di)
+    h = rms_norm(h.astype(x.dtype), p["norm"], cfg.norm_eps)
+    h = h * silu(z)
+    out = h @ p["out_proj"]
+    if return_state:
+        C, n, m = final
+        return out, {"C": C, "n": n, "m": m}
+    return out
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int) -> dict:
+    di = int(cfg.lstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    di = (di // H) * H
+    dh = di // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p: dict, cfg: ArchConfig, x: jax.Array,
+                 state: dict) -> tuple[jax.Array, dict]:
+    B = x.shape[0]
+    H = cfg.n_heads
+    q, k, v, li, lf, z = _mlstm_qkvg(p, cfg, x)             # S == 1
+    carry = (state["C"], state["n"], state["m"])
+    inp = tuple(t[:, 0] for t in (q, k, v, li, lf))
+    (C, n, m), h = _mlstm_step(carry, inp)                  # h (B,H,dh)
+    di = h.shape[-1] * H
+    h = h.reshape(B, 1, di)
+    h = rms_norm(h.astype(x.dtype), p["norm"], cfg.norm_eps)
+    h = h * silu(z)
+    return h @ p["out_proj"], {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar memory, true recurrence)
+# ---------------------------------------------------------------------------
+
+def init_slstm(cfg: ArchConfig, key) -> dict:
+    D = cfg.d_model
+    di = D
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "gates_w": dense_init(ks[0], D, 4 * di, jnp.float32),
+        "r_gates_w": (dense_init(ks[1], di, 4 * di, jnp.float32)
+                      / np.sqrt(di)),
+        "gates_b": jnp.concatenate([
+            jnp.zeros((di,), jnp.float32),
+            3.0 * jnp.ones((di,), jnp.float32),       # forget bias
+            jnp.zeros((2 * di,), jnp.float32),
+        ]),
+        "out_proj": dense_init(ks[2], di, D, dt),
+    }
+
+
+def _slstm_step(p, carry, x_t):
+    """x_t (B, 4di) pre-projected input contribution."""
+    c, n, h, m = carry
+    raw = x_t + h @ p["r_gates_w"] + p["gates_b"]
+    di = raw.shape[-1] // 4
+    li = raw[..., :di]
+    lf = raw[..., di : 2 * di]                   # exp forget gate (log-space)
+    z_raw = raw[..., 2 * di : 3 * di]
+    o_raw = raw[..., 3 * di :]
+    m_new = jnp.maximum(lf + m, li)
+    i_g = jnp.exp(li - m_new)
+    f_g = jnp.exp(lf + m - m_new)
+    c = f_g * c + i_g * jnp.tanh(z_raw)
+    n = jnp.maximum(f_g * n + i_g, jnp.exp(-m_new))
+    h = jax.nn.sigmoid(o_raw) * c / n
+    return (c, n, h, m_new)
+
+
+def slstm_train(p: dict, cfg: ArchConfig, x: jax.Array,
+                return_state: bool = False):
+    B, S, D = x.shape
+    di = D
+    xg = x.astype(jnp.float32) @ p["gates_w"]               # (B,S,4di)
+
+    def step(carry, x_t):
+        new = _slstm_step(p, carry, x_t)
+        return new, new[2]
+
+    carry = (jnp.zeros((B, di), jnp.float32),
+             jnp.ones((B, di), jnp.float32),
+             jnp.zeros((B, di), jnp.float32),
+             jnp.zeros((B, di), jnp.float32))
+    chunk = LSTM_CHUNK[0]
+    if chunk and S % min(chunk, S) == 0 and S > min(chunk, S):
+        Q = min(chunk, S)
+        nc = S // Q
+
+        def chunk_body(c, idx):
+            xs_c = jnp.moveaxis(
+                jax.lax.dynamic_slice_in_dim(xg, idx * Q, Q, axis=1), 1, 0)
+            c2, hs_c = jax.lax.scan(step, c, xs_c)
+            return c2, hs_c
+
+        final, hs = jax.lax.scan(jax.checkpoint(chunk_body), carry,
+                                 jnp.arange(nc))
+        hs = hs.reshape(S, B, di)
+    else:
+        final, hs = jax.lax.scan(step, carry, jnp.moveaxis(xg, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)              # (B,S,di)
+    out = h @ p["out_proj"]
+    if return_state:
+        c, n, hh, m = final
+        return out, {"c": c, "n": n, "h": hh, "m": m}
+    return out
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int) -> dict:
+    di = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, di), jnp.float32),
+        "n": jnp.ones((batch, di), jnp.float32),
+        "h": jnp.zeros((batch, di), jnp.float32),
+        "m": jnp.zeros((batch, di), jnp.float32),
+    }
+
+
+def slstm_decode(p: dict, cfg: ArchConfig, x: jax.Array,
+                 state: dict) -> tuple[jax.Array, dict]:
+    xg = x[:, 0].astype(jnp.float32) @ p["gates_w"]
+    carry = (state["c"], state["n"], state["h"], state["m"])
+    c, n, h, m = _slstm_step(p, carry, xg)
+    out = (h.astype(x.dtype) @ p["out_proj"])[:, None]
+    return out, {"c": c, "n": n, "h": h, "m": m}

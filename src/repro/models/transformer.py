@@ -1,0 +1,382 @@
+"""Config-driven block stack: init + apply for train / prefill / decode.
+
+Layers are grouped into repeating *units* (one period of ``cfg.pattern``);
+unit parameters are stacked along a leading axis and the stack is applied
+with ``lax.scan`` + ``jax.checkpoint`` — small HLO, remat'd activations.
+Heterogeneous hybrids (Jamba's 7:1 mamba:attn, xLSTM's mLSTM/sLSTM
+alternation) are handled by the per-position sub-block types inside a unit.
+
+Caches mirror the unit structure: ``cache['units']['b<j>']`` holds the
+per-unit-stacked state for pattern position j (KV rings for attention,
+SSM/LSTM states for recurrent mixers), so decode is also one scan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.layers import dtype_of, rms_norm
+from repro.models.scan_config import unroll as _unroll
+from repro.sharding import activations as act
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ArchConfig, key, mixer: str, ffn: str,
+                cross: bool = False, d_ff: Optional[int] = None) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg.param_dtype)
+    p: dict = {"norm1": jnp.ones((cfg.d_model,), dt)}
+    if mixer in ("attn", "swa"):
+        p["mixer"] = attn.init_attention(cfg, ks[0])
+    elif mixer == "mamba":
+        p["mixer"] = ssm.init_mamba(cfg, ks[0])
+    elif mixer == "mlstm":
+        p["mixer"] = ssm.init_mlstm(cfg, ks[0])
+    elif mixer == "slstm":
+        p["mixer"] = ssm.init_slstm(cfg, ks[0])
+    else:
+        raise ValueError(f"unknown mixer {mixer}")
+    if cross:
+        p["norm_x"] = jnp.ones((cfg.d_model,), dt)
+        p["cross"] = attn.init_attention(cfg, ks[3], cross=True)
+    if ffn == "mlp":
+        p["norm2"] = jnp.ones((cfg.d_model,), dt)
+        p["ffn"] = ffn_mod.init_mlp(cfg, ks[1], d_ff=d_ff)
+    elif ffn == "moe":
+        p["norm2"] = jnp.ones((cfg.d_model,), dt)
+        p["ffn"] = moe_mod.init_moe(cfg, ks[1])
+    return p
+
+
+def _stack_init(fn, key, n: int) -> PyTree:
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_stack(cfg: ArchConfig, key) -> PyTree:
+    from repro.models.layers import embed_init, dense_init
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    params: dict = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dt),
+        "norm_f": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab, dt)
+
+    if cfg.first_k_dense:
+        d_ff = cfg.d_ff_dense or cfg.d_ff
+        params["dense_blocks"] = _stack_init(
+            lambda k: _init_block(cfg, k, "attn", "mlp", d_ff=d_ff),
+            ks[2], cfg.first_k_dense)
+
+    units: dict = {}
+    for j, (mixer, f) in enumerate(cfg.pattern):
+        units[f"b{j}"] = _stack_init(
+            lambda k, m=mixer, f_=f: _init_block(
+                cfg, k, m, f_, cross=cfg.is_encdec),
+            jax.random.fold_in(ks[3], j), cfg.n_units)
+    params["units"] = units
+
+    if cfg.is_encdec:
+        params["audio_proj"] = dense_init(ks[4], cfg.d_model, cfg.d_model, dt)
+        params["encoder_blocks"] = _stack_init(
+            lambda k: _init_block(cfg, k, "attn", "mlp"),
+            ks[5], cfg.n_encoder_layers)
+        params["enc_norm_f"] = jnp.ones((cfg.d_model,), dt)
+    if cfg.arch_type == "vlm":
+        params["patch_proj"] = dense_init(ks[6], cfg.d_model, cfg.d_model, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _apply_block_train(cfg: ArchConfig, bp: dict, mixer: str, f: str, x,
+                       cos, sin, cross_kv=None, causal=True):
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    if mixer in ("attn", "swa"):
+        h = attn.attn_train(bp["mixer"], cfg, h, cos, sin, causal=causal)
+    elif mixer == "mamba":
+        h = ssm.mamba_train(bp["mixer"], cfg, h)
+    elif mixer == "mlstm":
+        h = ssm.mlstm_train(bp["mixer"], cfg, h)
+    elif mixer == "slstm":
+        h = ssm.slstm_train(bp["mixer"], cfg, h)
+    x = act.residual(x + h)
+    aux = {}
+    if cross_kv is not None:
+        h = rms_norm(x, bp["norm_x"], cfg.norm_eps)
+        x = x + attn.cross_attn(bp["cross"], cfg, h, cross_kv)
+    if "ffn" in bp:
+        h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+        if "router" in bp["ffn"]:
+            h, aux = moe_mod.moe(bp["ffn"], cfg, h)
+        else:
+            h = ffn_mod.mlp(bp["ffn"], cfg, h)
+        x = act.residual(x + h)
+    return x, aux
+
+
+def _apply_block_prefill(cfg: ArchConfig, bp: dict, mixer: str, f: str, x,
+                         cos, sin, cache, cross_kv=None):
+    """Full-sequence pass that also produces the decode cache entry."""
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    if mixer in ("attn", "swa"):
+        h, new_cache = attn.attn_prefill(bp["mixer"], cfg, h, cos, sin, cache)
+    elif mixer == "mamba":
+        h, new_cache = ssm.mamba_prefill(bp["mixer"], cfg, h)
+    elif mixer == "mlstm":
+        h, new_cache = ssm.mlstm_train(bp["mixer"], cfg, h, return_state=True)
+    elif mixer == "slstm":
+        h, new_cache = ssm.slstm_train(bp["mixer"], cfg, h, return_state=True)
+    else:
+        raise ValueError(mixer)
+    x = act.residual(x + h)
+    aux = {}
+    if cross_kv is not None:
+        h = rms_norm(x, bp["norm_x"], cfg.norm_eps)
+        x = x + attn.cross_attn(bp["cross"], cfg, h, cross_kv)
+    if "ffn" in bp:
+        h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+        if "router" in bp["ffn"]:
+            h, aux = moe_mod.moe(bp["ffn"], cfg, h)
+        else:
+            h = ffn_mod.mlp(bp["ffn"], cfg, h)
+        x = act.residual(x + h)
+    return x, new_cache, aux
+
+
+def _apply_block_decode(cfg: ArchConfig, bp: dict, mixer: str, f: str, x,
+                        pos, cache, cos, sin, cross_kv=None):
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    if mixer in ("attn", "swa"):
+        h, cache = attn.attn_decode(bp["mixer"], cfg, h, pos, cache, cos, sin)
+    elif mixer == "mamba":
+        h, cache = ssm.mamba_decode(bp["mixer"], cfg, h, cache)
+    elif mixer == "mlstm":
+        h, cache = ssm.mlstm_decode(bp["mixer"], cfg, h, cache)
+    elif mixer == "slstm":
+        h, cache = ssm.slstm_decode(bp["mixer"], cfg, h, cache)
+    x = act.residual(x + h)
+    if cross_kv is not None:
+        h = rms_norm(x, bp["norm_x"], cfg.norm_eps)
+        x = x + attn.cross_attn(bp["cross"], cfg, h, cross_kv)
+    if "ffn" in bp:
+        h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+        if "router" in bp["ffn"]:
+            h, _ = moe_mod.moe(bp["ffn"], cfg, h)
+        else:
+            h = ffn_mod.mlp(bp["ffn"], cfg, h)
+        x = act.residual(x + h)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Stack application
+# ---------------------------------------------------------------------------
+
+def _zero_aux():
+    return {"load_balance": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32),
+            "drop_frac": jnp.zeros((), jnp.float32)}
+
+
+def _acc_aux(acc, aux):
+    if not aux:
+        return acc
+    return {k: acc[k] + aux.get(k, 0.0) for k in acc}
+
+
+def apply_units_train(cfg: ArchConfig, params: PyTree, x, cos, sin,
+                      cross_kvs=None, causal=True):
+    """Scan the unit stack in train/prefill (no cache) mode."""
+    aux0 = _zero_aux()
+
+    def unit_body(carry, xs):
+        x, acc = carry
+        unit_params, unit_cross = xs
+        for j, (mixer, f) in enumerate(cfg.pattern):
+            ckv = None if unit_cross is None else unit_cross[f"b{j}"]
+            x, aux = _apply_block_train(
+                cfg, unit_params[f"b{j}"], mixer, f, x, cos, sin,
+                cross_kv=ckv, causal=causal)
+            acc = _acc_aux(acc, aux)
+        return (x, acc), None
+
+    body = jax.checkpoint(unit_body)
+    xs = (params["units"],
+          cross_kvs if cross_kvs is not None
+          else _none_like_units(cfg))
+    (x, acc), _ = jax.lax.scan(body, (x, aux0), xs, unroll=_unroll())
+    return x, acc
+
+
+def _none_like_units(cfg: ArchConfig):
+    # scan requires a pytree with a leading axis; use per-unit None markers
+    return {f"b{j}": None for j in range(len(cfg.pattern))}
+
+
+def apply_units_prefill(cfg: ArchConfig, params: PyTree, x, cos, sin,
+                        caches, cross_kvs=None):
+    """Scan the unit stack in parallel-prefill mode: full-sequence compute
+    plus cache fill. Returns (x, new_caches, aux)."""
+    aux0 = _zero_aux()
+
+    def unit_body(carry, xs):
+        x, acc = carry
+        unit_params, unit_cache, unit_cross = xs
+        new_cache = {}
+        for j, (mixer, f) in enumerate(cfg.pattern):
+            ckv = None if unit_cross is None else unit_cross[f"b{j}"]
+            x, c, aux = _apply_block_prefill(
+                cfg, unit_params[f"b{j}"], mixer, f, x, cos, sin,
+                unit_cache[f"b{j}"], cross_kv=ckv)
+            new_cache[f"b{j}"] = c
+            acc = _acc_aux(acc, aux)
+        return (x, acc), new_cache
+
+    xs = (params["units"], caches,
+          cross_kvs if cross_kvs is not None else _none_like_units(cfg))
+    (x, acc), new_caches = jax.lax.scan(
+        jax.checkpoint(unit_body), (x, aux0), xs, unroll=_unroll())
+    return x, new_caches, acc
+
+
+def apply_dense_prefix_prefill(cfg: ArchConfig, params: PyTree, x, cos, sin,
+                               caches):
+    if "dense_blocks" not in params:
+        return x, caches
+    def body(x, xs):
+        bp, c = xs
+        x, c2, _ = _apply_block_prefill(cfg, bp, "attn", "mlp", x, cos, sin, c)
+        return x, c2
+    x, new = jax.lax.scan(jax.checkpoint(body), x,
+                          (params["dense_blocks"], caches), unroll=_unroll())
+    return x, new
+
+
+def apply_units_decode(cfg: ArchConfig, params: PyTree, x, pos, caches,
+                       cos, sin, cross_kvs=None):
+    def unit_body(x, xs):
+        unit_params, unit_cache, unit_cross = xs
+        new_cache = {}
+        for j, (mixer, f) in enumerate(cfg.pattern):
+            ckv = None if unit_cross is None else unit_cross[f"b{j}"]
+            x, c = _apply_block_decode(
+                cfg, unit_params[f"b{j}"], mixer, f, x, pos,
+                unit_cache[f"b{j}"], cos, sin, cross_kv=ckv)
+            new_cache[f"b{j}"] = c
+        return x, new_cache
+
+    xs = (params["units"], caches,
+          cross_kvs if cross_kvs is not None else _none_like_units(cfg))
+    x, new_caches = jax.lax.scan(unit_body, x, xs, unroll=_unroll())
+    return x, new_caches
+
+
+def init_unit_caches(cfg: ArchConfig, batch: int, max_len: int,
+                     dtype) -> PyTree:
+    """Stacked (n_units, ...) cache pytree for the decode scan."""
+    def one(mixer):
+        if mixer in ("attn", "swa"):
+            return attn.init_cache(cfg, batch, max_len, dtype)
+        if mixer == "mamba":
+            return ssm.init_mamba_state(cfg, batch, dtype)
+        if mixer == "mlstm":
+            return ssm.init_mlstm_state(cfg, batch)
+        if mixer == "slstm":
+            return ssm.init_slstm_state(cfg, batch)
+        raise ValueError(mixer)
+
+    caches = {}
+    for j, (mixer, _) in enumerate(cfg.pattern):
+        c = one(mixer)
+        caches[f"b{j}"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_units,) + a.shape), c)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Dense prefix (deepseek first_k_dense) — tiny loop, not worth a scan
+# ---------------------------------------------------------------------------
+
+def apply_dense_prefix_train(cfg: ArchConfig, params: PyTree, x, cos, sin):
+    if "dense_blocks" not in params:
+        return x
+    def body(x, bp):
+        x, _ = _apply_block_train(cfg, bp, "attn", "mlp", x, cos, sin)
+        return x, None
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dense_blocks"],
+                        unroll=_unroll())
+    return x
+
+
+def apply_dense_prefix_decode(cfg: ArchConfig, params: PyTree, x, pos,
+                              caches, cos, sin):
+    if "dense_blocks" not in params:
+        return x, caches
+    def body(x, xs):
+        bp, c = xs
+        x, c2 = _apply_block_decode(cfg, bp, "attn", "mlp", x, pos, c,
+                                    cos, sin)
+        return x, c2
+    x, new = jax.lax.scan(body, x, (params["dense_blocks"], caches),
+                        unroll=_unroll())
+    return x, new
+
+
+def init_dense_prefix_caches(cfg: ArchConfig, batch: int, max_len: int,
+                             dtype):
+    if not cfg.first_k_dense:
+        return None
+    c = attn.init_cache(cfg, batch, max_len, dtype)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a, (cfg.first_k_dense,) + a.shape), c)
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder
+# ---------------------------------------------------------------------------
+
+def apply_encoder(cfg: ArchConfig, params: PyTree, audio_embed):
+    """audio_embed (B, F, D) — stub frontend output → encoder hidden."""
+    from repro.models.layers import sinusoidal_positions
+    x = audio_embed @ params["audio_proj"]
+    pe = jnp.asarray(sinusoidal_positions(x.shape[1], cfg.d_model),
+                     x.dtype)
+    x = x + pe
+
+    def body(x, bp):
+        x, _ = _apply_block_train(cfg, bp, "attn", "mlp", x, None, None,
+                                  causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["encoder_blocks"],
+                        unroll=_unroll())
+    return rms_norm(x, params["enc_norm_f"], cfg.norm_eps)
+
+
+def encoder_cross_kvs(cfg: ArchConfig, params: PyTree, enc_out):
+    """Per-unit, per-position cross K/V stacks (computed once per request)."""
+    def per_stacked(block_stack):
+        return jax.vmap(
+            lambda bp: attn.cross_kv(bp["cross"], cfg, enc_out)
+        )(block_stack)
+
+    return {f"b{j}": per_stacked(params["units"][f"b{j}"])
+            for j in range(len(cfg.pattern))}

@@ -1,0 +1,7 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adam,
+    momentum,
+    sgd,
+)
+from repro.optim.schedules import constant, cosine_decay, step_decay  # noqa: F401

@@ -1,0 +1,118 @@
+"""Minimal pytree optimizers (no optax dependency).
+
+The paper's workers use Momentum (ResNet50-FIXUP) and Adam (U-Net) with
+per-worker private hyper-parameters; the fed runtime instantiates one of
+these per worker. API mirrors optax: ``init(params) -> state``,
+``update(grads, state, params, lr) -> (updates, state)`` with updates to be
+*added* to params.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import PyTree
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]
+
+
+class MomentumState(NamedTuple):
+    velocity: PyTree
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        updates = jax.tree_util.tree_map(lambda g: -lr * g, grads)
+        return updates, state
+
+    return Optimizer("sgd", init, update)
+
+
+def momentum(decay: float = 0.9, nesterov: bool = False,
+             accum_dtype=jnp.float32) -> Optimizer:
+    """Heavy-ball momentum (Qian 1999) — the paper's ResNet optimizer."""
+
+    def init(params):
+        return MomentumState(
+            velocity=jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+        )
+
+    def update(grads, state, params, lr):
+        vel = jax.tree_util.tree_map(
+            lambda v, g: decay * v + g.astype(accum_dtype), state.velocity, grads
+        )
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda v, g: -lr * (decay * v + g.astype(accum_dtype)), vel, grads
+            )
+        else:
+            upd = jax.tree_util.tree_map(lambda v: -lr * v, vel)
+        upd = jax.tree_util.tree_map(_cast_like, upd, params)
+        return upd, MomentumState(velocity=vel)
+
+    return Optimizer("momentum", init, update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         accum_dtype=jnp.float32) -> Optimizer:
+    """Adam (Kingma & Ba 2015) — the paper's U-Net optimizer."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, accum_dtype)
+        return AdamState(
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+            count=jnp.zeros((), jnp.int32),
+        )
+
+    def update(grads, state, params, lr):
+        count = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(accum_dtype),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g.astype(accum_dtype)),
+            state.nu, grads)
+        c = count.astype(accum_dtype)
+        mu_hat_scale = 1.0 / (1 - b1 ** c)
+        nu_hat_scale = 1.0 / (1 - b2 ** c)
+        upd = jax.tree_util.tree_map(
+            lambda m, n: -lr * (m * mu_hat_scale)
+            / (jnp.sqrt(n * nu_hat_scale) + eps),
+            mu, nu)
+        upd = jax.tree_util.tree_map(_cast_like, upd, params)
+        return upd, AdamState(mu=mu, nu=nu, count=count)
+
+    return Optimizer("adam", init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
+
+
+def get(name: str, **kw) -> Optimizer:
+    table = {"sgd": sgd, "momentum": momentum, "adam": adam}
+    return table[name](**kw)

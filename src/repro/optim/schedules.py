@@ -1,0 +1,36 @@
+"""Learning-rate schedules.
+
+The paper (§5.1): initial lr 0.01 for all workers with *step-based decay
+driven by the local dataset size* — which is what makes worker lrs
+heterogeneous (and private) after a few epochs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(lr0: float, decay: float = 0.5, every: int = 1000):
+    """lr0 * decay^(step // every) — the paper's per-worker decay; ``every``
+    is derived from the worker's local dataset size so it differs per worker."""
+    def fn(step):
+        return jnp.asarray(lr0, jnp.float32) * (decay ** (step // every))
+    return fn
+
+
+def cosine_decay(lr0: float, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return floor + 0.5 * (lr0 - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return fn
+
+
+def warmup_cosine(lr0: float, warmup: int, total_steps: int, floor: float = 0.0):
+    cos = cosine_decay(lr0, max(total_steps - warmup, 1), floor)
+    def fn(step):
+        w = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0) * lr0
+        return jnp.where(step < warmup, w, cos(step - warmup))
+    return fn

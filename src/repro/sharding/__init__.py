@@ -1,0 +1,6 @@
+from repro.sharding.specs import (  # noqa: F401
+    param_specs,
+    batch_spec,
+    cache_specs,
+    data_axes,
+)

@@ -1,0 +1,244 @@
+"""PartitionSpec rules: FSDP + tensor-parallel layout for the model zoo.
+
+Conventions (see models/*):
+  * block params are stacked along a leading ``units`` axis (scanned) —
+    that axis is never sharded;
+  * column-parallel weights (D, F): D→data axes (FSDP), F→model axis;
+  * row-parallel weights (F, D): F→model, D→data;
+  * MoE expert stacks (E, D, F): expert-parallel over 'model' when E divides
+    the model-axis size, else tensor-parallel inside each expert;
+  * embeddings: vocab over 'model' (in), lm_head vocab over 'model' (out,
+    Megatron-style sharded logits), other dim over data axes;
+  * norms/scalars: replicated.
+
+Multi-pod: the data shards span ('pod', 'data') — full FSDP across all chips.
+The fed runtime instead keeps distinct per-worker values along an explicit
+leading fed axis (see fed/distributed.py); these rules cover the plain
+data/tensor-parallel path.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The axes that jointly play the 'data/FSDP' role."""
+    names = mesh.axis_names
+    return tuple(a for a in names if a in ("pod", "data"))
+
+
+def _ax(axes):
+    """Normalize a 1-tuple of axis names to the bare name."""
+    if isinstance(axes, tuple) and len(axes) == 1:
+        return axes[0]
+    return axes
+
+
+def _div(n: int, axis_size: int) -> bool:
+    return axis_size > 0 and n % axis_size == 0
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+# Leaf-name regexes → role. First match wins.
+_RULES: list[tuple[str, str]] = [
+    (r"(^|/)embed$", "embed"),
+    (r"(^|/)lm_head$", "lm_head"),
+    (r"(^|/)(wq|wk|wv|w_gate|w_up|in_proj|dt_proj|up_proj|audio_proj|patch_proj)$", "col"),
+    (r"(^|/)(wo|w_down|out_proj)$", "row"),
+    (r"(^|/)router$", "router"),
+    (r"(^|/)experts_(gate|up)$", "expert_col"),
+    (r"(^|/)experts_down$", "expert_row"),
+    (r"(^|/)(x_proj)$", "row"),          # (d_inner, k): d_inner is model-sharded
+    (r"(^|/)(A_log)$", "ssm_state"),     # (d_inner, d_state)
+    (r"(^|/)(conv_w)$", "conv"),         # (d_conv, d_inner)
+    (r"(^|/)(D_skip|dt_bias|conv_b)$", "vec_model"),  # (d_inner,)
+    (r"(^|/)(q_norm|k_norm|norm|norm1|norm2|norm3|norm_f|scale|bias|gates_b)$", "rep"),
+    (r"(^|/)(gates_w)$", "col"),         # lstm gate projections (D, k*di)
+    (r"(^|/)(r_gates_w)$", "lstm_rec"),  # slstm recurrent (di, k*di)
+]
+
+
+def _role(path: str) -> str:
+    for pat, role in _RULES:
+        if re.search(pat, path):
+            return role
+    return "auto"
+
+
+def _spec_for(role: str, shape: tuple[int, ...], mesh: Mesh,
+              stacked: bool) -> P:
+    """Build a PartitionSpec for the *unstacked* trailing dims, then prepend
+    None for the units axis if stacked."""
+    dp = data_axes(mesh)
+    dp_sz = _axis_size(mesh, dp)
+    mp_sz = mesh.shape.get("model", 1)
+    dims = shape[1:] if stacked else shape
+    nd = len(dims)
+
+    def fits(i, sz):
+        return _div(dims[i], sz)
+
+    spec: list = [None] * nd
+    if role == "embed" and nd == 2:                      # (V, D)
+        if fits(0, mp_sz):
+            spec[0] = "model"
+        if fits(1, dp_sz):
+            spec[1] = _ax(dp)
+    elif role == "lm_head" and nd == 2:                  # (D, V)
+        if fits(0, dp_sz):
+            spec[0] = _ax(dp)
+        if fits(1, mp_sz):
+            spec[1] = "model"
+    elif role == "col" and nd == 2:                      # (D, F)
+        if fits(0, dp_sz):
+            spec[0] = _ax(dp)
+        if fits(1, mp_sz):
+            spec[1] = "model"
+    elif role == "row" and nd == 2:                      # (F, D)
+        if fits(0, mp_sz):
+            spec[0] = "model"
+        if fits(1, dp_sz):
+            spec[1] = _ax(dp)
+    elif role == "router" and nd == 2:                   # (D, E)
+        if fits(0, dp_sz):
+            spec[0] = _ax(dp)
+    elif role in ("expert_col", "expert_row") and nd == 3:  # (E, D, F)/(E, F, D)
+        if fits(0, mp_sz):                               # expert-parallel
+            spec[0] = "model"
+            inner = 1 if role == "expert_col" else 2     # the D dim
+            if fits(inner, dp_sz):
+                spec[inner] = _ax(dp)
+        else:
+            # tensor-parallel experts. The FSDP shard rides on the F dim
+            # together with 'model' — sharding the CONTRACTION dim (D for
+            # gate/up, F itself is contracted in down but gathered first)
+            # over 'data' makes XLA emit partial-sum all-reduces of
+            # (E, C, ·)-sized activations (observed: 9 TB/device on grok);
+            # F-sharded weights instead all-gather ~MBs of weights.
+            f_axes = ("model",) + dp
+            if role == "expert_col":                     # (E, D, F)
+                if fits(2, mp_sz * dp_sz):
+                    spec[2] = f_axes
+                elif fits(2, mp_sz):
+                    spec[2] = "model"
+            else:                                        # (E, F, D)
+                if fits(1, mp_sz * dp_sz):
+                    spec[1] = f_axes
+                elif fits(1, mp_sz):
+                    spec[1] = "model"
+    elif role == "ssm_state" and nd == 2:                # (d_inner, d_state)
+        if fits(0, mp_sz):
+            spec[0] = "model"
+    elif role == "conv" and nd == 2:                     # (d_conv, d_inner)
+        if fits(1, mp_sz):
+            spec[1] = "model"
+    elif role == "vec_model" and nd == 1:
+        if fits(0, mp_sz):
+            spec[0] = "model"
+    elif role == "lstm_rec" and nd == 2:                 # (di, k*di)
+        if fits(1, mp_sz):
+            spec[1] = "model"
+    elif role == "rep":
+        pass
+    else:  # auto: shard the last dim over model, the first over data
+        if nd >= 1 and fits(nd - 1, mp_sz):
+            spec[nd - 1] = "model"
+        if nd >= 2 and fits(0, dp_sz):
+            spec[0] = _ax(dp)
+
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def param_specs(params: PyTree, mesh: Mesh,
+                stacked_prefixes: tuple[str, ...] = ("blocks", "units",
+                                                     "encoder_blocks",
+                                                     "decoder_blocks")) -> PyTree:
+    """PartitionSpec pytree matching ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        p = _path_str(path)
+        stacked = any(p.startswith(pre + "/") or f"/{pre}/" in p
+                      for pre in stacked_prefixes)
+        specs.append(_spec_for(_role(p), tuple(leaf.shape), mesh, stacked))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh)
+    )
+
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """Tokens/labels (B, S, ...): shard B over the data axes if divisible."""
+    dp = data_axes(mesh)
+    if _div(batch, _axis_size(mesh, dp)):
+        return P(_ax(dp), *([None] * extra_dims))
+    # fall back to sharding over just 'data'
+    if _div(batch, mesh.shape.get("data", 1)):
+        return P("data", *([None] * extra_dims))
+    return P(*([None] * (1 + extra_dims)))
+
+
+def cache_specs(cache: PyTree, mesh: Mesh, batch: int) -> PyTree:
+    """KV / SSM state sharding. Rank-4 KV caches (B, S, H, dh): batch over
+    data axes when divisible, else sequence over data axes; heads over model
+    when divisible. Rank-3 SSM states (B, di, ds): di over model. Scalars
+    (positions) replicated."""
+    dp = data_axes(mesh)
+    dp_sz = _axis_size(mesh, dp)
+    mp_sz = mesh.shape.get("model", 1)
+
+    def spec(leaf):
+        s = leaf.shape
+        if leaf.ndim == 4:  # (B, S, H, dh)
+            b = _ax(dp) if _div(s[0], dp_sz) else None
+            seq = _ax(dp) if (b is None and _div(s[1], dp_sz)) else None
+            h = "model" if _div(s[2], mp_sz) else None
+            return P(b, seq, h, None)
+        if leaf.ndim == 3:  # (B, d_inner, d_state) or (B, d_conv, d_inner)
+            b = _ax(dp) if _div(s[0], dp_sz) else None
+            mid = "model" if _div(s[1], mp_sz) else None
+            last = None
+            if mid is None and _div(s[2], mp_sz):
+                last = "model"
+            return P(b, mid, last)
+        if leaf.ndim == 2:  # (B, d) lstm hidden
+            b = _ax(dp) if _div(s[0], dp_sz) else None
+            d = "model" if _div(s[1], mp_sz) else None
+            return P(b, d)
+        return P()
+
+    return jax.tree_util.tree_map(spec, cache)

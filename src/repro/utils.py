@@ -1,0 +1,98 @@
+"""Small shared utilities: pytree flattening, rng splitting, shape math."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+PyTree = Any
+
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total bytes of a pytree of arrays."""
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_ravel(tree: PyTree):
+    """Flatten a pytree to a 1-D vector; returns (vec, unravel_fn)."""
+    return ravel_pytree(tree)
+
+
+def tree_map(fn: Callable, *trees: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_weighted_sum(trees: Iterable[PyTree], weights) -> PyTree:
+    """sum_i w_i * tree_i  (used by FedAvg)."""
+    trees = list(trees)
+    out = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = tree_add(out, tree_scale(t, w))
+    return out
+
+
+def tree_allfinite(tree: PyTree):
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.all(jnp.stack(leaves))
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB", "PiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} EiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}"
+        n /= 1000.0
+    return f"{n:.2f}Q"
+
+
+def split_rngs(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def log2_int(x: int) -> int:
+    l = int(math.log2(x))
+    assert (1 << l) == x, f"{x} is not a power of two"
+    return l

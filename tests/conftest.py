@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the single host CPU device (the dry-run sets its own device
+# count in a separate process — see launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

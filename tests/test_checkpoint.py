@@ -1,0 +1,54 @@
+"""Checkpoint save/restore roundtrip + strictness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.checkpoint.checkpoint import latest_step
+
+
+def _tree():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "b": jnp.ones(4, jnp.bfloat16)},
+        "round": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), tree, step=3, metadata={"algo": "fedpc"})
+    restored, manifest = load_checkpoint(str(tmp_path), tree)
+    assert manifest["step"] == 3
+    assert manifest["metadata"]["algo"] == "fedpc"
+    for a, b in zip(jax.tree_util.tree_leaves(restored),
+                    jax.tree_util.tree_leaves(tree)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step_selection(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), tree, step=1)
+    save_checkpoint(str(tmp_path), tree, step=5)
+    assert latest_step(str(tmp_path)) == 5
+    _, manifest = load_checkpoint(str(tmp_path), tree)
+    assert manifest["step"] == 5
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), _tree(), step=0)
+    bad = _tree()
+    bad["params"]["w"] = jnp.zeros((4, 4))
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), bad)
+
+
+def test_missing_key_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), _tree(), step=0)
+    bad = _tree()
+    bad["extra"] = jnp.zeros(3)
+    with pytest.raises(KeyError):
+        load_checkpoint(str(tmp_path), bad)

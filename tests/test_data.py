@@ -1,0 +1,86 @@
+"""Federated data splits (Figs 2/3/5) + pipeline."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import BatchIterator, federated_loaders
+from repro.data.synthetic import (SyntheticClassification, SyntheticLM,
+                                  dirichlet_split, random_share_split,
+                                  sequence_split)
+
+
+def _labels(n=1000, c=10, seed=0):
+    return np.random.default_rng(seed).integers(0, c, n).astype(np.int64)
+
+
+def test_random_share_split_partition():
+    y = _labels()
+    splits = random_share_split(y, 5, seed=1)
+    allidx = np.concatenate(splits)
+    assert len(np.unique(allidx)) == len(allidx)          # disjoint
+    assert len(allidx) <= len(y)
+    # stratification: per-worker class histogram roughly proportional
+    for s in splits:
+        counts = np.bincount(y[s], minlength=10)
+        assert counts.min() > 0                            # every class present
+
+
+def test_random_share_split_imbalanced_sizes():
+    y = _labels(2000)
+    splits = random_share_split(y, 8, seed=3)
+    sizes = np.array([len(s) for s in splits])
+    assert sizes.std() > 0                                 # heterogeneous
+    assert sizes.min() > 0.3 / 8 * 2000 * 0.5              # bounded imbalance
+
+
+def test_dirichlet_split_nontrivial_skew():
+    y = _labels(3000)
+    iid = random_share_split(y, 6, seed=0)
+    noniid = dirichlet_split(y, 6, alpha=0.3, seed=0)
+    def skew(splits):
+        fracs = []
+        for s in splits:
+            h = np.bincount(y[s], minlength=10).astype(float)
+            h = h / max(h.sum(), 1)
+            fracs.append(h.std())
+        return np.mean(fracs)
+    assert skew(noniid) > skew(iid)                        # Table 4 setting
+    for s in noniid:
+        assert len(s) >= 2                                 # trainable
+
+
+@given(st.integers(2, 10), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_sequence_split_covers(n_workers, seed):
+    splits = sequence_split(200, n_workers, seed=seed)
+    assert len(splits) == n_workers
+    assert all(len(s) >= 1 for s in splits)
+    allidx = np.concatenate(splits)
+    assert len(np.unique(allidx)) == len(allidx)
+
+
+def test_batch_iterator_epoch():
+    x = np.arange(25)
+    it = BatchIterator((x,), batch_size=10, seed=0)
+    seen = np.concatenate([b[0] for b in it.epoch()])
+    assert sorted(seen.tolist()) == list(range(25))
+    assert it.steps_per_epoch() == 3
+
+
+def test_federated_loaders_private_batches():
+    x = np.arange(400).reshape(400, 1).astype(np.float32)
+    y = _labels(400)
+    splits = random_share_split(y, 4, seed=2)
+    loaders = federated_loaders((x, y), splits, seed=5)
+    assert len(loaders) == 4
+    assert {l.batch_size for l in loaders} <= {128, 64, 32, *{l.n for l in loaders}}
+
+
+def test_synthetic_tasks_learnable_shapes():
+    x, y = SyntheticClassification(n_samples=128, n_features=8,
+                                   n_classes=4).generate()
+    assert x.shape == (128, 8) and y.shape == (128,)
+    assert set(np.unique(y)) <= set(range(4))
+    toks = SyntheticLM(n_sequences=4, seq_len=16, vocab=32).generate()
+    assert toks.shape == (4, 16)
+    assert toks.min() >= 0 and toks.max() < 32

@@ -1,0 +1,51 @@
+"""Eq. (1) goodness + pilot selection properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.goodness import goodness, rotation_entropy, select_pilot
+
+
+def test_round1_inverse_cost_per_sample():
+    costs = jnp.array([1.0, 0.5])
+    sizes = jnp.array([100.0, 100.0])
+    g = goodness(costs, jnp.full((2,), jnp.inf), sizes, t=1)
+    assert g[1] > g[0]          # lower cost wins at equal size
+    k, _ = select_pilot(costs, jnp.full((2,), jnp.inf), sizes, 1)
+    assert int(k) == 1
+
+
+def test_later_rounds_reward_cost_reduction():
+    prev = jnp.array([1.0, 1.0, 1.0])
+    costs = jnp.array([0.9, 0.5, 1.1])   # worker 2 got worse
+    sizes = jnp.array([100.0, 100.0, 100.0])
+    g = goodness(costs, prev, sizes, t=2)
+    assert int(jnp.argmax(g)) == 1
+    assert float(g[2]) < 0               # regression → negative goodness
+
+
+def test_size_weighting():
+    """Same reduction, more data → higher goodness (paper's rationale)."""
+    prev = jnp.array([1.0, 1.0])
+    costs = jnp.array([0.8, 0.8])
+    sizes = jnp.array([1000.0, 10.0])
+    g = goodness(costs, prev, sizes, t=3)
+    assert g[0] > g[1]
+
+
+@given(st.integers(2, 8), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_pilot_in_range(n, seed):
+    rng = np.random.default_rng(seed)
+    costs = jnp.asarray(rng.uniform(0.1, 2.0, n), jnp.float32)
+    prev = jnp.asarray(rng.uniform(0.1, 2.0, n), jnp.float32)
+    sizes = jnp.asarray(rng.integers(1, 1000, n), jnp.float32)
+    k, scores = select_pilot(costs, prev, sizes, 2)
+    assert 0 <= int(k) < n
+    assert float(scores[int(k)]) == float(jnp.max(scores))
+
+
+def test_rotation_entropy():
+    flat = jnp.asarray([0, 1, 2, 3] * 5)
+    stuck = jnp.zeros(20, jnp.int32)
+    assert float(rotation_entropy(flat, 4)) > float(rotation_entropy(stuck, 4))

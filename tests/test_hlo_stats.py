@@ -1,0 +1,79 @@
+"""Loop-aware HLO analyzer on a synthetic module."""
+import pytest
+
+from repro.launch import hlo_stats
+
+HLO = """\
+%cond.1 (arg: (s32[], f32[8,8])) -> pred[] {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %gte = s32[] get-tuple-element(%arg), index=0
+  %c = s32[] constant(10)
+  ROOT %cmp = pred[] compare(%gte, %c), direction=LT
+}
+
+%body.2 (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %x = f32[8,8]{1,0} get-tuple-element(%arg), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %dot.5 = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%dot.5), replica_groups={{0,1,2,3}}, to_apply=%sum.9
+  %i = s32[] get-tuple-element(%arg), index=0
+  %one = s32[] constant(1)
+  %inc = s32[] add(%i, %one)
+  ROOT %tup = (s32[], f32[8,8]) tuple(%inc, %ar)
+}
+
+%sum.9 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %p0)
+  %loop = (s32[], f32[8,8]) while(%init), condition=%cond.1, body=%body.2
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%loop), index=1
+}
+"""
+
+
+def test_loop_multiplied_flops_and_collectives():
+    st = hlo_stats.analyze(HLO)
+    # dot: 2*8*8*8 = 1024 flops × 10 trips
+    assert st.flops == pytest.approx(10 * 1024)
+    # all-reduce: 8*8*4 = 256 B result, g=4 → 2*(3/4)*256 = 384 B × 10
+    assert st.collective_device_bytes == pytest.approx(10 * 384)
+    assert st.collective_counts["all-reduce"] == 10
+    assert 10 in st.loop_trip_counts.values()
+
+
+def test_entry_without_loops():
+    txt = """\
+ENTRY %main (p0: f32[4,4]) -> f32[4,4] {
+  %p0 = f32[4,4]{1,0} parameter(0)
+  ROOT %dot.1 = f32[4,4]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+    st = hlo_stats.analyze(txt)
+    assert st.flops == pytest.approx(2 * 4 * 4 * 4)
+    assert st.collective_device_bytes == 0
+
+
+def test_bytes_skip_fusion_internals():
+    txt = """\
+%fused_computation.1 (p: f32[1024,1024]) -> f32[1024,1024] {
+  %p = f32[1024,1024]{1,0} parameter(0)
+  %b = f32[1024,1024]{1,0} broadcast(%p), dimensions={0,1}
+  ROOT %m = f32[1024,1024]{1,0} multiply(%p, %b)
+}
+
+ENTRY %main (p0: f32[1024,1024]) -> f32[1024,1024] {
+  %p0 = f32[1024,1024]{1,0} parameter(0)
+  ROOT %f = f32[1024,1024]{1,0} fusion(%p0), kind=kLoop, calls=%fused_computation.1
+}
+"""
+    st = hlo_stats.analyze(txt)
+    # only the fusion op's operand+result counted: 4 MiB + 4 MiB
+    assert st.bytes == pytest.approx(2 * 1024 * 1024 * 4)

@@ -1,0 +1,72 @@
+"""Pallas kernels vs. pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(128,), (1000,), (8, 128), (64, 37), (3, 5, 7), (4096,), (2048, 2)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_ternary_encode_matches_ref(shape, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, shape, dtype)
+    p1 = jax.random.normal(k2, shape, dtype)
+    p2 = jax.random.normal(k3, shape, dtype)
+    out = ops.ternary_encode(q, p1, p2, 0.2, interpret=True)
+    want = ref.ternary_encode_ref(q, p1, p2, 0.2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_ternary_round1_matches_ref(shape):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    q = jax.random.normal(k1, shape)
+    p0 = jax.random.normal(k2, shape)
+    out = ops.ternary_encode_round1(q, p0, 0.01, interpret=True)
+    want = ref.ternary_encode_round1_ref(q, p0, 0.01)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [4, 16, 128, 1000, 4096, 9999])
+def test_pack_unpack_matches_ref(n):
+    t = jnp.asarray(
+        np.random.default_rng(n).integers(-1, 2, n), jnp.int8)
+    packed = ops.pack2bit(t, interpret=True)
+    pad = (-n) % 4
+    want = ref.pack2bit_ref(jnp.concatenate(
+        [t, jnp.zeros((pad,), jnp.int8)]) if pad else t)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(want))
+    out = ops.unpack2bit(packed, n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(t))
+
+
+@pytest.mark.parametrize("n_workers", [2, 4, 8, 16])
+@pytest.mark.parametrize("m", [128, 1000, 5000])
+def test_master_update_matches_ref(n_workers, m):
+    rng = np.random.default_rng(n_workers * m)
+    q = jnp.asarray(rng.normal(size=m), jnp.float32)
+    p1 = jnp.asarray(rng.normal(size=m), jnp.float32)
+    p2 = jnp.asarray(rng.normal(size=m), jnp.float32)
+    tern = jnp.asarray(rng.integers(-1, 2, (n_workers, m)), jnp.int8)
+    w = jnp.asarray(rng.uniform(0, 0.2, n_workers), jnp.float32)
+    out = ops.master_update(q, tern, w, p1, p2, interpret=True)
+    want = ref.master_update_ref(q, tern, w, p1, p2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_consistency_with_core():
+    """Kernel path == core (pytree) path on a realistic parameter tree."""
+    from repro.core.ternary import ternarize
+    k = jax.random.PRNGKey(7)
+    q = jax.random.normal(k, (333, 17))
+    p1 = jax.random.normal(jax.random.fold_in(k, 1), (333, 17))
+    p2 = jax.random.normal(jax.random.fold_in(k, 2), (333, 17))
+    np.testing.assert_array_equal(
+        np.asarray(ops.ternary_encode(q, p1, p2, 0.2, interpret=True)),
+        np.asarray(ternarize(q, p1, p2, 0.2)))

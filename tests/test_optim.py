@@ -1,0 +1,56 @@
+"""Optimizers + schedules: convergence on a quadratic, momentum/adam math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.optimizers import adam, apply_updates, get, momentum, sgd
+from repro.optim.schedules import constant, cosine_decay, step_decay, \
+    warmup_cosine
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam"])
+def test_quadratic_convergence(name):
+    opt = get(name)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    grad_fn = jax.grad(lambda p: jnp.sum(jnp.square(p["x"])))
+    lr = 0.1 if name != "adam" else 0.3
+    for _ in range(200):
+        g = grad_fn(params)
+        upd, state = opt.update(g, state, params, lr)
+        params = apply_updates(params, upd)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 1e-2
+
+
+def test_momentum_accumulates():
+    opt = momentum(decay=0.9)
+    params = {"x": jnp.zeros(1)}
+    state = opt.init(params)
+    g = {"x": jnp.ones(1)}
+    upd1, state = opt.update(g, state, params, 1.0)
+    upd2, state = opt.update(g, state, params, 1.0)
+    assert float(upd2["x"][0]) == pytest.approx(-1.9)     # 1 + 0.9
+
+
+def test_adam_bias_correction_first_step():
+    opt = adam()
+    params = {"x": jnp.zeros(1)}
+    state = opt.init(params)
+    upd, state = opt.update({"x": jnp.full(1, 0.5)}, state, params, 1e-3)
+    # first step ≈ -lr * sign(g)
+    assert float(upd["x"][0]) == pytest.approx(-1e-3, rel=1e-3)
+
+
+def test_schedules():
+    assert float(constant(0.1)(100)) == pytest.approx(0.1)
+    sd = step_decay(0.01, 0.5, every=10)
+    assert float(sd(0)) == pytest.approx(0.01)
+    assert float(sd(10)) == pytest.approx(0.005)
+    assert float(sd(25)) == pytest.approx(0.0025)
+    cd = cosine_decay(1.0, 100)
+    assert float(cd(0)) == pytest.approx(1.0)
+    assert float(cd(100)) == pytest.approx(0.0, abs=1e-6)
+    wc = warmup_cosine(1.0, 10, 110)
+    assert float(wc(5)) == pytest.approx(0.5)
+    assert float(wc(10)) == pytest.approx(1.0)

@@ -1,0 +1,48 @@
+"""2-bit wire format: roundtrip + size properties (§3.3, Eq. 8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import (PACK_FACTOR, pack2bit, pack_tree,
+                                packed_size, unpack2bit, unpack_tree)
+
+
+@given(st.lists(st.integers(-1, 1), min_size=1, max_size=300))
+@settings(max_examples=100, deadline=None)
+def test_roundtrip(codes):
+    t = jnp.asarray(codes, jnp.int8)
+    packed = pack2bit(t)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape[0] == packed_size(len(codes))
+    out = unpack2bit(packed, len(codes))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(t))
+
+
+def test_compression_ratio():
+    """4 codes per byte → 16× less than fp32 (the Eq. 8 constant)."""
+    n = 4096
+    assert packed_size(n) == n // PACK_FACTOR
+    assert (n * 4) / packed_size(n) == 16.0
+
+
+def test_tree_roundtrip():
+    tree = {
+        "w": jnp.asarray(np.random.default_rng(0).integers(-1, 2, (17, 5)),
+                         jnp.int8),
+        "b": jnp.asarray([1, -1, 0], jnp.int8),
+    }
+    packed, layout = pack_tree(tree)
+    out = unpack_tree(packed, layout)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_packed_is_opaque_without_layout():
+    """Sanity for the privacy argument: the packed buffer alone has no
+    structure information (only byte count)."""
+    t = jnp.asarray([1, 0, -1, 1, 0, 0, 1, -1], jnp.int8)
+    packed = pack2bit(t)
+    assert packed.ndim == 1
+    assert packed.size * PACK_FACTOR >= t.size

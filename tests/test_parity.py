@@ -1,0 +1,107 @@
+"""Numerical parity: train-mode forward vs parallel prefill vs sequential
+decode — the serving path must produce the training distribution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+
+# one representative per mixer family
+ARCHS = ["qwen3-14b", "jamba-1.5-large-398b", "xlstm-350m",
+         "deepseek-moe-16b", "whisper-medium", "qwen2-vl-7b"]
+B, S = 2, 16
+
+
+def _batch(cfg):
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)}
+    if cfg.mrope:
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+    if cfg.is_encdec:
+        batch["audio_embed"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_frames, cfg.d_model))
+    # NOTE: no vision_embed here — the sequential-prefill oracle embeds
+    # token-by-token and cannot inject patch embeddings; the vision path is
+    # covered by test_models_smoke (parallel prefill + decode).
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_parallel_vs_sequential(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:
+        cfg = cfg.replace(capacity_factor=8.0)  # no drops → exact parity
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    st0 = m.init_decode_state(B, 2 * S)
+    lg_p, st_p = m.prefill(params, batch, st0)
+    lg_s, st_s = m.prefill_sequential(params, batch, st0)
+    np.testing.assert_allclose(
+        np.asarray(lg_p, np.float32), np.asarray(lg_s, np.float32),
+        rtol=2e-4, atol=2e-4)
+
+    sb = {"token": jnp.zeros((B, 1), jnp.int32),
+          "pos": jnp.asarray(S, jnp.int32)}
+    if cfg.mrope:
+        sb["positions"] = jnp.full((3, B, 1), S, jnp.int32)
+    d_p, _ = m.decode_step(params, st_p, sb)
+    d_s, _ = m.decode_step(params, st_s, sb)
+    np.testing.assert_allclose(
+        np.asarray(d_p, np.float32), np.asarray(d_s, np.float32),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_swa_ring_cache_matches_window_attention():
+    """Sliding-window decode with a ring cache == full attention restricted
+    to the window."""
+    cfg = get_config("mistral-nemo-12b").reduced()   # window 64
+    cfg = cfg.replace(sliding_window=8)
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    total = 24                                       # > window → wraps
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, total), 0, cfg.vocab)
+
+    # sequential decode through the ring cache
+    state = m.init_decode_state(1, cfg.sliding_window)
+    outs = []
+    for t in range(total):
+        sb = {"token": toks[:, t:t + 1], "pos": jnp.asarray(t, jnp.int32)}
+        lg, state = m.decode_step(params, state, sb)
+        outs.append(lg)
+    ring_last = np.asarray(outs[-1], np.float32)
+
+    # oracle: full prefill with the window mask
+    st0 = m.init_decode_state(1, total)
+    lg_full, _ = m.prefill(params, {"tokens": toks}, st0)
+    np.testing.assert_allclose(ring_last, np.asarray(lg_full, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_blocked_attention_matches_full():
+    """Flash-style blocked attention (attention.ATTN_BLOCK) is exact vs the
+    materialized-score path, causal and sliding-window."""
+    import jax
+    from repro.models import attention as A
+    from repro.models.layers import rope_cos_sin
+
+    cfg = get_config("qwen3-14b").reduced()
+    p = A.init_attention(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 256, cfg.d_model))
+    cos, sin = rope_cos_sin(jnp.arange(256)[None], cfg.resolved_head_dim,
+                            cfg.rope_theta)
+    try:
+        for window in (None, 64):
+            cfgw = cfg.replace(sliding_window=window)
+            A.set_attn_block(None)
+            y_full = A.attn_train(p, cfgw, x, cos, sin)
+            A.set_attn_block(32)
+            y_blk = A.attn_train(p, cfgw, x, cos, sin)
+            np.testing.assert_allclose(
+                np.asarray(y_full, np.float32), np.asarray(y_blk, np.float32),
+                rtol=1e-4, atol=1e-5)
+    finally:
+        A.set_attn_block(None)

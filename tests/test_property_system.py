@@ -1,0 +1,99 @@
+"""System-level invariants (hypothesis): the perf-path reformulations are
+exact re-expressions of the reference math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import ssm
+from repro.models.moe import init_moe, moe
+from repro.models.ssm import init_mamba, mamba_train
+
+
+@given(st.sampled_from([32, 64, 128]), st.integers(0, 5))
+@settings(max_examples=6, deadline=None)
+def test_mamba_chunk_invariance(seq, seed):
+    """The chunked selective scan is invariant to the chunk size."""
+    cfg = get_config("jamba-1.5-large-398b").reduced()
+    p = init_mamba(cfg, jax.random.PRNGKey(seed))
+    x = jax.random.normal(jax.random.PRNGKey(seed + 100),
+                          (2, seq, cfg.d_model))
+    outs = [np.asarray(mamba_train(p, cfg, x, chunk=c))
+            for c in (8, 16, seq)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(0, 5))
+@settings(max_examples=6, deadline=None)
+def test_lstm_chunk_invariance(seed):
+    """Chunked-remat mLSTM/sLSTM == naive scan (values and grads)."""
+    cfg = get_config("xlstm-350m").reduced().replace(n_layers=2)
+    from repro.models import build_model
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(seed))
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(seed + 1), (2, 64), 0, cfg.vocab)}
+    try:
+        ssm.set_lstm_chunk(None)
+        l0, _ = m.loss(params, batch)
+        ssm.set_lstm_chunk(16)
+        l1, _ = m.loss(params, batch)
+    finally:
+        ssm.set_lstm_chunk(64)
+    assert abs(float(l0) - float(l1)) < 1e-5
+
+
+def test_moe_block_dispatch_matches_global():
+    """Shard-local dispatch with s blocks == global dispatch when capacity
+    is not binding (the math is a permutation of buffer slots)."""
+    from repro.models import moe as moe_mod
+    from repro.sharding import activations as act
+
+    cfg = get_config("grok-1-314b").reduced().replace(capacity_factor=8.0)
+    p = init_moe(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+
+    y_global, _ = moe(p, cfg, x)          # off-mesh: s_blk == 1
+
+    orig = act.dp_size
+    try:
+        act.dp_size = lambda: 4           # pretend 4 data shards
+        y_block, _ = moe(p, cfg, x)
+    finally:
+        act.dp_size = orig
+    np.testing.assert_allclose(np.asarray(y_global), np.asarray(y_block),
+                               rtol=2e-5, atol=2e-5)
+
+
+@given(st.integers(2, 12), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_eq8_always_beats_fedavg_for_n_ge_2(n, seed):
+    """Eq. 8 star-topology bytes < 2VN for every N ≥ 2 (the paper's claim
+    domain) and the reduction is increasing in N."""
+    from repro.core.protocol import fedavg_bytes_per_round, \
+        fedpc_bytes_per_round
+    v = 1e6 * (1 + seed)
+    assert fedpc_bytes_per_round(v, n) < fedavg_bytes_per_round(v, n)
+
+
+def test_ring_cache_slot_semantics():
+    """Property of the SWA ring: after decoding T > window tokens, the
+    cache holds exactly the last `window` keys, each in slot pos % window."""
+    from repro.models.attention import init_attention, attn_decode
+    from repro.models.layers import rope_cos_sin
+    cfg = get_config("mistral-nemo-12b").reduced().replace(sliding_window=8)
+    p = init_attention(cfg, jax.random.PRNGKey(0))
+    cache = {"k": jnp.zeros((1, 8, cfg.n_kv_heads, cfg.resolved_head_dim)),
+             "v": jnp.zeros((1, 8, cfg.n_kv_heads, cfg.resolved_head_dim))}
+    seen = {}
+    for t in range(20):
+        x = jax.random.normal(jax.random.PRNGKey(t), (1, 1, cfg.d_model))
+        cos, sin = rope_cos_sin(jnp.full((1, 1), t), cfg.resolved_head_dim,
+                                cfg.rope_theta)
+        _, cache = attn_decode(p, cfg, x, jnp.asarray(t), cache, cos, sin)
+        seen[t % 8] = t
+    # every slot was last written by the expected position
+    assert sorted(seen.values()) == list(range(12, 20))

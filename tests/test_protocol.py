@@ -1,0 +1,35 @@
+"""Eq. (8) communication model — including the paper's headline numbers."""
+import pytest
+
+from repro.core.protocol import (CommLedger, fedavg_bytes_per_round,
+                                 fedpc_bytes_per_round, phong_bytes_per_round,
+                                 reduction_vs_fedavg)
+
+
+def test_eq8_formula():
+    V, N = 35e6, 10     # ResNet50-FIXUP instance size used in the paper
+    d = fedpc_bytes_per_round(V, N)
+    assert d == V * (N + 1) + V * (N - 1) / 16
+
+
+def test_paper_reduction_endpoints():
+    """§5.2: 'at least 31.25%' (N→3) and 'up to 42.20%' (N=10)."""
+    assert reduction_vs_fedavg(35e6, 10) == pytest.approx(0.422, abs=2e-3)
+    assert reduction_vs_fedavg(35e6, 3) == pytest.approx(0.3125, abs=0.021)
+    # monotone in N
+    reds = [reduction_vs_fedavg(1.0, n) for n in range(3, 11)]
+    assert all(b > a for a, b in zip(reds, reds[1:]))
+
+
+def test_fedavg_phong_equal():
+    assert fedavg_bytes_per_round(1e6, 7) == phong_bytes_per_round(1e6, 7)
+    assert fedavg_bytes_per_round(1e6, 7) == 2 * 1e6 * 7
+
+
+def test_ledger_accounting():
+    led = CommLedger()
+    rec = led.record_round(model_bytes=1000 * 4, n_workers=5, n_params=1000)
+    assert rec["downlink"] == 4000 * 5
+    assert rec["uplink_model"] == 4000
+    assert rec["uplink_ternary"] == 250 * 4     # 1000 codes → 250 B × 4 peers
+    assert led.total() == rec["total"]

@@ -1,0 +1,98 @@
+"""Parameter/batch/cache sharding rules (no devices needed — specs only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.specs import batch_spec, cache_specs, param_specs
+
+
+class FakeMesh:
+    """Duck-typed mesh: specs.py only touches .axis_names and .shape."""
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH_MP = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def test_col_row_rules():
+    params = {
+        "units": {"b0": {
+            "mixer": {"wq": _sds((2, 5120, 4096)), "wo": _sds((2, 4096, 5120))},
+            "ffn": {"w_up": _sds((2, 5120, 14336)),
+                    "w_down": _sds((2, 14336, 5120))},
+            "norm1": _sds((2, 5120)),
+        }},
+        "embed": _sds((131072, 5120)),
+        "lm_head": _sds((5120, 131072)),
+    }
+    specs = param_specs(params, MESH)
+    b0 = specs["units"]["b0"]
+    assert b0["mixer"]["wq"] == P(None, "data", "model")
+    assert b0["mixer"]["wo"] == P(None, "model", "data")
+    assert b0["ffn"]["w_down"] == P(None, "model", "data")
+    assert b0["norm1"] == P(None, None)                # replicated
+    assert specs["embed"] == P("model", "data")
+    assert specs["lm_head"] == P("data", "model")
+
+
+def test_expert_rules_divisible_vs_not():
+    # 64 experts: expert-parallel over model
+    p64 = {"units": {"b0": {"ffn": {
+        "experts_gate": _sds((2, 64, 2048, 1408)),
+        "experts_down": _sds((2, 64, 1408, 2048)),
+    }}}}
+    s = param_specs(p64, MESH)["units"]["b0"]["ffn"]
+    assert s["experts_gate"][1] == "model"
+    # 8 experts: tensor-parallel inside each expert — the FSDP shard rides
+    # on the F dim together with 'model' (contraction dims stay unsharded;
+    # EXPERIMENTS.md §Perf 0)
+    p8 = {"units": {"b0": {"ffn": {
+        "experts_gate": _sds((2, 8, 6144, 32768)),
+        "experts_down": _sds((2, 8, 32768, 6144)),
+    }}}}
+    s8 = param_specs(p8, MESH)["units"]["b0"]["ffn"]
+    assert s8["experts_gate"][1] is None
+    assert s8["experts_gate"][2] is None        # contraction dim unsharded
+    assert s8["experts_gate"][3] == ("model", "data")
+    assert s8["experts_down"][2] == ("model", "data")
+
+
+def test_non_divisible_falls_back_to_replication():
+    params = {"units": {"b0": {"mixer": {"wq": _sds((2, 37, 53))}}}}
+    spec = param_specs(params, MESH)["units"]["b0"]["mixer"]["wq"]
+    assert spec == P(None, None, None)
+
+
+def test_batch_spec():
+    assert batch_spec(MESH, 256) == P("data", None)
+    assert batch_spec(MESH_MP, 256) == P(("pod", "data"), None)
+    assert batch_spec(MESH, 1) == P(None, None)        # long_500k B=1
+
+
+def test_cache_specs_kv_and_ssm():
+    cache = {
+        "kv": {"k": _sds((128, 32768, 8, 128), jnp.bfloat16)},
+        "ssm": {"h": _sds((128, 16384, 16))},
+        "b1": {"k": _sds((1, 524288, 8, 128), jnp.bfloat16)},
+    }
+    specs = cache_specs(cache, MESH, 128)
+    assert specs["kv"]["k"][0] == "data"            # batch sharded
+    assert specs["ssm"]["h"][1] == "model"             # channels sharded
+    # B=1: sequence dim takes the data axes
+    assert specs["b1"]["k"][0] is None
+    assert specs["b1"]["k"][1] == "data"
+
+
+def test_multipod_param_sharding():
+    params = {"units": {"b0": {"ffn": {"w_up": _sds((2, 8192, 24576))}}}}
+    spec = param_specs(params, MESH_MP)["units"]["b0"]["ffn"]["w_up"]
+    assert spec == P(None, ("pod", "data"), "model")

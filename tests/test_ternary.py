@@ -1,0 +1,67 @@
+"""Eq. (4)/(5) ternarization semantics + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ternary import (ternarize, ternarize_round1,
+                                ternarize_tree, ternary_density)
+
+RNG = np.random.default_rng(0)
+
+
+def test_round1_cases():
+    q = jnp.array([0.5, -0.5, 0.005, 0.011, -0.011])
+    p0 = jnp.zeros(5)
+    t = ternarize_round1(q, p0, alpha=0.01)
+    assert t.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(t), [1, -1, 0, 1, -1])
+
+
+def test_eq5_zero_when_insignificant():
+    p2 = jnp.zeros(4)
+    p1 = jnp.array([1.0, 1.0, 1.0, 1.0])        # step = 1
+    q = p1 + jnp.array([0.1, -0.1, 0.3, -0.3])  # beta=0.2 → |δ|>=0.2 significant
+    t = ternarize(q, p1, p2, beta=0.2)
+    np.testing.assert_array_equal(np.asarray(t), [0, 0, 1, -1])
+
+
+def test_eq5_direction_sign():
+    # step negative: same-direction (decreasing) → +1, reversal → -1
+    p2 = jnp.ones(2)
+    p1 = jnp.zeros(2)                   # step = -1 (decreasing)
+    q = jnp.array([-0.5, 0.5])
+    t = ternarize(q, p1, p2, beta=0.2)
+    np.testing.assert_array_equal(np.asarray(t), [1, -1])
+
+
+def test_values_always_ternary():
+    q = jnp.asarray(RNG.normal(size=1000), jnp.float32)
+    p1 = jnp.asarray(RNG.normal(size=1000), jnp.float32)
+    p2 = jnp.asarray(RNG.normal(size=1000), jnp.float32)
+    t = np.asarray(ternarize(q, p1, p2, 0.2))
+    assert set(np.unique(t)) <= {-1, 0, 1}
+
+
+@given(st.lists(st.floats(-10, 10, allow_nan=False), min_size=1, max_size=50),
+       st.floats(0.01, 0.99))
+@settings(max_examples=50, deadline=None)
+def test_antisymmetry(vals, beta):
+    """Reflecting q about p1 flips the code sign."""
+    q = jnp.asarray(vals, jnp.float32)
+    p1 = jnp.zeros_like(q) + 0.25
+    p2 = jnp.zeros_like(q) - 0.5
+    t1 = np.asarray(ternarize(q, p1, p2, beta))
+    t2 = np.asarray(ternarize(2 * p1 - q, p1, p2, beta))
+    np.testing.assert_array_equal(t1, -t2)
+
+
+def test_tree_api_and_density():
+    tree = {"a": jnp.ones((3, 3)), "b": jnp.zeros((5,))}
+    p1 = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    p2 = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    t = ternarize_tree(tree, p1, p2, 0.2)
+    assert t["a"].dtype == jnp.int8
+    # step = 0 → f = 0 → sign 0 ... but |δ| >= 0 threshold: significant, sign(0)=0
+    assert float(ternary_density(t["b"])) == 0.0

@@ -1,0 +1,76 @@
+"""Eq. (3) master update properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fedpc import FedPCConfig, init_state, master_round
+from repro.core.update import master_update, master_update_round1
+
+
+def test_zero_ternary_is_identity():
+    q = jnp.asarray(np.random.default_rng(0).normal(size=100), jnp.float32)
+    tern = jnp.zeros((4, 100), jnp.int8)
+    w = jnp.full((4,), 0.25)
+    betas = jnp.full((4,), 0.2)
+    p1 = jnp.ones(100)
+    p2 = jnp.zeros(100)
+    out = master_update(q, tern, w, betas, k_star=0, p_prev=p1, p_prev2=p2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(q), rtol=1e-6)
+
+
+def test_pilot_row_masked():
+    """The pilot's own ternary codes must not contribute."""
+    q = jnp.zeros(10)
+    tern = jnp.stack([jnp.ones(10, jnp.int8), jnp.zeros(10, jnp.int8)])
+    w = jnp.array([0.7, 0.3])
+    betas = jnp.array([0.2, 0.2])
+    p1, p2 = jnp.ones(10), jnp.zeros(10)
+    out = master_update(q, tern, w, betas, k_star=0, p_prev=p1, p_prev2=p2)
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-7)
+
+
+def test_round1_rule():
+    q = jnp.zeros(5)
+    tern = jnp.stack([jnp.full(5, -1, jnp.int8), jnp.ones(5, jnp.int8)])
+    shares = jnp.array([0.5, 0.5])
+    out = master_update_round1(q, tern, shares, k_star=0, alpha0=0.01)
+    # only worker 1 contributes: -alpha0 * 0.5 * (+1)
+    np.testing.assert_allclose(np.asarray(out), -0.005, rtol=1e-5)
+
+
+def test_update_direction_against_history():
+    """A +1 code (same direction as history step) pushes the parameter
+    further along the step; -1 pushes back (Fig. A.8)."""
+    q = jnp.zeros(2)
+    tern = jnp.stack([jnp.zeros(2, jnp.int8),
+                      jnp.asarray([1, -1], jnp.int8)])
+    w = jnp.array([0.5, 0.5])
+    betas = jnp.array([0.2, 0.2])
+    p1 = jnp.asarray([1.0, 1.0])
+    p2 = jnp.zeros(2)                    # step +1 in both dims
+    out = master_update(q, tern, w, betas, 0, p1, p2)
+    assert float(out[0]) < 0             # P = Q - w*T*step = -0.1
+    assert float(out[1]) > 0
+
+
+@given(st.integers(2, 6), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_master_round_consistency(n, seed):
+    """Full Alg.1 round: if every worker reports the same params equal to
+    the global model, the new global model equals it too (fixed point)."""
+    rng = np.random.default_rng(seed)
+    params = {"w": jnp.asarray(rng.normal(size=(4, 4)), jnp.float32)}
+    cfg = FedPCConfig(n_workers=n)
+    state = init_state(params, n)
+    # advance past round 1 so Eq.(5) thresholds apply with params_prev=params
+    state = state._replace(round=jnp.asarray(3),
+                           params_prev=params)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.stack([x] * n), params)
+    costs = jnp.asarray(rng.uniform(0.1, 1.0, n), jnp.float32)
+    sizes = jnp.asarray(rng.integers(10, 100, n), jnp.float32)
+    new_state, aux = master_round(cfg, state, stacked, costs, sizes)
+    for a, b in zip(jax.tree_util.tree_leaves(new_state.params),
+                    jax.tree_util.tree_leaves(params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
