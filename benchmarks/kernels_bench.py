@@ -1,8 +1,18 @@
 """Kernel micro-bench: latency of the FedPC round ops (interpret mode on
 CPU — correctness-weighted; TPU timings come from real hardware) and the
-equivalent jnp reference, plus per-parameter byte costs."""
+equivalent jnp reference, plus fused-vs-unfused flat wire path timings
+emitted to BENCH_kernels.json so the perf trajectory is tracked across PRs.
+
+NOTE on CPU numbers: interpret mode executes one Python step per grid tile,
+so wall time measures launch overhead, not HBM traffic — the fused win there
+shows up as HALF the grid steps (one kernel instead of two) rather than
+bandwidth. The no-int8-intermediate property is asserted structurally in
+tests/test_flat_wire.py via jaxpr inspection.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -10,10 +20,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
+from repro.kernels import fused_wire as fw
 from repro.kernels import ops, ref
+from repro.kernels import pack2bit as pk
+from repro.kernels import ternary_encode as te
 
 M = 1 << 20            # 1M params
 N_WORKERS = 8
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_kernels.json")
 
 
 def _bench(fn, *args, reps=3):
@@ -24,12 +39,84 @@ def _bench(fn, *args, reps=3):
     return (time.time() - t0) / reps * 1e6
 
 
+def _wire_inputs(m: int, key=0):
+    k = jax.random.PRNGKey(key)
+    q = jax.random.normal(k, (m,))
+    p1 = jax.random.normal(jax.random.fold_in(k, 1), (m,))
+    p2 = jax.random.normal(jax.random.fold_in(k, 2), (m,))
+    return q, p1, p2
+
+
+def _fused_vs_unfused(m: int, reps: int) -> dict:
+    """Flat wire path at m params: old two-kernel uplink vs ternary_pack,
+    old loop-and-stack master vs packed_master_update."""
+    q, p1, p2 = _wire_inputs(m)
+    rows = m // 128
+    r4 = rows // 4
+    # Single-tile launches: in interpret mode each grid step is a Python
+    # invocation, so per-step overhead swamps the memory-traffic signal at
+    # realistic (VMEM-sized) tiles. One tile per launch is the closest CPU
+    # analogue of compiled behaviour; TPU runs use the VMEM-sized defaults.
+    br = rows
+    br4 = r4
+    q2, p12, p22 = (x.reshape(rows, 128) for x in (q, p1, p2))
+    q4, p14, p24 = (x.reshape(r4, 512) for x in (q, p1, p2))
+
+    def unfused():
+        codes = te.ternary_encode_2d(q2, p12, p22, 0.2, interpret=True,
+                                     block_rows=br)
+        return pk.pack2bit_2d(codes.reshape(r4, 512), interpret=True,
+                              block_rows=br4)
+
+    def fused():
+        return fw.ternary_pack_2d(q4, p14, p24, 0.2, interpret=True,
+                                  block_rows=br4)
+
+    np.testing.assert_array_equal(np.asarray(unfused()), np.asarray(fused()))
+    up_unfused = _bench(unfused, reps=reps)
+    up_fused = _bench(fused, reps=reps)
+
+    # master side: N workers' wire buffers
+    tern = jax.random.randint(jax.random.PRNGKey(9), (N_WORKERS, m),
+                              -1, 2).astype(jnp.int8)
+    w = jnp.full((N_WORKERS,), 0.02)
+    packed = jnp.stack([ops.pack2bit(tern[k], interpret=True)
+                        for k in range(N_WORKERS)]).reshape(
+                            N_WORKERS, r4, 128)
+
+    def master_unfused():
+        # the old path: python loop of _to_2d per worker + stack + int8
+        # promotion inside master_update_2d
+        return ops.master_update(q, tern, w, p1, p2, interpret=True)
+
+    def master_fused():
+        return ops.flat_master_update(q2, packed, w, p12, p22, t=3,
+                                      alpha0=0.01, interpret=True,
+                                      block_rows=br4)
+
+    got = np.asarray(master_fused()).reshape(-1)
+    want = np.asarray(master_unfused())
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    ms_unfused = _bench(master_unfused, reps=reps)
+    ms_fused = _bench(master_fused, reps=reps)
+
+    return {
+        "params": m,
+        "uplink_unfused_us": up_unfused,
+        "uplink_fused_us": up_fused,
+        "uplink_speedup": up_unfused / up_fused,
+        "uplink_launches": {"unfused": 2, "fused": 1},
+        "master_unfused_us": ms_unfused,
+        "master_fused_us": ms_fused,
+        "master_speedup": ms_unfused / ms_fused,
+        "n_workers": N_WORKERS,
+        "mode": "cpu-interpret",
+    }
+
+
 def run() -> dict:
-    k = jax.random.PRNGKey(0)
-    q = jax.random.normal(k, (M,))
-    p1 = jax.random.normal(jax.random.fold_in(k, 1), (M,))
-    p2 = jax.random.normal(jax.random.fold_in(k, 2), (M,))
-    tern = jax.random.randint(jax.random.fold_in(k, 3),
+    q, p1, p2 = _wire_inputs(M)
+    tern = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(0), 3),
                               (N_WORKERS, M), -1, 2).astype(jnp.int8)
     w = jnp.full((N_WORKERS,), 0.02)
 
@@ -53,7 +140,27 @@ def run() -> dict:
     want = ref.master_update_ref(q, tern, w, p1, p2)
     err = float(jnp.max(jnp.abs(out - want)))
     emit("kernel_master_update_maxerr", 0.0, f"{err:.2e}")
-    return {}
+
+    # ---- fused flat wire path vs the old composition, 1M and 16M --------
+    results = []
+    for m, reps in ((1 << 20, 3), (1 << 24, 1)):
+        r = _fused_vs_unfused(m, reps)
+        results.append(r)
+        tag = f"{m // (1 << 20)}M"
+        emit(f"fused_uplink_{tag}", r["uplink_fused_us"],
+             f"unfused={r['uplink_unfused_us']:.0f}us "
+             f"speedup={r['uplink_speedup']:.2f}x launches=1v2")
+        emit(f"fused_master_{tag}_{N_WORKERS}w", r["master_fused_us"],
+             f"unfused={r['master_unfused_us']:.0f}us "
+             f"speedup={r['master_speedup']:.2f}x")
+
+    payload = {"bench": "fedpc_flat_wire_kernels",
+               "backend": jax.default_backend(),
+               "results": results}
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    emit("bench_kernels_json", 0.0, os.path.abspath(BENCH_JSON))
+    return payload
 
 
 if __name__ == "__main__":

@@ -1,0 +1,142 @@
+"""FlatParams — the single-buffer wire representation of a model pytree.
+
+The FedPC wire path (Eq. (4)/(5) ternarization, §3.3 2-bit packing, Eq. (3)
+master update) is elementwise over *every* parameter, so nothing about it is
+per-leaf. Flattening the whole pytree once into a single padded ``(rows, 128)``
+float32 buffer lets the fused Pallas kernels (``repro.kernels.fused_wire``)
+run the entire round's wire math in a handful of launches instead of four
+kernels × leaves × workers, and makes the packed buffer the thing that feeds
+collectives directly.
+
+Layout
+------
+Leaves are raveled in ``tree_flatten`` order and concatenated into one vector
+of ``n`` scalars, zero-padded to ``rows * 128`` with ``rows % ROW_MULTIPLE
+== 0``. ``ROW_MULTIPLE = 32`` guarantees every view the kernels need is
+aligned:
+
+* ``(rows, 128)``          — float32 buffer, 8-sublane aligned;
+* ``(rows // 4, 512)``     — the uplink kernel's input view (4 consecutive
+  codes per output byte, matching §3.3 / ``core.packing.pack2bit`` order);
+* ``(rows // 4, 128)``     — the packed uint8 wire buffer, lane-aligned.
+
+The zero padding is a fixed point of the whole wire path: ternarizing
+``q = p1 = p2 = 0`` yields code 0, and the master update maps a zero tail to
+a zero tail, so padded scalars never leak into real parameters.
+
+``FlatLayout`` is cached per (treedef, shapes, dtypes) so repeated rounds pay
+for layout computation once.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import PyTree, round_up
+
+LANES = 128
+ROW_MULTIPLE = 32          # keeps rows, rows//4 sublane-aligned (see above)
+PACK = 4                   # ternary codes per wire byte (§3.3)
+
+
+class FlatLayout(NamedTuple):
+    """Static description of how a pytree maps into the flat buffer."""
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    sizes: tuple[int, ...]
+    offsets: tuple[int, ...]   # start of each leaf in the flat vector
+    n: int                     # total real scalars
+    rows: int                  # padded buffer rows (rows % ROW_MULTIPLE == 0)
+
+    @property
+    def padded(self) -> int:
+        return self.rows * LANES
+
+    @property
+    def packed_rows(self) -> int:
+        """Rows of the (packed_rows, 128) uint8 wire buffer."""
+        return self.rows // PACK
+
+    @property
+    def packed_bytes(self) -> int:
+        """Exact §3.3 wire bytes for the *real* scalars (Eq. (8) accounting
+        is over ``n``, not the padded buffer)."""
+        return round_up(self.n, PACK) // PACK
+
+
+class FlatParams(NamedTuple):
+    """A model pytree flattened to one padded (rows, 128) float32 buffer."""
+    buf: jax.Array
+    layout: FlatLayout
+
+    @classmethod
+    def from_tree(cls, tree: PyTree, layout: FlatLayout | None = None
+                  ) -> "FlatParams":
+        layout = layout or layout_of(tree)
+        return cls(flatten_tree(tree, layout), layout)
+
+    def to_tree(self) -> PyTree:
+        return unflatten_tree(self.buf, self.layout)
+
+
+_layout_cache: dict = {}
+
+
+def layout_of(tree: PyTree) -> FlatLayout:
+    """Cached FlatLayout for a pytree (keyed on structure+shapes+dtypes)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    key = (treedef, shapes, dtypes)
+    hit = _layout_cache.get(key)
+    if hit is not None:
+        return hit
+    sizes = tuple(math.prod(s) for s in shapes)
+    offsets, off = [], 0
+    for s in sizes:
+        offsets.append(off)
+        off += s
+    n = off
+    rows = round_up(max(-(-n // LANES), 1), ROW_MULTIPLE)
+    layout = FlatLayout(treedef, shapes, dtypes, sizes, tuple(offsets),
+                        n, rows)
+    _layout_cache[key] = layout
+    return layout
+
+
+def flatten_tree(tree: PyTree, layout: FlatLayout) -> jax.Array:
+    """Pytree → padded (rows, 128) float32 buffer."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    flat = jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32) for l in leaves])
+    flat = jnp.pad(flat, (0, layout.padded - layout.n))
+    return flat.reshape(layout.rows, LANES)
+
+
+def unflatten_tree(buf: jax.Array, layout: FlatLayout) -> PyTree:
+    """Padded (rows, 128) buffer → pytree (leaves cast back to their dtypes)."""
+    flat = buf.reshape(-1)
+    leaves = [
+        jax.lax.slice(flat, (o,), (o + s,)).reshape(shape).astype(dt)
+        for o, s, shape, dt in zip(layout.offsets, layout.sizes,
+                                   layout.shapes, layout.dtypes)
+    ]
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def flatten_stacked(tree_F: PyTree, layout: FlatLayout) -> jax.Array:
+    """Pytree with (F, *shape) leaves → (F, rows, 128) float32 buffers.
+
+    Used by the distributed runtime where all fed workers' models arrive
+    stacked over the leading axis.
+    """
+    leaves = jax.tree_util.tree_leaves(tree_F)
+    f = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(f, -1).astype(jnp.float32) for l in leaves], axis=1)
+    flat = jnp.pad(flat, ((0, 0), (0, layout.padded - layout.n)))
+    return flat.reshape(f, layout.rows, LANES)

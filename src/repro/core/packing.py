@@ -12,6 +12,8 @@ the same transform as a Pallas TPU kernel.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -65,13 +67,12 @@ def pack_tree(t: PyTree) -> tuple[jax.Array, list]:
 
 def unpack_tree(packed: jax.Array, layout) -> PyTree:
     treedef, shapes = layout
-    n = sum(int(jnp.prod(jnp.array(s))) if s else 1 for s in shapes)
-    flat = unpack2bit(packed, n)
+    # math.prod: pure host arithmetic — the old jnp.prod forced a device
+    # sync per leaf just to compute a static size.
+    sizes = [math.prod(s) for s in shapes]
+    flat = unpack2bit(packed, sum(sizes))
     leaves, off = [], 0
-    for s in shapes:
-        size = 1
-        for d in s:
-            size *= d
+    for s, size in zip(shapes, sizes):
         leaves.append(flat[off : off + size].reshape(s))
         off += size
     return jax.tree_util.tree_unflatten(treedef, leaves)

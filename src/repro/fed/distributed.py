@@ -5,8 +5,10 @@ mesh axis ('data' on a single pod → up to 16 workers; 'pod' across pods).
 Within a worker slice the model is tensor-sharded over 'model' (kept as an
 *auto* axis — XLA SPMD handles it; only the fed axis is manual).
 
-The round sync is a ``shard_map`` over the fed axis so the wire format is
-explicit in the HLO:
+The round sync flattens the whole model pytree into ONE padded
+``FlatParams`` buffer (``repro.core.flat``) and runs a single ``shard_map``
+over it, so the wire format is explicit in the HLO and there is exactly one
+collective per round regardless of the number of leaves:
 
   fedpc:        all_gather(int8 ternary)           — faithful Eq. (3)-(5)
   fedpc_packed: all_gather(uint8 2-bit codes)      — beyond-paper: the
@@ -31,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import flat as fl
 from repro.core.goodness import select_pilot as _select_pilot
 from repro.core.packing import pack2bit, unpack2bit
 from repro.core.ternary import ternarize, ternarize_round1
@@ -40,67 +43,67 @@ from repro.utils import PyTree
 from repro.sharding.specs import param_specs
 
 
+def _shard_map(body, mesh, in_specs, out_specs, manual_axes):
+    """Version-portable shard_map (jax≥0.5 `jax.shard_map` vs 0.4 API)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=frozenset(manual_axes),
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    # 0.4's `auto` lowering chokes on axis_index under SPMD; the flat wire
+    # buffers are replicated over every non-fed axis anyway, so running the
+    # other axes manually too is equivalent.
+    return _sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 # ---------------------------------------------------------------------------
-# Sync strategies (shard_map bodies over the fed axis)
+# Sync strategies (shard_map bodies over the fed axis, on the flat buffer)
 # ---------------------------------------------------------------------------
 
-def _eq3_leaf(q_local, tern_all, w, k_star, p_prev, p_prev2, t, alpha0,
-              axis: str):
-    """Per-leaf Eq. (3) with fed-axis collectives.
+def _sync_fedpc_flat(q_buf, p_prev, p_prev2, *, k_star, w, t, alpha0, beta,
+                     alpha1, axis, mode):
+    """One worker's slice of the round sync, entirely on flat vectors.
 
-    q_local: (1, *shape) this worker's weights; tern_all: (F, *shape) int8.
+    q_buf: (1, n_pad) this worker's flattened weights; p_prev/p_prev2:
+    (n_pad,) replicated flattened history. Returns the (n_pad,) new global
+    flat model (identical on every instance).
     """
     idx = jax.lax.axis_index(axis)
+    q = q_buf[0]
+    # Eq. (4) at t == 1, Eq. (5) after — elementwise on the flat buffer.
+    tern = jnp.where(t <= 1,
+                     ternarize_round1(q, p_prev, alpha1),
+                     ternarize(q, p_prev, p_prev2, beta))
     # pilot upload+broadcast == masked all-reduce over the fed axis
-    q_pilot = jax.lax.psum(
-        jnp.where(idx == k_star, q_local[0].astype(jnp.float32), 0.0),
-        axis)
+    q_pilot = jax.lax.psum(jnp.where(idx == k_star, q, 0.0), axis)
     wf = w.astype(jnp.float32)                        # (F,) masked p_k*beta_k
-    coeff = jnp.tensordot(wf, tern_all.astype(jnp.float32), axes=1)
-    step = (p_prev - p_prev2).astype(jnp.float32)
-    r1 = q_pilot - alpha0 * coeff
-    rt = q_pilot - coeff * step
-    return jnp.where(t <= 1, r1, rt).astype(q_local.dtype)
 
-
-def _ternary_leaf(q_local, p_prev, p_prev2, t, beta, alpha1):
-    t1 = ternarize_round1(q_local[0], p_prev, alpha1)
-    tt = ternarize(q_local[0], p_prev, p_prev2, beta)
-    return jnp.where(t <= 1, t1, tt)
-
-
-def _sync_fedpc_body(q_leaf, p_prev_leaf, p_prev2_leaf, *, k_star, w, t,
-                     alpha0, beta, alpha1, axis, mode):
-    tern = _ternary_leaf(q_leaf, p_prev_leaf, p_prev2_leaf, t, beta, alpha1)
     if mode == "reduce":
         # Beyond-paper: Eq. (3) needs only Σ_k w_k T_k — reduce in-network
         # instead of gathering N ternary vectors. On an all-reduce fabric
-        # this caps the sync at one bf16 all-reduce regardless of N (the
+        # this caps the sync at one f16 all-reduce regardless of N (the
         # gather grows linearly with N); every instance ends with the same
         # sum so the replicated-master math is unchanged.
-        idx = jax.lax.axis_index(axis)
-        w_me = jnp.take(w, idx).astype(jnp.float32)
+        w_me = jnp.take(wf, idx)
         # f16 on the wire (bf16 triggers an XLA-CPU AllReducePromotion
         # crash in this container; on TPU use bf16 — same byte count)
         contrib = (w_me * tern.astype(jnp.float32)).astype(jnp.float16)
         coeff = jax.lax.psum(contrib, axis).astype(jnp.float32)
-        step = (p_prev_leaf - p_prev2_leaf).astype(jnp.float32)
-        q_pilot = jax.lax.psum(
-            jnp.where(idx == k_star, q_leaf[0].astype(jnp.float32), 0.0),
-            axis)
-        r1 = q_pilot - alpha0 * coeff
-        rt = q_pilot - coeff * step
-        return jnp.where(t <= 1, r1, rt).astype(q_leaf.dtype)
-    if mode == "packed":
-        flat = tern.reshape(-1)
-        pk = pack2bit(flat)                               # uint8 on the wire
+    elif mode == "packed":
+        pk = pack2bit(tern)                               # uint8 on the wire
         pk_all = jax.lax.all_gather(pk, axis)             # (F, bytes)
-        tern_all = jax.vmap(lambda b: unpack2bit(b, flat.shape[0]))(pk_all)
-        tern_all = tern_all.reshape((-1,) + tern.shape)
+        tern_all = jax.vmap(lambda b: unpack2bit(b, tern.shape[0]))(pk_all)
+        coeff = jnp.tensordot(wf, tern_all.astype(jnp.float32), axes=1)
     else:
-        tern_all = jax.lax.all_gather(tern, axis)         # (F, *shape) int8
-    return _eq3_leaf(q_leaf, tern_all, w, k_star, p_prev_leaf, p_prev2_leaf,
-                     t, alpha0, axis)
+        tern_all = jax.lax.all_gather(tern, axis)         # (F, n_pad) int8
+        coeff = jnp.tensordot(wf, tern_all.astype(jnp.float32), axes=1)
+
+    step = (p_prev - p_prev2).astype(jnp.float32)
+    r1 = q_pilot - alpha0 * coeff
+    rt = q_pilot - coeff * step
+    return jnp.where(t <= 1, r1, rt)
 
 
 def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
@@ -127,30 +130,34 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
             new_params = jax.tree_util.tree_map(avg, params_F)
         else:
             mask = (jnp.arange(F) != k_star).astype(jnp.float32)
-            w = mask * p_shares * beta
+            # Eq. (3): round 1 weighs workers by p_k alone (the alpha0 rule),
+            # later rounds by p_k * beta_k — matching core.update and the
+            # simulator ( `t` may be traced, hence the where).
+            w = mask * p_shares * jnp.where(jnp.asarray(t) <= 1, 1.0, beta)
 
-            # fed axis is the stacked leading dim; model axes stay auto.
-            in_q = jax.tree_util.tree_map(lambda _: P(fed_axis), params_F)
-            in_rep = jax.tree_util.tree_map(lambda _: P(), state["params"])
-            out = jax.tree_util.tree_map(lambda _: P(), state["params"])
+            # Flat wire path: the whole pytree becomes one padded buffer per
+            # worker, so the sync is a single shard_map over flat vectors —
+            # one collective per round, not one per leaf.
+            layout = fl.layout_of(state["params"])
+            q_flat_F = fl.flatten_stacked(params_F, layout).reshape(
+                F, layout.padded)
+            p1_flat = fl.flatten_tree(state["params"], layout).reshape(-1)
+            p2_flat = fl.flatten_tree(state["params_prev"], layout).reshape(-1)
 
             body = partial(
-                _sync_fedpc_body, k_star=k_star, w=w, t=t, alpha0=alpha0,
+                _sync_fedpc_flat, k_star=k_star, w=w, t=t, alpha0=alpha0,
                 beta=beta, alpha1=alpha1, axis=fed_axis,
                 mode={"fedpc_packed": "packed",
                       "fedpc_reduce": "reduce"}.get(strategy, "gather"))
 
-            def tree_body(q, p1, p2):
-                return jax.tree_util.tree_map(body, q, p1, p2)
-
-            new_params = jax.shard_map(
-                tree_body,
-                mesh=mesh,
-                in_specs=(in_q, in_rep, in_rep),
-                out_specs=out,
-                axis_names=frozenset({fed_axis}),
-                check_vma=False,
-            )(params_F, state["params"], state["params_prev"])
+            new_flat = _shard_map(
+                body, mesh,
+                in_specs=(P(fed_axis), P(), P()),
+                out_specs=P(),
+                manual_axes={fed_axis},
+            )(q_flat_F, p1_flat, p2_flat)
+            new_params = fl.unflatten_tree(
+                new_flat.reshape(layout.rows, fl.LANES), layout)
 
         new_state = {
             "params": new_params,

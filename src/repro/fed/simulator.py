@@ -19,13 +19,19 @@ import numpy as np
 
 from repro.core import baselines as bl
 from repro.core import fedpc as fp
+from repro.core import flat as fl
 from repro.core import protocol as proto
 from repro.core.convergence import CostHistory
-from repro.core.packing import pack_tree, unpack_tree
+from repro.core.goodness import select_pilot
 from repro.core.privacy import LeakageLedger, should_evade
-from repro.core.ternary import ternarize_tree, ternarize_tree_round1
+from repro.core.update import masked_weights
 from repro.fed.worker import Worker
+from repro.kernels import ops
 from repro.utils import PyTree, tree_size
+
+# A §3.3 wire byte whose four 2-bit fields all decode to code 0 — used to
+# fill the pilot's (masked) row of the stacked packed buffer.
+ZERO_CODES_BYTE = 0b01010101
 
 
 @dataclass
@@ -67,6 +73,15 @@ class FedSimulator:
         res = SimResult("fedpc", state.params)
         prev_costs_rep = [np.inf] * self.n
 
+        # Flat wire path: one cached layout, single (rows, 128) buffers for
+        # the public history — re-flattened only when a new global model is
+        # produced (the new buffer is carried to the next round).
+        layout = fl.layout_of(self.init_params)
+        buf_p1 = fl.flatten_tree(state.params, layout)        # P^{t-1}
+        buf_p2 = jnp.zeros_like(buf_p1)                       # P^{t-2}
+        pilot_fill = jnp.full((layout.packed_rows, fl.LANES),
+                              ZERO_CODES_BYTE, jnp.uint8)
+
         for t in range(1, rounds + 1):
             # --- workers train locally (parallel in the real system) ---
             locals_, costs = [], []
@@ -85,39 +100,42 @@ class FedSimulator:
                         rep_costs[k] = prev_costs_rep[k]  # goodness → 0
 
             costs_arr = jnp.asarray(rep_costs, jnp.float32)
-            from repro.core.goodness import select_pilot
             k_star, _ = select_pilot(
                 costs_arr, state.prev_costs, jnp.asarray(self.sizes), t)
             k_star = int(k_star)
 
             # --- uplinks: pilot sends weights; others send 2-bit codes ---
+            # Each non-pilot's wire buffer comes from ONE fused kernel
+            # (Eq. (4)/(5) → §3.3 pack, no int8 intermediate); the pilot row
+            # is all-zero codes, masked out of Eq. (3) anyway.
             self.ledger.record(k_star, t, "pilot_params", True)
-            ternaries = []
+            buf_pilot = None
+            packed = []
             for k in range(self.n):
-                if cfg is not None and t == 1:
-                    tern = ternarize_tree_round1(
-                        locals_[k], state.params, cfg.alpha_round1)
+                buf_q = fl.flatten_tree(locals_[k], layout)
+                if k == k_star:
+                    buf_pilot = buf_q
+                    packed.append(pilot_fill)
                 else:
-                    tern = ternarize_tree(
-                        locals_[k], state.params, state.params_prev, cfg.beta)
-                if k != k_star:
-                    packed, layout = pack_tree(tern)      # the actual wire op
-                    tern = unpack_tree(packed, layout)
+                    packed.append(ops.flat_ternary_pack(
+                        buf_q, buf_p1, buf_p2, t=t, beta=cfg.beta,
+                        alpha1=cfg.alpha_round1))
                     self.ledger.record(k, t, "packed_ternary", False)
-                ternaries.append(tern)
+            packed_stacked = jnp.stack(packed)      # (N, rows//4, 128) wire
 
-            stacked_t = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs), *ternaries)
             p_shares = jnp.asarray(self.sizes / self.sizes.sum())
-            betas = jnp.full((self.n,), cfg.beta, jnp.float32)
-            from repro.core.update import master_update_tree
-            new_params = master_update_tree(
-                locals_[k_star], stacked_t, p_shares, betas, k_star,
-                state.params, state.params_prev, t, cfg.alpha0)
+            betas = (jnp.ones((self.n,), jnp.float32) if t == 1
+                     else jnp.full((self.n,), cfg.beta, jnp.float32))
+            w_masked = masked_weights(p_shares, betas, k_star)
+            new_buf = ops.flat_master_update(
+                buf_pilot, packed_stacked, w_masked, buf_p1, buf_p2,
+                t=t, alpha0=cfg.alpha0)
+            new_params = fl.unflatten_tree(new_buf, layout)
 
             state = fp.FedPCState(
                 params=new_params, params_prev=state.params,
                 prev_costs=costs_arr, round=jnp.asarray(t + 1))
+            buf_p1, buf_p2 = new_buf, buf_p1
             prev_costs_rep = rep_costs
 
             res.costs.append(float(np.average(costs, weights=self.sizes)))

@@ -1,0 +1,165 @@
+"""Fused Pallas TPU kernels for the FedPC flat wire path.
+
+Two kernels cover the whole per-round wire cost over the ``FlatParams``
+buffer (``repro.core.flat``):
+
+``ternary_pack_2d`` / ``ternary_pack_round1_2d`` — worker uplink. Fuses
+Eq. (5) (resp. Eq. (4)) ternarization *directly* into the §3.3 2-bit packed
+wire format: float (R, 512) history views in, uint8 (R, 128) packed codes
+out. The separate int8 code tensor of the two-kernel composition
+(``ternary_encode`` → ``pack2bit``) — 4× the wire size, written to and
+re-read from HBM — never exists: codes live only in VMEM registers.
+
+``packed_master_update_2d`` — master downlink side of Eq. (3). Consumes the
+*packed* uint8 codes of all N workers, decodes the 2-bit fields in-register,
+and fuses the masked weighted worker reduction, the history-step multiply
+and the subtraction into one VMEM pass. Both round branches of Eq. (3)
+(t == 1 uses ``alpha0``, t > 1 uses P^{t-1} − P^{t-2}) are computed from
+scalar operands so the round index may be traced.
+
+Layout: the flat (rows, 128) buffer is viewed as (rows/4, 512) so that the
+four *consecutive* codes forming each wire byte sit in the last axis —
+exactly the §3.3 / ``core.packing.pack2bit`` byte order. Shifts are
+multiplies/divides by powers of two (VPU-safe, exact for 2-bit fields).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+PACK = 4
+BLOCK_ROWS = 64            # (64, 512) fp32 tile = 128 KiB per input
+
+
+def _codes_eq5(q, p1, p2, beta):
+    """Eq. (5) codes in-register: float tiles → float {-1, 0, +1}."""
+    step = p1 - p2
+    delta = q - p1
+    significant = jnp.abs(delta) >= beta * jnp.abs(step)
+    return jnp.where(significant, jnp.sign(delta * step), 0.0)
+
+
+def _pack_tile(codes):
+    """(R, 512) float codes → (R, 128) uint8, 4 consecutive codes per byte."""
+    r = codes.shape[0]
+    biased = (codes.astype(jnp.int32) + 1).reshape(r, LANES, PACK)
+    byte = (biased[..., 0]
+            + biased[..., 1] * 4
+            + biased[..., 2] * 16
+            + biased[..., 3] * 64)
+    return byte.astype(jnp.uint8)
+
+
+def _unpack_tile(b):
+    """(N, R, 128) uint8 → (N, R, 512) float codes in {-1, 0, +1}."""
+    bi = b.astype(jnp.int32)
+    f0 = bi % 4
+    f1 = (bi // 4) % 4
+    f2 = (bi // 16) % 4
+    f3 = (bi // 64) % 4
+    fields = jnp.stack([f0, f1, f2, f3], axis=-1)      # (N, R, 128, 4)
+    n, r = b.shape[0], b.shape[1]
+    return (fields - 1).astype(jnp.float32).reshape(n, r, LANES * PACK)
+
+
+def _ternary_pack_kernel(q_ref, p1_ref, p2_ref, beta_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)
+    p1 = p1_ref[...].astype(jnp.float32)
+    p2 = p2_ref[...].astype(jnp.float32)
+    out_ref[...] = _pack_tile(_codes_eq5(q, p1, p2, beta_ref[0]))
+
+
+def _ternary_pack_round1_kernel(q_ref, p0_ref, alpha_ref, out_ref):
+    d = q_ref[...].astype(jnp.float32) - p0_ref[...].astype(jnp.float32)
+    alpha = alpha_ref[0]
+    codes = ((d > alpha).astype(jnp.float32)
+             - (d < -alpha).astype(jnp.float32))
+    out_ref[...] = _pack_tile(codes)
+
+
+def _master_kernel(q_ref, pk_ref, w_ref, p1_ref, p2_ref, scal_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)                 # (R, 512)
+    tern = _unpack_tile(pk_ref[...])                   # (N, R, 512)
+    w = w_ref[...].astype(jnp.float32)                 # (N,) masked p_k*beta_k
+    coeff = jnp.tensordot(w, tern, axes=1)             # (R, 512)
+    step = p1_ref[...].astype(jnp.float32) - p2_ref[...].astype(jnp.float32)
+    t, alpha0 = scal_ref[0], scal_ref[1]
+    # Eq. (3): t == 1 scales by alpha0, t > 1 by the history step.
+    mult = jnp.where(t <= 1.0, alpha0, step)
+    out_ref[...] = (q - coeff * mult).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def ternary_pack_2d(q, p1, p2, beta, *, interpret: bool = True,
+                    block_rows: int = BLOCK_ROWS):
+    """q/p1/p2 (R, 512) float, R % block_rows == 0 → uint8 (R, 128).
+
+    Equals ``pack2bit_2d(ternary_encode_2d(q, p1, p2, beta))`` with zero
+    int8 HBM intermediate and a single launch.
+    """
+    rows = q.shape[0]
+    grid = (rows // block_rows,)
+    in_spec = pl.BlockSpec((block_rows, LANES * PACK), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _ternary_pack_kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec, in_spec,
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.uint8),
+        interpret=interpret,
+    )(q, p1, p2, jnp.asarray([beta], jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def ternary_pack_round1_2d(q, p0, alpha, *, interpret: bool = True,
+                           block_rows: int = BLOCK_ROWS):
+    """Round-1 (Eq. (4)) variant of :func:`ternary_pack_2d`."""
+    rows = q.shape[0]
+    grid = (rows // block_rows,)
+    in_spec = pl.BlockSpec((block_rows, LANES * PACK), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    return pl.pallas_call(
+        _ternary_pack_round1_kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec, pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.uint8),
+        interpret=interpret,
+    )(q, p0, jnp.asarray([alpha], jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def packed_master_update_2d(q_pilot, packed, w, p1, p2, t, alpha0, *,
+                            interpret: bool = True,
+                            block_rows: int = BLOCK_ROWS):
+    """Fused Eq. (3) over packed wire codes.
+
+    q_pilot/p1/p2 (R, 512) float; packed (N, R, 128) uint8 — every worker's
+    §3.3 wire buffer, pilot row masked by ``w``; w (N,) masked p_k·beta_k at
+    t > 1 / p_k at t == 1; ``t`` may be traced. Returns (R, 512) in
+    q_pilot.dtype.
+
+    VMEM per tile at N=16, R=64: 3 × 128 KiB float inputs + 128 KiB packed —
+    decoded codes exist only in registers.
+    """
+    n, rows, _ = packed.shape
+    grid = (rows // block_rows,)
+    spec_f = pl.BlockSpec((block_rows, LANES * PACK), lambda i: (i, 0))
+    spec_pk = pl.BlockSpec((n, block_rows, LANES), lambda i: (0, i, 0))
+    scal = jnp.stack([jnp.asarray(t, jnp.float32),
+                      jnp.asarray(alpha0, jnp.float32)])
+    return pl.pallas_call(
+        _master_kernel,
+        grid=grid,
+        in_specs=[spec_f, spec_pk, pl.BlockSpec(memory_space=pl.ANY),
+                  spec_f, spec_f, pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=spec_f,
+        out_shape=jax.ShapeDtypeStruct(q_pilot.shape, q_pilot.dtype),
+        interpret=interpret,
+    )(q_pilot, packed, w.astype(jnp.float32), p1, p2, scal)

@@ -8,11 +8,13 @@ what the distributed sync uses when ``use_kernels=True``.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import fused_wire as fw
 from repro.kernels import pack2bit as pk
 from repro.kernels import master_update as mu
 from repro.kernels import ternary_encode as te
@@ -37,10 +39,21 @@ def _to_2d(x: jax.Array, row_multiple: int, lane_multiple: int = LANES):
 
 
 def _block_rows_for(rows: int, want: int) -> int:
-    b = min(want, rows)
+    """Largest multiple of gcd(rows, want) that divides ``rows`` and is
+    ≤ ``want``.
+
+    The gcd floors the probe (≤ want/g steps vs the old unit-step scan) and
+    — since padded rows and ``want`` are both multiples of 8 — guarantees
+    the result stays 8-sublane aligned, which the old probe did not (e.g.
+    rows=8400, want=64 → 48 here vs the unaligned 60 before).
+    """
+    if rows <= want:
+        return rows
+    g = math.gcd(rows, want)
+    b = (want // g) * g
     while rows % b:
-        b -= 1
-    return max(b, 1)
+        b -= g
+    return b
 
 
 def ternary_encode(q, p1, p2, beta: float, interpret: bool | None = None):
@@ -82,6 +95,81 @@ def unpack2bit(b, n: int, interpret: bool | None = None):
     br = _block_rows_for(b2.shape[0], pk.BLOCK_ROWS)
     out = pk.unpack2bit_2d(b2, interpret=interpret, block_rows=br)
     return out.reshape(-1)[:n]
+
+
+def ternary_pack(q, p1, p2, beta: float, interpret: bool | None = None):
+    """Fused Eq. (5) → §3.3 uplink over an arbitrary-shape array.
+
+    Equals ``pack2bit(ternary_encode(q, p1, p2, beta))`` in one launch with
+    no int8 intermediate. Returns uint8 (ceil(n/4),) packed wire bytes.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    q2, n = _to_2d(q, 8, LANES * fw.PACK)
+    p12, _ = _to_2d(p1, 8, LANES * fw.PACK)
+    p22, _ = _to_2d(p2, 8, LANES * fw.PACK)
+    br = _block_rows_for(q2.shape[0], fw.BLOCK_ROWS)
+    out = fw.ternary_pack_2d(q2, p12, p22, beta, interpret=interpret,
+                             block_rows=br)
+    n_bytes = -(-n // fw.PACK)
+    return out.reshape(-1)[:n_bytes]
+
+
+def ternary_pack_round1(q, p0, alpha: float, interpret: bool | None = None):
+    """Round-1 (Eq. (4)) variant of :func:`ternary_pack`."""
+    interpret = _default_interpret() if interpret is None else interpret
+    q2, n = _to_2d(q, 8, LANES * fw.PACK)
+    p02, _ = _to_2d(p0, 8, LANES * fw.PACK)
+    br = _block_rows_for(q2.shape[0], fw.BLOCK_ROWS)
+    out = fw.ternary_pack_round1_2d(q2, p02, alpha, interpret=interpret,
+                                    block_rows=br)
+    n_bytes = -(-n // fw.PACK)
+    return out.reshape(-1)[:n_bytes]
+
+
+def flat_ternary_pack(buf_q, buf_p1, buf_p2, *, t: int, beta: float,
+                      alpha1: float, interpret: bool | None = None,
+                      block_rows: int | None = None):
+    """Fused uplink over FlatParams buffers: (rows, 128) → (rows//4, 128).
+
+    ``t`` is the (static) 1-based round index: round 1 uses the Eq. (4)
+    threshold ``alpha1`` against ``buf_p1`` (= P^0), later rounds Eq. (5)
+    with ``beta`` against the (P^{t-1}, P^{t-2}) history.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    rows = buf_q.shape[0]
+    r4 = rows // fw.PACK
+    q4 = buf_q.reshape(r4, LANES * fw.PACK)
+    br = _block_rows_for(r4, block_rows or fw.BLOCK_ROWS)
+    if t <= 1:
+        return fw.ternary_pack_round1_2d(
+            q4, buf_p1.reshape(r4, LANES * fw.PACK), alpha1,
+            interpret=interpret, block_rows=br)
+    return fw.ternary_pack_2d(
+        q4, buf_p1.reshape(r4, LANES * fw.PACK),
+        buf_p2.reshape(r4, LANES * fw.PACK), beta,
+        interpret=interpret, block_rows=br)
+
+
+def flat_master_update(buf_q_pilot, packed_stacked, w, buf_p1, buf_p2, *,
+                       t, alpha0: float, interpret: bool | None = None,
+                       block_rows: int | None = None):
+    """Fused Eq. (3) over the packed wire buffers of all N workers.
+
+    buf_* (rows, 128) float; packed_stacked (N, rows//4, 128) uint8; w (N,)
+    masked per-worker coefficients (pilot zeroed). ``t`` may be traced.
+    Returns the new global buffer, (rows, 128) in buf_q_pilot.dtype.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    rows = buf_q_pilot.shape[0]
+    r4 = rows // fw.PACK
+    wide = LANES * fw.PACK
+    br = _block_rows_for(r4, block_rows or fw.BLOCK_ROWS)
+    out = fw.packed_master_update_2d(
+        buf_q_pilot.reshape(r4, wide), packed_stacked,
+        w.astype(jnp.float32), buf_p1.reshape(r4, wide),
+        buf_p2.reshape(r4, wide), t, alpha0,
+        interpret=interpret, block_rows=br)
+    return out.reshape(rows, LANES)
 
 
 def master_update(q_pilot, tern_stacked, w, p1, p2,

@@ -41,6 +41,32 @@ def unpack2bit_ref(b: jax.Array) -> jax.Array:
     return (fields.astype(jnp.int8) - 1).reshape(b.shape[:-1] + (-1,))
 
 
+def ternary_pack_ref(q: jax.Array, p1: jax.Array, p2: jax.Array,
+                     beta: float) -> jax.Array:
+    """Fused-uplink oracle: Eq. (5) then §3.3 pack on flat arrays whose size
+    is a multiple of 4."""
+    return pack2bit_ref(ternary_encode_ref(q, p1, p2, beta))
+
+
+def ternary_pack_round1_ref(q: jax.Array, p0: jax.Array,
+                            alpha: float) -> jax.Array:
+    """Round-1 fused-uplink oracle (Eq. (4) then §3.3 pack)."""
+    return pack2bit_ref(ternary_encode_round1_ref(q, p0, alpha))
+
+
+def packed_master_update_ref(q_pilot: jax.Array, packed: jax.Array,
+                             w: jax.Array, p1: jax.Array, p2: jax.Array,
+                             t, alpha0: float) -> jax.Array:
+    """Eq. (3) oracle over packed codes. packed (N, bytes) uint8; both round
+    branches, selected on ``t`` like the kernel."""
+    tern = unpack2bit_ref(packed)                     # (N, 4*bytes)
+    coeff = jnp.einsum("n,nm->m", w.astype(jnp.float32),
+                       tern.astype(jnp.float32))
+    step = (p1 - p2).astype(jnp.float32)
+    mult = jnp.where(jnp.asarray(t, jnp.float32) <= 1.0, alpha0, step)
+    return (q_pilot.astype(jnp.float32) - coeff * mult).astype(q_pilot.dtype)
+
+
 def master_update_ref(q_pilot: jax.Array, tern: jax.Array, w: jax.Array,
                       p1: jax.Array, p2: jax.Array) -> jax.Array:
     """Eq. (3) t>1 on flat arrays. tern (N, M) int8, w (N,) already masked

@@ -1,0 +1,161 @@
+"""Minimal deterministic stand-in for `hypothesis` when it is not installed.
+
+The real dependency is declared in pyproject.toml; this fallback exists so the
+tier-1 suite still *runs* the property tests (with seeded random examples and
+boundary-value bias) in hermetic containers without network access. Only the
+surface the test-suite actually uses is implemented: ``given``, ``settings``
+and the strategies ``integers``, ``floats``, ``booleans``, ``lists``,
+``sampled_from``, ``just`` and ``tuples``.
+
+``install()`` registers the shim as ``hypothesis`` / ``hypothesis.strategies``
+in ``sys.modules``; conftest only calls it after a real import fails, so an
+installed hypothesis always wins.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class Strategy:
+    """A strategy draws one example per call; ``i`` is the example index so
+    the first draws can hit boundary values deterministically."""
+
+    def example(self, rng: random.Random, i: int):  # pragma: no cover
+        raise NotImplementedError
+
+    def map(self, fn):
+        return _Mapped(self, fn)
+
+
+class _Mapped(Strategy):
+    def __init__(self, inner, fn):
+        self.inner, self.fn = inner, fn
+
+    def example(self, rng, i):
+        return self.fn(self.inner.example(rng, i))
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = min_value, max_value
+
+    def example(self, rng, i):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value, max_value, **_kw):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, rng, i):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(Strategy):
+    def example(self, rng, i):
+        return bool(i % 2) if i < 2 else rng.random() < 0.5
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, seq):
+        self.seq = list(seq)
+
+    def example(self, rng, i):
+        if i < len(self.seq):
+            return self.seq[i]
+        return rng.choice(self.seq)
+
+
+class _Just(Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng, i):
+        return self.value
+
+
+class _Lists(Strategy):
+    def __init__(self, elements, min_size=0, max_size=10, **_kw):
+        self.el, self.lo = elements, min_size
+        self.hi = self.lo + 10 if max_size is None else max_size
+
+    def example(self, rng, i):
+        size = self.lo if i == 0 else (
+            self.hi if i == 1 else rng.randint(self.lo, self.hi))
+        return [self.el.example(rng, i + 2) for _ in range(size)]
+
+
+class _Tuples(Strategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rng, i):
+        return tuple(s.example(rng, i) for s in self.strategies)
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", None) or getattr(
+                fn, "_max_examples", DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for i in range(n):
+                vals = [s.example(rng, i) for s in strategies]
+                try:
+                    fn(*args, *vals, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {vals!r}") from e
+
+        wrapper._hypothesis_given = True
+        # Strategy-filled parameters must not look like pytest fixtures.
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, **_kw):
+    # Works whether it decorates the raw test (given applied after) or the
+    # given-wrapper (given applied first): both read `_max_examples`.
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def install() -> None:
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = lambda min_value=0, max_value=2**16: _Integers(
+        min_value, max_value)
+    st.floats = _Floats
+    st.booleans = _Booleans
+    st.lists = _Lists
+    st.sampled_from = _SampledFrom
+    st.just = _Just
+    st.tuples = _Tuples
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    hyp.HealthCheck = types.SimpleNamespace(too_slow="too_slow",
+                                            data_too_large="data_too_large")
+    hyp.__is_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -4,3 +4,13 @@ import sys
 # Tests run on the single host CPU device (the dry-run sets its own device
 # count in a separate process — see launch/dryrun.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# `hypothesis` is a declared test dependency (pyproject.toml), but hermetic
+# containers without network can't install it; fall back to the deterministic
+# shim so the property tests still run.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_fallback
+    _hypothesis_fallback.install()

@@ -28,7 +28,11 @@ F = 4
 sizes = jnp.array([100.0, 200.0, 150.0, 50.0])
 out = {}
 
-with jax.set_mesh(mesh):
+try:
+    mesh_ctx = jax.set_mesh(mesh)        # jax >= 0.5
+except AttributeError:
+    mesh_ctx = mesh                       # Mesh is a context manager on 0.4
+with mesh_ctx:
     # --- strategies agree with each other and with the reference math ----
     state = fed_state_init(params, F)
     state["round"] = jnp.asarray(3, jnp.int32)       # exercise Eq.(5) branch
@@ -70,6 +74,22 @@ with jax.set_mesh(mesh):
         for a, b in zip(jax.tree_util.tree_leaves(results["fedpc"]),
                         jax.tree_util.tree_leaves(want)))
     out["vs_reference_max_diff"] = ref_diff
+
+    # --- round-1 branch: Eq. (4) codes + p_k-only weights ---------------
+    state1 = fed_state_init(params, F)
+    sync1 = build_fed_sync(m, mesh, "data", "fedpc")
+    got1, _ = jax.jit(sync1)(params_F, costs, sizes, state1)
+    k1, _ = select_pilot(costs, state1["prev_costs"], sizes, 1)
+    tern1 = jax.vmap(lambda q: ternarize_tree_round1(
+        q, state1["params"], 0.01))(params_F)
+    q_pilot1 = jax.tree_util.tree_map(lambda x: x[k1], params_F)
+    want1 = master_update_tree(q_pilot1, tern1, p_shares, betas, k1,
+                               state1["params"], state1["params_prev"],
+                               1, 0.01)
+    out["round1_vs_reference_max_diff"] = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree_util.tree_leaves(got1),
+                        jax.tree_util.tree_leaves(want1)))
 
     # --- full fed step runs and improves cost over rounds ---------------
     fs = build_fed_step(m, mesh, "data", "fedpc_packed", lr=0.05)
@@ -116,6 +136,12 @@ def test_packed_equals_plain(results):
 
 def test_matches_core_reference(results):
     assert results["vs_reference_max_diff"] < 1e-5
+
+
+def test_round1_matches_core_reference(results):
+    """Round 1 must use p_k-only weights (Eq. (3) alpha0 rule), not
+    beta-scaled ones — regression test for the round-1 divergence."""
+    assert results["round1_vs_reference_max_diff"] < 1e-5
 
 
 def test_fed_step_cost_improves(results):
