@@ -7,7 +7,6 @@
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, make_sim, make_task, timed
 from repro.core.fedpc import FedPCConfig

@@ -4,7 +4,6 @@ from __future__ import annotations
 import time
 
 import jax
-import numpy as np
 
 from repro.data.pipeline import BatchIterator, federated_loaders
 from repro.data.synthetic import (SyntheticClassification, dirichlet_split,

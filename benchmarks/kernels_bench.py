@@ -11,8 +11,11 @@ tests/test_flat_wire.py via jaxpr inspection.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -114,26 +117,136 @@ def _fused_vs_unfused(m: int, reps: int) -> dict:
     }
 
 
-def run() -> dict:
-    q, p1, p2 = _wire_inputs(M)
+def _batched_uplink(m: int, n_workers: int, reps: int) -> dict:
+    """Simulator uplink at m params × N workers: the old per-worker loop of
+    N fused launches vs ONE stacked launch (kernels/fused_wire.py::
+    ternary_pack_stacked_2d).
+
+    NOTE on CPU: interpret mode runs one Python step per grid tile, so the
+    stacked kernel's (N, 1) grid costs the same N steps as the loop — wall
+    time here does NOT show the structural win (one launch, no host-side
+    dispatch loop, shared history reads), which is asserted at jaxpr level
+    in tests/test_rounds.py and realized on compiled TPU runs."""
+    rows = m // 128
+    r4 = rows // 4
+    k = jax.random.PRNGKey(11)
+    bufs_q = jax.random.normal(k, (n_workers, rows, 128))
+    p1 = jax.random.normal(jax.random.fold_in(k, 1), (rows, 128))
+    p2 = jax.random.normal(jax.random.fold_in(k, 2), (rows, 128))
+
+    # Single-tile launches (see _fused_vs_unfused NOTE on interpret mode).
+    def loop():
+        return jnp.stack([ops.flat_ternary_pack(
+            bufs_q[i], p1, p2, t=3, beta=0.2, alpha1=0.01,
+            interpret=True, block_rows=r4) for i in range(n_workers)])
+
+    def stacked():
+        return ops.flat_ternary_pack_stacked(
+            bufs_q, p1, p2, t=3, beta=0.2, alpha1=0.01,
+            interpret=True, block_rows=r4)
+
+    np.testing.assert_array_equal(np.asarray(loop()), np.asarray(stacked()))
+    us_loop = _bench(loop, reps=reps)
+    us_stacked = _bench(stacked, reps=reps)
+    return {
+        "params": m,
+        "n_workers": n_workers,
+        "uplink_loop_us": us_loop,
+        "uplink_stacked_us": us_stacked,
+        "stacked_speedup": us_loop / us_stacked,
+        "launches": {"loop": n_workers, "stacked": 1},
+        "mode": "cpu-interpret",
+    }
+
+
+_SYNC_BENCH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys, time
+import jax, jax.numpy as jnp
+from repro.core import flat as fl
+from repro.fed.distributed import build_fed_sync, fed_state_init
+
+m = int(sys.argv[1])
+reps = int(sys.argv[2])
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+F, MOD = 4, 2
+params = {"w": jax.random.normal(jax.random.PRNGKey(0), (m,))}
+sizes = jnp.linspace(50.0, 200.0, F)
+costs = jnp.linspace(0.9, 0.5, F)
+params_F = jax.tree_util.tree_map(
+    lambda x: jnp.stack([x + 0.05 * (i + 1) for i in range(F)]), params)
+state = fed_state_init(params, F)
+state["round"] = jnp.asarray(3, jnp.int32)
+state["params_prev"] = jax.tree_util.tree_map(lambda x: x + 0.01, params)
+state["prev_costs"] = jnp.ones((F,))
+
+out = {"params": m, "fed": F, "model": MOD, "mode": "cpu-interpret"}
+with mesh:
+    for strat in ("fedpc_packed", "fedpc_reduce"):
+        for shard in (True, False):
+            layout = fl.layout_of(params, shards=MOD if shard else 1)
+            # single interpret tile per device (see kernels_bench NOTE)
+            sync = jax.jit(build_fed_sync(
+                None, mesh, "data", strat, shard_wire=shard,
+                wire_block_rows=layout.shard_rows // fl.PACK))
+            new_params, _ = sync(params_F, costs, sizes, state)   # compile
+            jax.block_until_ready(new_params)
+            t0 = time.time()
+            for _ in range(reps):
+                new_params, _ = sync(params_F, costs, sizes, state)
+                jax.block_until_ready(new_params)
+            us = (time.time() - t0) / reps * 1e6
+            key = f"{strat}_{'sharded' if shard else 'replicated'}"
+            out[key + "_us"] = us
+            if strat == "fedpc_packed":
+                # uint8 §3.3 payload each device contributes to the fed
+                # all_gather per round
+                out[key + "_wire_bytes_per_device"] = (
+                    layout.packed_shard_rows * fl.LANES)
+print("SYNC " + json.dumps(out))
+"""
+
+
+def _sharded_sync(m: int, reps: int) -> dict | None:
+    """Sharded vs replicated fed sync on an 8-host-device subprocess mesh
+    (4 fed × 2 model): wall time per jitted sync + per-device wire bytes."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SYNC_BENCH_SCRIPT, str(m), str(reps)],
+        env=env, capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        emit("sync_bench_failed", 0.0, proc.stderr[-200:].replace("\n", " "))
+        return None
+    line = [l for l in proc.stdout.splitlines() if l.startswith("SYNC ")][-1]
+    return json.loads(line[len("SYNC "):])
+
+
+def run(smoke: bool = False) -> dict:
+    # --smoke: tiny sizes for CI — exercises every bench path in seconds
+    # and does NOT overwrite BENCH_kernels.json (whose numbers are real).
+    m0 = (1 << 14) if smoke else M
+    q, p1, p2 = _wire_inputs(m0)
     tern = jax.random.randint(jax.random.fold_in(jax.random.PRNGKey(0), 3),
-                              (N_WORKERS, M), -1, 2).astype(jnp.int8)
+                              (N_WORKERS, m0), -1, 2).astype(jnp.int8)
     w = jnp.full((N_WORKERS,), 0.02)
 
+    tag0 = f"{m0 // (1 << 20)}M" if m0 >= (1 << 20) else f"{m0 // 1024}K"
     us = _bench(lambda: ops.ternary_encode(q, p1, p2, 0.2, interpret=True))
     us_ref = _bench(lambda: jax.jit(
         lambda a, b, c: ref.ternary_encode_ref(a, b, c, 0.2))(q, p1, p2))
-    emit("kernel_ternary_encode_1M", us, f"ref_jnp={us_ref:.0f}us")
+    emit(f"kernel_ternary_encode_{tag0}", us, f"ref_jnp={us_ref:.0f}us")
 
     t = ops.ternary_encode(q, p1, p2, 0.2, interpret=True)
     us = _bench(lambda: ops.pack2bit(t, interpret=True))
     us_ref = _bench(jax.jit(ref.pack2bit_ref), t.reshape(-1, 4).reshape(-1))
-    emit("kernel_pack2bit_1M", us,
-         f"ref_jnp={us_ref:.0f}us bytes_out={M // 4}")
+    emit(f"kernel_pack2bit_{tag0}", us,
+         f"ref_jnp={us_ref:.0f}us bytes_out={m0 // 4}")
 
     us = _bench(lambda: ops.master_update(q, tern, w, p1, p2, interpret=True))
     us_ref = _bench(jax.jit(ref.master_update_ref), q, tern, w, p1, p2)
-    emit("kernel_master_update_1M_8w", us, f"ref_jnp={us_ref:.0f}us")
+    emit(f"kernel_master_update_{tag0}_8w", us, f"ref_jnp={us_ref:.0f}us")
 
     # correctness spot check rides along
     out = ops.master_update(q, tern, w, p1, p2, interpret=True)
@@ -142,11 +255,13 @@ def run() -> dict:
     emit("kernel_master_update_maxerr", 0.0, f"{err:.2e}")
 
     # ---- fused flat wire path vs the old composition, 1M and 16M --------
+    sizes = (((1 << 14), 1),) if smoke else ((1 << 20, 3), (1 << 24, 1))
     results = []
-    for m, reps in ((1 << 20, 3), (1 << 24, 1)):
+    uplink_results = []
+    for m, reps in sizes:
+        tag = (f"{m // (1 << 20)}M" if m >= (1 << 20) else f"{m // 1024}K")
         r = _fused_vs_unfused(m, reps)
         results.append(r)
-        tag = f"{m // (1 << 20)}M"
         emit(f"fused_uplink_{tag}", r["uplink_fused_us"],
              f"unfused={r['uplink_unfused_us']:.0f}us "
              f"speedup={r['uplink_speedup']:.2f}x launches=1v2")
@@ -154,14 +269,48 @@ def run() -> dict:
              f"unfused={r['master_unfused_us']:.0f}us "
              f"speedup={r['master_speedup']:.2f}x")
 
+        # ---- batched N-worker uplink: loop of N launches vs ONE ---------
+        b = _batched_uplink(m, N_WORKERS, reps)
+        uplink_results.append(b)
+        emit(f"batched_uplink_{tag}_{N_WORKERS}w", b["uplink_stacked_us"],
+             f"loop={b['uplink_loop_us']:.0f}us "
+             f"speedup={b['stacked_speedup']:.2f}x launches=1v{N_WORKERS}")
+
+    # ---- sharded vs replicated fed sync (8-device subprocess mesh) ------
+    sync_results = []
+    for m, reps in sizes:
+        tag = (f"{m // (1 << 20)}M" if m >= (1 << 20) else f"{m // 1024}K")
+        s = _sharded_sync(m, reps)
+        if s is None:
+            continue
+        sync_results.append(s)
+        for strat in ("fedpc_packed", "fedpc_reduce"):
+            sh = s[f"{strat}_sharded_us"]
+            rp = s[f"{strat}_replicated_us"]
+            emit(f"sync_{strat}_{tag}", sh,
+                 f"replicated={rp:.0f}us speedup={rp / sh:.2f}x "
+                 f"mesh={s['fed']}x{s['model']}")
+        emit(f"sync_wire_bytes_{tag}",
+             float(s["fedpc_packed_sharded_wire_bytes_per_device"]),
+             f"replicated={s['fedpc_packed_replicated_wire_bytes_per_device']}"
+             f" ({s['model']}x fewer per device)")
+
     payload = {"bench": "fedpc_flat_wire_kernels",
                "backend": jax.default_backend(),
-               "results": results}
-    with open(BENCH_JSON, "w") as f:
-        json.dump(payload, f, indent=2)
-    emit("bench_kernels_json", 0.0, os.path.abspath(BENCH_JSON))
+               "results": results,
+               "batched_uplink": uplink_results,
+               "sharded_sync": sync_results}
+    if smoke:
+        emit("bench_kernels_smoke", 0.0, "smoke run: JSON not written")
+    else:
+        with open(BENCH_JSON, "w") as f:
+            json.dump(payload, f, indent=2)
+        emit("bench_kernels_json", 0.0, os.path.abspath(BENCH_JSON))
     return payload
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI; skips BENCH_kernels.json write")
+    run(smoke=ap.parse_args().smoke)

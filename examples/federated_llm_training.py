@@ -13,7 +13,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import get_config

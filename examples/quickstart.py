@@ -7,7 +7,6 @@ else uploads 2-bit evolution codes (Eqs. 1, 3, 4, 5 of the paper).
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import numpy as np
 
 from repro.data.pipeline import federated_loaders
 from repro.data.synthetic import SyntheticClassification, random_share_split

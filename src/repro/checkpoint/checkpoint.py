@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any
 
 import jax
 import jax.numpy as jnp

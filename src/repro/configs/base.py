@@ -8,7 +8,7 @@ experts) of the *same family*.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 # A block descriptor: (mixer, ffn).

@@ -24,12 +24,23 @@ The zero padding is a fixed point of the whole wire path: ternarizing
 ``q = p1 = p2 = 0`` yields code 0, and the master update maps a zero tail to
 a zero tail, so padded scalars never leak into real parameters.
 
-``FlatLayout`` is cached per (treedef, shapes, dtypes) so repeated rounds pay
-for layout computation once.
+Model sharding
+--------------
+``layout_of(tree, shards=M)`` rounds ``rows`` up to a multiple of
+``ROW_MULTIPLE * M`` so the buffer splits into ``M`` equal ``(rows/M, 128)``
+*slabs*, each itself satisfying every alignment above. The distributed fed
+sync shards the wire buffers over the model mesh axis this way: every model
+shard runs the fused kernels on its own slab and the collectives move
+``rows/M`` rows per device instead of a replicated full buffer.
+
+``FlatLayout`` is cached per (treedef, shapes, dtypes, shards) so repeated
+rounds pay for layout computation once; the cache is a small LRU so
+long-lived multi-model processes don't grow it without bound.
 """
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from typing import Any, NamedTuple
 
 import jax
@@ -51,6 +62,7 @@ class FlatLayout(NamedTuple):
     offsets: tuple[int, ...]   # start of each leaf in the flat vector
     n: int                     # total real scalars
     rows: int                  # padded buffer rows (rows % ROW_MULTIPLE == 0)
+    shards: int = 1            # model-axis slabs (rows % (ROW_MULTIPLE*shards) == 0)
 
     @property
     def padded(self) -> int:
@@ -60,6 +72,16 @@ class FlatLayout(NamedTuple):
     def packed_rows(self) -> int:
         """Rows of the (packed_rows, 128) uint8 wire buffer."""
         return self.rows // PACK
+
+    @property
+    def shard_rows(self) -> int:
+        """Rows of one model shard's (shard_rows, 128) slab."""
+        return self.rows // self.shards
+
+    @property
+    def packed_shard_rows(self) -> int:
+        """Rows of one model shard's (·, 128) packed uint8 slab."""
+        return self.shard_rows // PACK
 
     @property
     def packed_bytes(self) -> int:
@@ -83,17 +105,25 @@ class FlatParams(NamedTuple):
         return unflatten_tree(self.buf, self.layout)
 
 
-_layout_cache: dict = {}
+LAYOUT_CACHE_MAX = 32
+_layout_cache: OrderedDict = OrderedDict()
 
 
-def layout_of(tree: PyTree) -> FlatLayout:
-    """Cached FlatLayout for a pytree (keyed on structure+shapes+dtypes)."""
+def layout_of(tree: PyTree, shards: int = 1) -> FlatLayout:
+    """Cached FlatLayout for a pytree (keyed on structure+shapes+dtypes+shards).
+
+    ``shards`` pads ``rows`` to a multiple of ``ROW_MULTIPLE * shards`` so the
+    buffer splits into ``shards`` aligned slabs (model-axis wire sharding).
+    """
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     shapes = tuple(tuple(l.shape) for l in leaves)
     dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
-    key = (treedef, shapes, dtypes)
+    key = (treedef, shapes, dtypes, shards)
     hit = _layout_cache.get(key)
     if hit is not None:
+        _layout_cache.move_to_end(key)
         return hit
     sizes = tuple(math.prod(s) for s in shapes)
     offsets, off = [], 0
@@ -101,10 +131,12 @@ def layout_of(tree: PyTree) -> FlatLayout:
         offsets.append(off)
         off += s
     n = off
-    rows = round_up(max(-(-n // LANES), 1), ROW_MULTIPLE)
+    rows = round_up(max(-(-n // LANES), 1), ROW_MULTIPLE * shards)
     layout = FlatLayout(treedef, shapes, dtypes, sizes, tuple(offsets),
-                        n, rows)
+                        n, rows, shards)
     _layout_cache[key] = layout
+    while len(_layout_cache) > LAYOUT_CACHE_MAX:
+        _layout_cache.popitem(last=False)
     return layout
 
 

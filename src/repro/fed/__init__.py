@@ -1,2 +1,3 @@
 from repro.fed.worker import WorkerConfig, make_worker_configs  # noqa: F401
+from repro.fed.rounds import RoundEngine, WireConfig, WirePath  # noqa: F401
 from repro.fed.simulator import FedSimulator, SimResult  # noqa: F401

@@ -2,32 +2,40 @@
 
 Mapping (DESIGN.md §2): each federated worker owns one index of the fed
 mesh axis ('data' on a single pod → up to 16 workers; 'pod' across pods).
-Within a worker slice the model is tensor-sharded over 'model' (kept as an
-*auto* axis — XLA SPMD handles it; only the fed axis is manual).
+Within a worker slice the model is tensor-sharded over 'model'.
 
 The round sync flattens the whole model pytree into ONE padded
-``FlatParams`` buffer (``repro.core.flat``) and runs a single ``shard_map``
-over it, so the wire format is explicit in the HLO and there is exactly one
-collective per round regardless of the number of leaves:
+``FlatParams`` buffer (``repro.core.flat``) and runs a single 2-D
+``shard_map`` over (fed, model): the buffer's rows are *sharded over the
+model axis* (``layout_of(..., shards=M)``), so every device owns a
+``(rows/M, 128)`` slab, runs the fused wire kernels on that slab only, and
+the fed-axis collectives move ``1/M`` of the buffer per device instead of a
+replicated copy. The protocol math itself lives in ``repro.fed.rounds``
+(:class:`~repro.fed.rounds.WirePath`) — shared verbatim with the simulator —
+and this module only decides which bytes move between its steps:
 
   fedpc:        all_gather(int8 ternary)           — faithful Eq. (3)-(5)
   fedpc_packed: all_gather(uint8 2-bit codes)      — beyond-paper: the
                 paper packs for TCP; we pack *before the collective* so ICI
                 moves 4× fewer bytes than int8 (16× fewer than fp32)
+  fedpc_reduce: psum_scatter + all_gather(f16 Σ w_k T_k) — Eq. (3) needs
+                only the weighted sum; the RS+AG pair is the bandwidth-
+                optimal all-reduce and caps the payload regardless of N
   fedavg:       psum(weighted params)              — baseline all-reduce
 
 Pilot weights travel as a masked psum over the fed axis (the mesh analogue
 of the star-topology upload+broadcast; see EXPERIMENTS.md for the honest
 star-vs-all-reduce byte comparison).
 
-Every shard_map instance runs the *same* master math on public inputs, so
-the update stays consistent without a physical master — the master of the
-paper is replicated control flow here.
+Every (fed) shard_map instance runs the *same* master math on public
+inputs, so the update stays consistent without a physical master — the
+master of the paper is replicated control flow here (replicated over fed,
+sharded over model).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -35,12 +43,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import flat as fl
 from repro.core.goodness import select_pilot as _select_pilot
-from repro.core.packing import pack2bit, unpack2bit
-from repro.core.ternary import ternarize, ternarize_round1
+from repro.fed import rounds as rd
 from repro.models.model import Model
 from repro.utils import PyTree
 
-from repro.sharding.specs import param_specs
+from repro.sharding.specs import param_specs, wire_specs
 
 
 def _shard_map(body, mesh, in_specs, out_specs, manual_axes):
@@ -59,63 +66,79 @@ def _shard_map(body, mesh, in_specs, out_specs, manual_axes):
 
 
 # ---------------------------------------------------------------------------
-# Sync strategies (shard_map bodies over the fed axis, on the flat buffer)
+# Sync strategies (shard_map bodies over (fed, model), on flat buffer slabs)
 # ---------------------------------------------------------------------------
 
-def _sync_fedpc_flat(q_buf, p_prev, p_prev2, *, k_star, w, t, alpha0, beta,
-                     alpha1, axis, mode):
-    """One worker's slice of the round sync, entirely on flat vectors.
+def _sync_body(q_buf, p_prev, p_prev2, *, wire: rd.WirePath, k_star, w,
+               t, fed_axis, n_fed, mode):
+    """One (fed, model) device's slice of the round sync — a thin driver
+    over :class:`repro.fed.rounds.WirePath`.
 
-    q_buf: (1, n_pad) this worker's flattened weights; p_prev/p_prev2:
-    (n_pad,) replicated flattened history. Returns the (n_pad,) new global
-    flat model (identical on every instance).
+    q_buf: (1, sr, 128) this worker's slab of its flattened weights;
+    p_prev/p_prev2: (sr, 128) slabs of the public history (replicated over
+    fed, sharded over model). Returns the (sr, 128) slab of the new global
+    flat model (identical on every fed instance).
     """
-    idx = jax.lax.axis_index(axis)
+    idx = jax.lax.axis_index(fed_axis)
     q = q_buf[0]
-    # Eq. (4) at t == 1, Eq. (5) after — elementwise on the flat buffer.
-    tern = jnp.where(t <= 1,
-                     ternarize_round1(q, p_prev, alpha1),
-                     ternarize(q, p_prev, p_prev2, beta))
     # pilot upload+broadcast == masked all-reduce over the fed axis
-    q_pilot = jax.lax.psum(jnp.where(idx == k_star, q, 0.0), axis)
-    wf = w.astype(jnp.float32)                        # (F,) masked p_k*beta_k
+    q_pilot = jax.lax.psum(jnp.where(idx == k_star, q, 0.0), fed_axis)
+    wf = w.astype(jnp.float32)                    # (F,) masked Eq.(3) weights
 
+    if mode == "packed":
+        # Fused uplink on the slab → uint8 §3.3 codes on the wire → fused
+        # master over the gathered stack (in-register decode, Eq. (3)).
+        pk = wire.uplink_traced(q, p_prev, p_prev2, t=t)
+        pk_all = jax.lax.all_gather(pk, fed_axis)     # (F, sr/4, 128)
+        return wire.master(q_pilot, pk_all, wf, p_prev, p_prev2, t=t)
+
+    tern = wire.codes(q, p_prev, p_prev2, t)          # int8 (sr, 128)
     if mode == "reduce":
         # Beyond-paper: Eq. (3) needs only Σ_k w_k T_k — reduce in-network
-        # instead of gathering N ternary vectors. On an all-reduce fabric
-        # this caps the sync at one f16 all-reduce regardless of N (the
-        # gather grows linearly with N); every instance ends with the same
-        # sum so the replicated-master math is unchanged.
+        # instead of gathering N ternary slabs. psum_scatter + all_gather is
+        # the bandwidth-optimal all-reduce decomposition: each fed hop moves
+        # sr/F rows, and the payload stays flat in N (the gather grows
+        # linearly). Every instance ends with the same sum so the
+        # replicated-master math is unchanged.
         w_me = jnp.take(wf, idx)
         # f16 on the wire (bf16 triggers an XLA-CPU AllReducePromotion
         # crash in this container; on TPU use bf16 — same byte count)
         contrib = (w_me * tern.astype(jnp.float32)).astype(jnp.float16)
-        coeff = jax.lax.psum(contrib, axis).astype(jnp.float32)
-    elif mode == "packed":
-        pk = pack2bit(tern)                               # uint8 on the wire
-        pk_all = jax.lax.all_gather(pk, axis)             # (F, bytes)
-        tern_all = jax.vmap(lambda b: unpack2bit(b, tern.shape[0]))(pk_all)
-        coeff = jnp.tensordot(wf, tern_all.astype(jnp.float32), axes=1)
+        if contrib.shape[0] % n_fed == 0:
+            part = jax.lax.psum_scatter(contrib, fed_axis,
+                                        scatter_dimension=0, tiled=True)
+            coeff = jax.lax.all_gather(part, fed_axis, axis=0,
+                                       tiled=True).astype(jnp.float32)
+        else:                       # slab rows not divisible by F: plain psum
+            coeff = jax.lax.psum(contrib, fed_axis).astype(jnp.float32)
     else:
-        tern_all = jax.lax.all_gather(tern, axis)         # (F, n_pad) int8
+        tern_all = jax.lax.all_gather(tern, fed_axis)  # (F, sr, 128) int8
         coeff = jnp.tensordot(wf, tern_all.astype(jnp.float32), axes=1)
 
-    step = (p_prev - p_prev2).astype(jnp.float32)
-    r1 = q_pilot - alpha0 * coeff
-    rt = q_pilot - coeff * step
-    return jnp.where(t <= 1, r1, rt)
+    return wire.combine(q_pilot, coeff, p_prev, p_prev2, t)
 
 
 def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
                    strategy: str = "fedpc", alpha0: float = 0.01,
-                   beta: float = 0.2, alpha1: float = 0.01) -> Callable:
-    """Returns sync(params_F, state) -> (new_global_params, aux).
+                   beta: float = 0.2, alpha1: float = 0.01, *,
+                   model_axis: str = "model", shard_wire: bool = True,
+                   wire_block_rows: int | None = None) -> Callable:
+    """Returns sync(params_F, costs, sizes, state) -> (new_global_params, aux).
 
     params_F leaves are stacked (F, ...) over the fed axis; state carries
     the public history (params, params_prev — replicated) plus per-round
     costs (F,) and the 1-based round index.
+
+    With ``shard_wire=True`` (default) and a ``model_axis`` in the mesh, the
+    flat wire buffers are sharded over the model axis: per-device wire
+    memory and fed-collective payload are ``rows/M``. ``shard_wire=False``
+    keeps the replicated wire path (used by the parity tests and meshes
+    without a model axis — both paths produce identical global params).
     """
     F = mesh.shape[fed_axis]
+    M = mesh.shape.get(model_axis, 1) if shard_wire else 1
+    m_axis = model_axis if M > 1 else None
+    wcfg = rd.WireConfig(alpha0=alpha0, beta=beta, alpha1=alpha1)
 
     def sync(params_F: PyTree, costs: jax.Array, sizes: jax.Array,
              state: dict) -> tuple[PyTree, dict]:
@@ -129,35 +152,49 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
                 return jnp.sum(x.astype(jnp.float32) * wb, axis=0).astype(x.dtype)
             new_params = jax.tree_util.tree_map(avg, params_F)
         else:
-            mask = (jnp.arange(F) != k_star).astype(jnp.float32)
-            # Eq. (3): round 1 weighs workers by p_k alone (the alpha0 rule),
-            # later rounds by p_k * beta_k — matching core.update and the
-            # simulator ( `t` may be traced, hence the where).
-            w = mask * p_shares * jnp.where(jnp.asarray(t) <= 1, 1.0, beta)
-
             # Flat wire path: the whole pytree becomes one padded buffer per
-            # worker, so the sync is a single shard_map over flat vectors —
-            # one collective per round, not one per leaf.
-            layout = fl.layout_of(state["params"])
-            q_flat_F = fl.flatten_stacked(params_F, layout).reshape(
-                F, layout.padded)
-            p1_flat = fl.flatten_tree(state["params"], layout).reshape(-1)
-            p2_flat = fl.flatten_tree(state["params_prev"], layout).reshape(-1)
+            # worker (rows padded to M aligned slabs), so the sync is a
+            # single shard_map over (fed, model) — one fed collective per
+            # round, not one per leaf, each moving rows/M per device.
+            layout = fl.layout_of(state["params"], shards=M)
+            wire = rd.WirePath(wcfg, block_rows=wire_block_rows)
+            w = wire.weights(p_shares, k_star, t)
+            q_flat_F = fl.flatten_stacked(params_F, layout)
+            p1_flat = fl.flatten_tree(state["params"], layout)
+            p2_flat = fl.flatten_tree(state["params_prev"], layout)
+            if M > 1:
+                # Materialize the flat buffers on a sharding whose row axis
+                # is NOT split before handing them to the shard_map: XLA's
+                # SPMD partitioner (observed on CPU, jax 0.4) miscompiles
+                # the concat+pad+reshape of flatten when its output is
+                # resharded along the concat-derived row axis in the same
+                # fusion — values arrive strided. The constraint forces a
+                # clean boundary; the model-axis reshard then happens at
+                # shard_map entry. Workers stay sharded over fed (no
+                # cross-fed gather), history is replicated as it already is
+                # semantically.
+                q_flat_F = jax.lax.with_sharding_constraint(
+                    q_flat_F, NamedSharding(mesh, P(fed_axis, None, None)))
+                p1_flat, p2_flat = (
+                    jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, P(None, None)))
+                    for x in (p1_flat, p2_flat))
 
             body = partial(
-                _sync_fedpc_flat, k_star=k_star, w=w, t=t, alpha0=alpha0,
-                beta=beta, alpha1=alpha1, axis=fed_axis,
+                _sync_body, wire=wire, k_star=k_star, w=w, t=t,
+                fed_axis=fed_axis, n_fed=F,
                 mode={"fedpc_packed": "packed",
                       "fedpc_reduce": "reduce"}.get(strategy, "gather"))
 
+            specs = wire_specs(fed_axis, m_axis)
             new_flat = _shard_map(
                 body, mesh,
-                in_specs=(P(fed_axis), P(), P()),
-                out_specs=P(),
-                manual_axes={fed_axis},
+                in_specs=(specs["stacked"], specs["history"],
+                          specs["history"]),
+                out_specs=specs["out"],
+                manual_axes={fed_axis} | ({m_axis} if m_axis else set()),
             )(q_flat_F, p1_flat, p2_flat)
-            new_params = fl.unflatten_tree(
-                new_flat.reshape(layout.rows, fl.LANES), layout)
+            new_params = fl.unflatten_tree(new_flat, layout)
 
         new_state = {
             "params": new_params,

@@ -1,0 +1,186 @@
+"""The FedPC round engine — the wire protocol of Eq. (3)-(5)/§3.3 in ONE place.
+
+Both runtimes are thin drivers over this module:
+
+* ``repro.fed.simulator.run_fedpc`` — workers are in-process Python objects;
+  the engine runs the whole uplink as one batched kernel launch over the
+  stacked worker buffers and one fused master launch (``RoundEngine``).
+* ``repro.fed.distributed.build_fed_sync`` — workers are slices of a mesh
+  axis; the shard_map body calls the same :class:`WirePath` methods on its
+  local slab and moves bytes with collectives between them.
+
+The split of responsibilities:
+
+* :class:`WirePath` owns the *math*: ternarize (Eq. (4)/(5)) → pack (§3.3)
+  → aggregate (the masked Σ_k w_k T_k) → master update (Eq. (3)), over the
+  flat ``(rows, 128)`` buffers of ``repro.core.flat``. Fused Pallas kernels
+  where the data layout allows, jnp reference semantics (``codes`` /
+  ``combine``) for runtimes that move their own bytes between the steps.
+* :class:`RoundEngine` owns the *state*: the public two-step history
+  (P^{t-1}, P^{t-2}) carried between rounds, rotated exactly as Algorithm 1
+  prescribes.
+
+Nothing here selects the pilot — goodness (Alg. 1 line 4) stays in
+``repro.core.goodness`` and is shared by both runtimes already.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flat as fl
+from repro.core.ternary import ternarize, ternarize_round1
+from repro.kernels import ops
+from repro.utils import PyTree
+
+
+@dataclass(frozen=True)
+class WireConfig:
+    """The three public protocol scalars of the FedPC wire path."""
+    alpha0: float = 0.01      # Eq. (3) round-1 master step
+    beta: float = 0.2         # Eq. (5) significance threshold
+    alpha1: float = 0.01      # Eq. (4) round-1 threshold
+
+    @classmethod
+    def from_fedpc(cls, cfg) -> "WireConfig":
+        """Lift the wire scalars out of a ``core.fedpc.FedPCConfig``."""
+        return cls(alpha0=cfg.alpha0, beta=cfg.beta, alpha1=cfg.alpha_round1)
+
+
+@dataclass(frozen=True)
+class WirePath:
+    """Ternarize → pack → aggregate → master-update over flat buffers.
+
+    Buffers (any ``(rows, 128)`` slab of a ``FlatLayout``) are passed to
+    each method explicitly, so one WirePath serves full buffers and model
+    shards alike. ``interpret=None`` defers to the backend (Python
+    interpret on CPU, compiled on TPU); ``block_rows=None`` uses the
+    kernels' VMEM-sized default tile.
+    """
+    cfg: WireConfig = WireConfig()
+    interpret: bool | None = None
+    block_rows: int | None = None
+
+    # -- elementwise protocol math (jnp semantics, traced round index) ------
+
+    def codes(self, q: jax.Array, p1: jax.Array, p2: jax.Array,
+              t) -> jax.Array:
+        """Eq. (4) at t <= 1 (``p1`` holds P^0), Eq. (5) after; int8 codes
+        of ``q.shape``. Works on any slab/shape — it is elementwise."""
+        t1 = ternarize_round1(q, p1, self.cfg.alpha1)
+        tt = ternarize(q, p1, p2, self.cfg.beta)
+        return jnp.where(jnp.asarray(t) <= 1, t1, tt)
+
+    def combine(self, q_pilot: jax.Array, coeff: jax.Array, p1: jax.Array,
+                p2: jax.Array, t) -> jax.Array:
+        """Eq. (3) given the aggregated ``coeff = Σ_k w_k T_k``: round 1
+        steps by ``alpha0``, later rounds by the history step P^{t-1}-P^{t-2}."""
+        step = (p1 - p2).astype(jnp.float32)
+        r1 = q_pilot - self.cfg.alpha0 * coeff
+        rt = q_pilot - coeff * step
+        return jnp.where(jnp.asarray(t) <= 1, r1, rt)
+
+    def weights(self, p_shares: jax.Array, k_star, t) -> jax.Array:
+        """Masked per-worker Eq. (3) coefficients: p_k at round 1 (the
+        alpha0 rule), p_k·beta_k after; the pilot's entry is zeroed."""
+        n = p_shares.shape[0]
+        mask = (jnp.arange(n) != k_star).astype(jnp.float32)
+        scale = jnp.where(jnp.asarray(t) <= 1, 1.0, self.cfg.beta)
+        return mask * p_shares.astype(jnp.float32) * scale
+
+    # -- fused kernel path over (rows, 128) slabs ---------------------------
+
+    def uplink(self, buf_q: jax.Array, buf_p1: jax.Array, buf_p2: jax.Array,
+               *, t: int) -> jax.Array:
+        """One worker's §3.3 wire buffer (static round): (rows, 128) →
+        (rows//4, 128) uint8, one launch, no int8 intermediate."""
+        return ops.flat_ternary_pack(
+            buf_q, buf_p1, buf_p2, t=t, beta=self.cfg.beta,
+            alpha1=self.cfg.alpha1, interpret=self.interpret,
+            block_rows=self.block_rows)
+
+    def uplink_traced(self, buf_q: jax.Array, buf_p1: jax.Array,
+                      buf_p2: jax.Array, *, t) -> jax.Array:
+        """Like :meth:`uplink` but ``t`` may be traced (branch selected
+        in-register) — the distributed sync's per-slab uplink."""
+        return ops.flat_ternary_pack_traced(
+            buf_q, buf_p1, buf_p2, t=t, beta=self.cfg.beta,
+            alpha1=self.cfg.alpha1, interpret=self.interpret,
+            block_rows=self.block_rows)
+
+    def uplink_stacked(self, bufs_q: jax.Array, buf_p1: jax.Array,
+                       buf_p2: jax.Array, *, t) -> jax.Array:
+        """All N workers' wire buffers in ONE launch: (N, rows, 128) →
+        (N, rows//4, 128) uint8 — the simulator's batched uplink."""
+        return ops.flat_ternary_pack_stacked(
+            bufs_q, buf_p1, buf_p2, t=t, beta=self.cfg.beta,
+            alpha1=self.cfg.alpha1, interpret=self.interpret,
+            block_rows=self.block_rows)
+
+    def master(self, buf_pilot: jax.Array, packed: jax.Array, w: jax.Array,
+               buf_p1: jax.Array, buf_p2: jax.Array, *, t) -> jax.Array:
+        """Fused Eq. (3) over packed wire codes: in-register 2-bit decode +
+        masked weighted reduce + history step, one launch. ``t`` may be
+        traced."""
+        return ops.flat_master_update(
+            buf_pilot, packed, w, buf_p1, buf_p2, t=t,
+            alpha0=self.cfg.alpha0, interpret=self.interpret,
+            block_rows=self.block_rows)
+
+    def round_from_stacked(self, bufs_q: jax.Array, k_star, w: jax.Array,
+                           buf_p1: jax.Array, buf_p2: jax.Array, *, t
+                           ) -> tuple[jax.Array, jax.Array]:
+        """A full round over stacked worker buffers: batched uplink + fused
+        master — exactly two kernel launches regardless of N.
+
+        The pilot's row is packed like everyone else's and masked out of
+        Eq. (3) by ``w[k_star] == 0`` (bitwise identical to zero-filling it:
+        0·T contributes exactly ±0.0 to the reduce).
+
+        Returns ``(new_global_buf, packed_stacked)`` — the packed buffers
+        ride along for byte accounting / ledger purposes.
+        """
+        packed = self.uplink_stacked(bufs_q, buf_p1, buf_p2, t=t)
+        buf_pilot = bufs_q[k_star]
+        new_buf = self.master(buf_pilot, packed, w, buf_p1, buf_p2, t=t)
+        return new_buf, packed
+
+
+class RoundEngine:
+    """Carries the public history across rounds and drives :class:`WirePath`.
+
+    The simulator's per-round protocol work reduces to::
+
+        bufs_q = engine.flatten_locals(locals_)           # stack worker trees
+        new_params = engine.run_round(bufs_q, k_star, p_shares, t)
+
+    which is two kernel launches + one unflatten. The history rotation
+    (P^{t-1}, P^{t-2}) ← (P^t, P^{t-1}) happens inside ``run_round``.
+    """
+
+    def __init__(self, init_params: PyTree, cfg: WireConfig | None = None,
+                 *, shards: int = 1, interpret: bool | None = None,
+                 block_rows: int | None = None):
+        self.layout = fl.layout_of(init_params, shards=shards)
+        self.wire = WirePath(cfg or WireConfig(),
+                             interpret=interpret, block_rows=block_rows)
+        self.buf_p1 = fl.flatten_tree(init_params, self.layout)   # P^{t-1}
+        self.buf_p2 = jnp.zeros_like(self.buf_p1)                 # P^{t-2}
+
+    def flatten_locals(self, locals_: list[PyTree]) -> jax.Array:
+        """Stack N worker pytrees into the (N, rows, 128) uplink input."""
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *locals_)
+        return fl.flatten_stacked(stacked, self.layout)
+
+    def run_round(self, bufs_q: jax.Array, k_star, p_shares: jax.Array,
+                  t) -> PyTree:
+        """Alg. 1 lines 5-8 for one round; returns the new global pytree and
+        advances the engine's history."""
+        w = self.wire.weights(p_shares, k_star, t)
+        new_buf, _packed = self.wire.round_from_stacked(
+            bufs_q, k_star, w, self.buf_p1, self.buf_p2, t=t)
+        self.buf_p1, self.buf_p2 = new_buf, self.buf_p1
+        return fl.unflatten_tree(new_buf, self.layout)

@@ -19,19 +19,12 @@ import numpy as np
 
 from repro.core import baselines as bl
 from repro.core import fedpc as fp
-from repro.core import flat as fl
 from repro.core import protocol as proto
-from repro.core.convergence import CostHistory
 from repro.core.goodness import select_pilot
-from repro.core.privacy import LeakageLedger, should_evade
-from repro.core.update import masked_weights
+from repro.core.privacy import LeakageLedger
+from repro.fed import rounds as rd
 from repro.fed.worker import Worker
-from repro.kernels import ops
-from repro.utils import PyTree, tree_size
-
-# A §3.3 wire byte whose four 2-bit fields all decode to code 0 — used to
-# fill the pilot's (masked) row of the stacked packed buffer.
-ZERO_CODES_BYTE = 0b01010101
+from repro.utils import PyTree
 
 
 @dataclass
@@ -69,18 +62,15 @@ class FedSimulator:
         cfg = self.fed_cfg
         state = fp.init_state(self.init_params, self.n)
         model_bytes = proto.model_size_bytes(self.init_params)
-        n_params = tree_size(self.init_params)
         res = SimResult("fedpc", state.params)
         prev_costs_rep = [np.inf] * self.n
 
-        # Flat wire path: one cached layout, single (rows, 128) buffers for
-        # the public history — re-flattened only when a new global model is
-        # produced (the new buffer is carried to the next round).
-        layout = fl.layout_of(self.init_params)
-        buf_p1 = fl.flatten_tree(state.params, layout)        # P^{t-1}
-        buf_p2 = jnp.zeros_like(buf_p1)                       # P^{t-2}
-        pilot_fill = jnp.full((layout.packed_rows, fl.LANES),
-                              ZERO_CODES_BYTE, jnp.uint8)
+        # The round engine owns the whole wire path (Eq. (3)-(5)/§3.3) and
+        # the (P^{t-1}, P^{t-2}) history buffers; this loop only trains
+        # workers, selects the pilot and keeps the ledger/byte accounting.
+        engine = rd.RoundEngine(self.init_params,
+                                rd.WireConfig.from_fedpc(cfg))
+        p_shares = jnp.asarray(self.sizes / self.sizes.sum())
 
         for t in range(1, rounds + 1):
             # --- workers train locally (parallel in the real system) ---
@@ -105,37 +95,20 @@ class FedSimulator:
             k_star = int(k_star)
 
             # --- uplinks: pilot sends weights; others send 2-bit codes ---
-            # Each non-pilot's wire buffer comes from ONE fused kernel
-            # (Eq. (4)/(5) → §3.3 pack, no int8 intermediate); the pilot row
-            # is all-zero codes, masked out of Eq. (3) anyway.
+            # The engine packs ALL N workers' wire buffers in ONE batched
+            # kernel launch (the pilot's row is masked out of Eq. (3) by its
+            # zero weight) and applies the fused master update — the whole
+            # round's wire math is two launches regardless of N.
             self.ledger.record(k_star, t, "pilot_params", True)
-            buf_pilot = None
-            packed = []
             for k in range(self.n):
-                buf_q = fl.flatten_tree(locals_[k], layout)
-                if k == k_star:
-                    buf_pilot = buf_q
-                    packed.append(pilot_fill)
-                else:
-                    packed.append(ops.flat_ternary_pack(
-                        buf_q, buf_p1, buf_p2, t=t, beta=cfg.beta,
-                        alpha1=cfg.alpha_round1))
+                if k != k_star:
                     self.ledger.record(k, t, "packed_ternary", False)
-            packed_stacked = jnp.stack(packed)      # (N, rows//4, 128) wire
-
-            p_shares = jnp.asarray(self.sizes / self.sizes.sum())
-            betas = (jnp.ones((self.n,), jnp.float32) if t == 1
-                     else jnp.full((self.n,), cfg.beta, jnp.float32))
-            w_masked = masked_weights(p_shares, betas, k_star)
-            new_buf = ops.flat_master_update(
-                buf_pilot, packed_stacked, w_masked, buf_p1, buf_p2,
-                t=t, alpha0=cfg.alpha0)
-            new_params = fl.unflatten_tree(new_buf, layout)
+            bufs_q = engine.flatten_locals(locals_)
+            new_params = engine.run_round(bufs_q, k_star, p_shares, t)
 
             state = fp.FedPCState(
                 params=new_params, params_prev=state.params,
                 prev_costs=costs_arr, round=jnp.asarray(t + 1))
-            buf_p1, buf_p2 = new_buf, buf_p1
             prev_costs_rep = rep_costs
 
             res.costs.append(float(np.average(costs, weights=self.sizes)))

@@ -10,6 +10,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pipeline import BatchIterator
@@ -78,10 +79,23 @@ class Worker:
         """Run `local_epochs` epochs from the given global params; return
         (local_params Q_k, cost C_k). Optimizer state is private and persists
         across rounds (fresh momentum for new params would also be valid —
-        the paper leaves this to the worker)."""
+        the paper leaves this to the worker).
+
+        The single ``float(...)`` here is the round's only device→host sync;
+        the per-batch loop below stays fully asynchronous on device.
+        """
+        params, cost = self.train_round_device(params)
+        return params, float(cost)
+
+    def train_round_device(self, params: PyTree) -> tuple[PyTree, jax.Array]:
+        """`train_round` without the host sync: the cost comes back as a
+        device scalar. The loss is accumulated on-device — converting it per
+        batch (the old ``float(loss)``) blocked dispatch on every step and
+        serialized the round on the transfer latency."""
         if self.opt_state is None:
             self.opt_state = self.opt.init(params)
-        total_loss, n_batches = 0.0, 0
+        total_loss = jnp.zeros((), jnp.float32)
+        n_batches = 0
         for _ in range(self.cfg.local_epochs):
             for batch in self.loader.epoch():
                 lr = self.lr_fn(self.step)
@@ -89,8 +103,7 @@ class Worker:
                 updates, self.opt_state = self.opt.update(
                     grads, self.opt_state, params, lr)
                 params = opt_mod.apply_updates(params, updates)
-                total_loss += float(loss)
+                total_loss = total_loss + loss
                 n_batches += 1
                 self.step += 1
-        cost = total_loss / max(n_batches, 1)
-        return params, cost
+        return params, total_loss / max(n_batches, 1)

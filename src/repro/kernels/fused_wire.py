@@ -9,6 +9,10 @@ wire format: float (R, 512) history views in, uint8 (R, 128) packed codes
 out. The separate int8 code tensor of the two-kernel composition
 (``ternary_encode`` → ``pack2bit``) — 4× the wire size, written to and
 re-read from HBM — never exists: codes live only in VMEM registers.
+``ternary_pack_any_2d`` carries the round index as a scalar operand so a
+traced ``t`` selects the Eq. (4)/(5) branch in-register (for jit'd round
+loops); ``ternary_pack_stacked_2d`` batches all N workers' uplinks into ONE
+launch over a (N, R, 512) stack sharing the public history blocks.
 
 ``packed_master_update_2d`` — master downlink side of Eq. (3). Consumes the
 *packed* uint8 codes of all N workers, decodes the 2-bit fields in-register,
@@ -43,6 +47,12 @@ def _codes_eq5(q, p1, p2, beta):
     return jnp.where(significant, jnp.sign(delta * step), 0.0)
 
 
+def _codes_eq4(q, p0, alpha):
+    """Eq. (4) round-1 codes in-register vs the public init P^0."""
+    d = q - p0
+    return (d > alpha).astype(jnp.float32) - (d < -alpha).astype(jnp.float32)
+
+
 def _pack_tile(codes):
     """(R, 512) float codes → (R, 128) uint8, 4 consecutive codes per byte."""
     r = codes.shape[0]
@@ -74,11 +84,33 @@ def _ternary_pack_kernel(q_ref, p1_ref, p2_ref, beta_ref, out_ref):
 
 
 def _ternary_pack_round1_kernel(q_ref, p0_ref, alpha_ref, out_ref):
-    d = q_ref[...].astype(jnp.float32) - p0_ref[...].astype(jnp.float32)
-    alpha = alpha_ref[0]
-    codes = ((d > alpha).astype(jnp.float32)
-             - (d < -alpha).astype(jnp.float32))
-    out_ref[...] = _pack_tile(codes)
+    q = q_ref[...].astype(jnp.float32)
+    p0 = p0_ref[...].astype(jnp.float32)
+    out_ref[...] = _pack_tile(_codes_eq4(q, p0, alpha_ref[0]))
+
+
+def _codes_any(q, p1, p2, t, beta, alpha1):
+    """Round-branch select on a (possibly traced) round index: Eq. (4) at
+    t <= 1 (p1 slot holds P^0), Eq. (5) after. Both branches are in-register
+    VPU ops, so evaluating both costs no HBM traffic."""
+    return jnp.where(t <= 1.0, _codes_eq4(q, p1, alpha1),
+                     _codes_eq5(q, p1, p2, beta))
+
+
+def _ternary_pack_any_kernel(q_ref, p1_ref, p2_ref, scal_ref, out_ref):
+    q = q_ref[...].astype(jnp.float32)
+    p1 = p1_ref[...].astype(jnp.float32)
+    p2 = p2_ref[...].astype(jnp.float32)
+    t, beta, alpha1 = scal_ref[0], scal_ref[1], scal_ref[2]
+    out_ref[...] = _pack_tile(_codes_any(q, p1, p2, t, beta, alpha1))
+
+
+def _ternary_pack_stacked_kernel(q_ref, p1_ref, p2_ref, scal_ref, out_ref):
+    q = q_ref[0].astype(jnp.float32)                   # block (1, R, 512)
+    p1 = p1_ref[...].astype(jnp.float32)               # shared history block
+    p2 = p2_ref[...].astype(jnp.float32)
+    t, beta, alpha1 = scal_ref[0], scal_ref[1], scal_ref[2]
+    out_ref[0] = _pack_tile(_codes_any(q, p1, p2, t, beta, alpha1))
 
 
 def _master_kernel(q_ref, pk_ref, w_ref, p1_ref, p2_ref, scal_ref, out_ref):
@@ -132,6 +164,66 @@ def ternary_pack_round1_2d(q, p0, alpha, *, interpret: bool = True,
         out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.uint8),
         interpret=interpret,
     )(q, p0, jnp.asarray([alpha], jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def ternary_pack_any_2d(q, p1, p2, t, beta, alpha1, *, interpret: bool = True,
+                        block_rows: int = BLOCK_ROWS):
+    """Traced-round fused uplink: Eq. (4) at t <= 1, Eq. (5) after.
+
+    Same layout as :func:`ternary_pack_2d`, but the round index ``t`` (and
+    both thresholds) travel as scalar operands so one compiled kernel serves
+    every round — required inside jit'd round loops (the distributed sync)
+    where ``t`` is traced.
+    """
+    rows = q.shape[0]
+    grid = (rows // block_rows,)
+    in_spec = pl.BlockSpec((block_rows, LANES * PACK), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+    scal = jnp.stack([jnp.asarray(t, jnp.float32),
+                      jnp.asarray(beta, jnp.float32),
+                      jnp.asarray(alpha1, jnp.float32)])
+    return pl.pallas_call(
+        _ternary_pack_any_kernel,
+        grid=grid,
+        in_specs=[in_spec, in_spec, in_spec,
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.uint8),
+        interpret=interpret,
+    )(q, p1, p2, scal)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def ternary_pack_stacked_2d(q, p1, p2, t, beta, alpha1, *,
+                            interpret: bool = True,
+                            block_rows: int = BLOCK_ROWS):
+    """Batched uplink: all N workers' wire buffers from ONE launch.
+
+    q (N, R, 512) — every worker's history view; p1/p2 (R, 512) — the shared
+    public history, re-read per worker block (it is the same HBM buffer, not
+    N copies). Grid is (N, R/block): worker-major, so the §3.3 byte order of
+    each worker's buffer matches :func:`ternary_pack_2d` exactly. Returns
+    (N, R, 128) uint8.
+    """
+    n, rows, _ = q.shape
+    grid = (n, rows // block_rows)
+    q_spec = pl.BlockSpec((1, block_rows, LANES * PACK),
+                          lambda k, i: (k, i, 0))
+    h_spec = pl.BlockSpec((block_rows, LANES * PACK), lambda k, i: (i, 0))
+    out_spec = pl.BlockSpec((1, block_rows, LANES), lambda k, i: (k, i, 0))
+    scal = jnp.stack([jnp.asarray(t, jnp.float32),
+                      jnp.asarray(beta, jnp.float32),
+                      jnp.asarray(alpha1, jnp.float32)])
+    return pl.pallas_call(
+        _ternary_pack_stacked_kernel,
+        grid=grid,
+        in_specs=[q_spec, h_spec, h_spec,
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, rows, LANES), jnp.uint8),
+        interpret=interpret,
+    )(q, p1, p2, scal)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))

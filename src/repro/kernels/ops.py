@@ -7,12 +7,10 @@ what the distributed sync uses when ``use_kernels=True``.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels import fused_wire as fw
 from repro.kernels import pack2bit as pk
@@ -147,6 +145,46 @@ def flat_ternary_pack(buf_q, buf_p1, buf_p2, *, t: int, beta: float,
     return fw.ternary_pack_2d(
         q4, buf_p1.reshape(r4, LANES * fw.PACK),
         buf_p2.reshape(r4, LANES * fw.PACK), beta,
+        interpret=interpret, block_rows=br)
+
+
+def flat_ternary_pack_traced(buf_q, buf_p1, buf_p2, *, t, beta: float,
+                             alpha1: float, interpret: bool | None = None,
+                             block_rows: int | None = None):
+    """Fused uplink over FlatParams buffers with a *traced* round index.
+
+    Same contract as :func:`flat_ternary_pack` but ``t`` may be a traced
+    scalar (the Eq. (4)/(5) branch is selected in-register), so it can live
+    inside a jit'd round loop such as the distributed sync body.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    rows = buf_q.shape[0]
+    r4 = rows // fw.PACK
+    wide = LANES * fw.PACK
+    br = _block_rows_for(r4, block_rows or fw.BLOCK_ROWS)
+    return fw.ternary_pack_any_2d(
+        buf_q.reshape(r4, wide), buf_p1.reshape(r4, wide),
+        buf_p2.reshape(r4, wide), t, beta, alpha1,
+        interpret=interpret, block_rows=br)
+
+
+def flat_ternary_pack_stacked(bufs_q, buf_p1, buf_p2, *, t, beta: float,
+                              alpha1: float, interpret: bool | None = None,
+                              block_rows: int | None = None):
+    """Batched uplink: (N, rows, 128) worker buffers → (N, rows//4, 128)
+    packed wire buffers in ONE kernel launch.
+
+    The shared public history ``buf_p1``/``buf_p2`` is passed once, not
+    stacked N times. ``t`` may be traced (scalar-operand branch select).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    n, rows, _ = bufs_q.shape
+    r4 = rows // fw.PACK
+    wide = LANES * fw.PACK
+    br = _block_rows_for(r4, block_rows or fw.BLOCK_ROWS)
+    return fw.ternary_pack_stacked_2d(
+        bufs_q.reshape(n, r4, wide), buf_p1.reshape(r4, wide),
+        buf_p2.reshape(r4, wide), t, beta, alpha1,
         interpret=interpret, block_rows=br)
 
 

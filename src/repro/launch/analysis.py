@@ -18,11 +18,9 @@ where g = replica-group size parsed from the op.
 """
 from __future__ import annotations
 
-import math
 import re
 from dataclasses import dataclass, field
 
-import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16

@@ -129,7 +129,7 @@ def run_fed(arch: str, strategy: str, multi_pod: bool = False,
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    from repro.fed.distributed import build_fed_step, fed_state_init
+    from repro.fed.distributed import build_fed_step
     from repro.models.model import build_model
     from repro.optim.optimizers import momentum
     from repro.sharding.specs import param_specs
@@ -178,8 +178,6 @@ def run_fed(arch: str, strategy: str, multi_pod: bool = False,
 
         params = jax.tree_util.tree_map(
             lambda l, s: sds(l, s), params_shape, pspecs)
-        params_F = jax.tree_util.tree_map(
-            lambda l, s: sds(l, s, lead=(F,)), params_shape, pspecs)
         opt_shape = jax.eval_shape(model.optimizer.init, params_shape)
         opt_specs = jax.tree_util.tree_map(
             _drop, param_specs(opt_shape, mesh),

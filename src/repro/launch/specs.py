@@ -22,7 +22,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.models.model import Model, build_model
 from repro.optim.optimizers import momentum
-from repro.sharding.specs import batch_spec, cache_specs, data_axes, param_specs
+from repro.sharding.specs import batch_spec, cache_specs, param_specs
 
 SHAPES = {
     "train_4k": dict(kind="train", seq=4096, batch=256),
@@ -65,7 +65,7 @@ def _extra_batch(cfg: ArchConfig, mesh: Mesh, batch: int, seq: int,
                  dtype) -> dict:
     """Modality-stub inputs (brief carve-out): precomputed embeddings."""
     extras = {}
-    dp = data_spec = batch_spec(mesh, batch, extra_dims=2)
+    data_spec = batch_spec(mesh, batch, extra_dims=2)
     if cfg.arch_type == "vlm":
         n_p = min(cfg.n_patches, seq)
         extras["vision_embed"] = _sds((batch, n_p, cfg.d_model), dtype,

@@ -12,7 +12,6 @@ SSM/LSTM states for recurrent mixers), so decode is also one scan.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Optional
 
 import jax

@@ -3,4 +3,5 @@ from repro.sharding.specs import (  # noqa: F401
     batch_spec,
     cache_specs,
     data_axes,
+    wire_specs,
 )

@@ -22,7 +22,6 @@ import re
 from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 PyTree = Any
@@ -199,6 +198,25 @@ def param_shardings(params: PyTree, mesh: Mesh) -> PyTree:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), param_specs(params, mesh)
     )
+
+
+def wire_specs(fed_axis: str, model_axis: str | None) -> dict:
+    """PartitionSpecs for the flat wire buffers of the fed round sync.
+
+    The ``(rows, 128)`` FlatParams buffers shard their *row* axis over the
+    model axis (each model shard owns a ``(rows/M, 128)`` slab); the stacked
+    per-worker buffers additionally split their leading worker axis over the
+    fed axis. ``model_axis=None`` replicates the rows (the pre-sharded wire
+    path — kept for parity testing and meshes without a model axis).
+
+    Keys: ``stacked`` (F, rows, 128) worker buffers; ``history`` (rows, 128)
+    public P^{t-1}/P^{t-2}; ``out`` (rows, 128) new global buffer.
+    """
+    return {
+        "stacked": P(fed_axis, model_axis, None),
+        "history": P(model_axis, None),
+        "out": P(model_axis, None),
+    }
 
 
 def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:

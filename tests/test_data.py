@@ -1,6 +1,5 @@
 """Federated data splits (Figs 2/3/5) + pipeline."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import BatchIterator, federated_loaders

@@ -173,6 +173,39 @@ def test_layout_is_cached():
         jax.tree_util.tree_map(lambda x: x + 1, tree))
 
 
+def test_layout_cache_is_bounded_lru():
+    """The layout cache must not grow without limit in long-lived
+    multi-model processes, and must evict least-recently-used first."""
+    fl._layout_cache.clear()
+    trees = [{"x": jnp.zeros((8, i + 1))}
+             for i in range(fl.LAYOUT_CACHE_MAX + 10)]
+    for t in trees:
+        fl.layout_of(t)
+    assert len(fl._layout_cache) == fl.LAYOUT_CACHE_MAX
+    # oldest entries were evicted → recomputed (new object); newest retained
+    newest = fl.layout_of(trees[-1])
+    assert fl.layout_of(trees[-1]) is newest
+    # touching an old-but-retained entry protects it from the next eviction
+    protected = fl.layout_of(trees[11])           # refresh its recency
+    fl.layout_of({"x": jnp.zeros((16, 999))})     # force one eviction
+    assert fl.layout_of(trees[11]) is protected
+
+
+def test_layout_shards_align_slabs():
+    tree = _param_tree(jax.random.PRNGKey(2))
+    for m in (1, 2, 4, 8):
+        lay = fl.layout_of(tree, shards=m)
+        assert lay.shards == m
+        assert lay.rows % (fl.ROW_MULTIPLE * m) == 0
+        assert lay.shard_rows * m == lay.rows
+        assert lay.packed_shard_rows * fl.PACK == lay.shard_rows
+        # flatten/unflatten round-trips under any shard padding
+        fp = fl.FlatParams.from_tree(tree, lay)
+        for a, b in zip(jax.tree_util.tree_leaves(fp.to_tree()),
+                        jax.tree_util.tree_leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # ---------------------------------------------------------------------------
 # Launch accounting: the fused uplink is ONE pallas_call with no int8
 # intermediate; the old composition is two with a full-size int8 tensor

@@ -1,7 +1,6 @@
 """Optimizers + schedules: convergence on a quadratic, momentum/adam math."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.optim.optimizers import adam, apply_updates, get, momentum, sgd

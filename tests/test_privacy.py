@@ -65,7 +65,7 @@ def test_simulator_ledger_integration():
     ]
     params = init_mlp_classifier(jax.random.PRNGKey(0), 8, 3, hidden=(16,))
     sim = FedSimulator(workers, params)
-    res = sim.run_fedpc(rounds=4)
+    sim.run_fedpc(rounds=4)
     kinds = {k for (_, _, k, _) in sim.ledger.events}
     assert kinds <= {"cost", "pilot_params", "packed_ternary"}
     # exactly one pilot upload per round

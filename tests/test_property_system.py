@@ -3,7 +3,6 @@ exact re-expressions of the reference math."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
@@ -49,7 +48,6 @@ def test_lstm_chunk_invariance(seed):
 def test_moe_block_dispatch_matches_global():
     """Shard-local dispatch with s blocks == global dispatch when capacity
     is not binding (the math is a permutation of buffer slots)."""
-    from repro.models import moe as moe_mod
     from repro.sharding import activations as act
 
     cfg = get_config("grok-1-314b").reduced().replace(capacity_factor=8.0)

@@ -1,0 +1,199 @@
+"""Round engine (repro.fed.rounds): parity with the per-worker wire path it
+replaced, with the pytree-level numerics oracle, and launch accounting for
+the batched uplink (the simulator's N-worker uplink must be ONE kernel)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import flat as fl
+from repro.core.ternary import ternarize_tree, ternarize_tree_round1
+from repro.core.update import masked_weights, master_update_tree
+from repro.fed import rounds as rd
+from repro.kernels import ops
+
+# A §3.3 wire byte whose four 2-bit fields all decode to code 0 — what the
+# pre-engine simulator used to fill the pilot's masked row with.
+ZERO_CODES_BYTE = 0b01010101
+
+
+def _param_tree(key):
+    ks = jax.random.split(key, 4)
+    return {
+        "w0": jax.random.normal(ks[0], (33, 17)),
+        "b0": jax.random.normal(ks[1], (17,)),
+        "w1": jax.random.normal(ks[2], (17, 5)),
+        "scalar": jax.random.normal(ks[3], ()),
+    }
+
+
+def _round_fixture(n_workers, t, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tree = _param_tree(key)
+    p1t = tree
+    p2t = (jax.tree_util.tree_map(jnp.zeros_like, tree) if t == 1
+           else jax.tree_util.tree_map(lambda x: 0.9 * x, tree))
+    locals_ = [jax.tree_util.tree_map(
+        lambda x, i=i: x + 0.02 * (i + 1) * jnp.sign(x), tree)
+        for i in range(n_workers)]
+    p_shares = jnp.linspace(0.5, 1.5, n_workers)
+    p_shares = p_shares / p_shares.sum()
+    return tree, p1t, p2t, locals_, p_shares
+
+
+@pytest.mark.parametrize("n_workers", [2, 8])
+@pytest.mark.parametrize("t", [1, 3])
+def test_engine_round_bitwise_matches_per_worker_path(n_workers, t):
+    """simulator-via-engine == the pre-engine simulator path, bit for bit.
+
+    The old path packed each non-pilot worker with its own kernel launch,
+    zero-filled the pilot's packed row, and ran the fused master update.
+    The engine packs all N rows (pilot masked by w instead) in one launch —
+    the global params must not move by a single ULP.
+    """
+    tree, p1t, p2t, locals_, p_shares = _round_fixture(n_workers, t)
+    cfg = rd.WireConfig(alpha0=0.01, beta=0.2, alpha1=0.01)
+    k_star = n_workers // 2
+
+    # --- engine path -------------------------------------------------------
+    engine = rd.RoundEngine(tree, cfg)
+    engine.buf_p1 = fl.flatten_tree(p1t, engine.layout)
+    engine.buf_p2 = fl.flatten_tree(p2t, engine.layout)
+    got = engine.run_round(engine.flatten_locals(locals_), k_star,
+                           p_shares, t)
+
+    # --- the old per-worker path, inline -----------------------------------
+    layout = fl.layout_of(tree)
+    buf_p1 = fl.flatten_tree(p1t, layout)
+    buf_p2 = fl.flatten_tree(p2t, layout)
+    pilot_fill = jnp.full((layout.packed_rows, fl.LANES),
+                          ZERO_CODES_BYTE, jnp.uint8)
+    buf_pilot, packed = None, []
+    for k in range(n_workers):
+        buf_q = fl.flatten_tree(locals_[k], layout)
+        if k == k_star:
+            buf_pilot = buf_q
+            packed.append(pilot_fill)
+        else:
+            packed.append(ops.flat_ternary_pack(
+                buf_q, buf_p1, buf_p2, t=t, beta=cfg.beta,
+                alpha1=cfg.alpha1))
+    betas = (jnp.ones((n_workers,)) if t == 1
+             else jnp.full((n_workers,), cfg.beta))
+    w = masked_weights(p_shares, betas, k_star)
+    new_buf = ops.flat_master_update(
+        buf_pilot, jnp.stack(packed), w, buf_p1, buf_p2,
+        t=t, alpha0=cfg.alpha0)
+    want = fl.unflatten_tree(new_buf, layout)
+
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("t", [1, 3])
+def test_engine_round_matches_tree_oracle(t):
+    """Engine output vs core.update.master_update_tree on the same codes."""
+    n_workers = 6
+    tree, p1t, p2t, locals_, p_shares = _round_fixture(n_workers, t, seed=4)
+    cfg = rd.WireConfig()
+    k_star = 2
+
+    engine = rd.RoundEngine(tree, cfg)
+    engine.buf_p1 = fl.flatten_tree(p1t, engine.layout)
+    engine.buf_p2 = fl.flatten_tree(p2t, engine.layout)
+    got = engine.run_round(engine.flatten_locals(locals_), k_star,
+                           p_shares, t)
+
+    terns = ([ternarize_tree_round1(l, p1t, cfg.alpha1) for l in locals_]
+             if t == 1 else
+             [ternarize_tree(l, p1t, p2t, cfg.beta) for l in locals_])
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *terns)
+    want = master_update_tree(
+        locals_[k_star], stacked, p_shares,
+        jnp.full((n_workers,), cfg.beta), k_star, p1t, p2t, t, cfg.alpha0)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_engine_history_rotation():
+    """P^{t-1}/P^{t-2} rotate exactly as Algorithm 1 prescribes."""
+    tree, p1t, p2t, locals_, p_shares = _round_fixture(3, 1)
+    engine = rd.RoundEngine(tree, rd.WireConfig())
+    p1_before = engine.buf_p1
+    new_params = engine.run_round(engine.flatten_locals(locals_), 0,
+                                  p_shares, 1)
+    np.testing.assert_array_equal(np.asarray(engine.buf_p2),
+                                  np.asarray(p1_before))
+    np.testing.assert_array_equal(
+        np.asarray(engine.buf_p1),
+        np.asarray(fl.flatten_tree(new_params, engine.layout)))
+
+
+def test_wire_weights_match_masked_weights():
+    p_shares = jnp.array([0.1, 0.4, 0.3, 0.2])
+    wire = rd.WirePath(rd.WireConfig(beta=0.2))
+    for k_star in range(4):
+        np.testing.assert_allclose(
+            np.asarray(wire.weights(p_shares, k_star, 1)),
+            np.asarray(masked_weights(p_shares, jnp.ones((4,)), k_star)))
+        np.testing.assert_allclose(
+            np.asarray(wire.weights(p_shares, k_star, 5)),
+            np.asarray(masked_weights(p_shares, jnp.full((4,), 0.2),
+                                      k_star)))
+
+
+# ---------------------------------------------------------------------------
+# Launch accounting (the acceptance criterion: the N-worker uplink is ONE
+# batched pallas_call, the whole round exactly two)
+# ---------------------------------------------------------------------------
+
+def _walk_jaxpr(jaxpr, pallas_eqns):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            pallas_eqns.append(eqn)
+            continue
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    _walk_jaxpr(inner, pallas_eqns)
+                elif hasattr(sub, "eqns"):
+                    _walk_jaxpr(sub, pallas_eqns)
+
+
+def _count_launches(fn, *args):
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    pallas_eqns = []
+    _walk_jaxpr(jaxpr.jaxpr, pallas_eqns)
+    return len(pallas_eqns)
+
+
+def test_batched_uplink_single_launch():
+    n_workers, rows = 8, 64
+    wire = rd.WirePath(rd.WireConfig(), interpret=True)
+    bufs = jnp.zeros((n_workers, rows, fl.LANES))
+    hist = jnp.zeros((rows, fl.LANES))
+    for t in (1, 3):
+        n = _count_launches(
+            functools.partial(wire.uplink_stacked, t=t), bufs, hist, hist)
+        assert n == 1, f"t={t}: expected 1 batched launch, got {n}"
+
+
+def test_engine_round_two_launches():
+    n_workers, rows = 8, 64
+    wire = rd.WirePath(rd.WireConfig(), interpret=True)
+    bufs = jnp.zeros((n_workers, rows, fl.LANES))
+    hist = jnp.zeros((rows, fl.LANES))
+    w = jnp.full((n_workers,), 0.02)
+
+    def whole_round(bufs, hist1, hist2, w):
+        new_buf, _ = wire.round_from_stacked(bufs, 3, w, hist1, hist2, t=3)
+        return new_buf
+
+    n = _count_launches(whole_round, bufs, hist, hist, w)
+    assert n == 2, f"expected uplink+master = 2 launches, got {n}"

@@ -1,8 +1,6 @@
 """Parameter/batch/cache sharding rules (no devices needed — specs only)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.sharding.specs import batch_spec, cache_specs, param_specs

@@ -1,0 +1,94 @@
+"""Regression: Worker.train_round must not sync device→host per batch.
+
+The old loop did ``float(loss)`` on every batch — one blocking transfer per
+step, serializing the round on transfer latency. The fix accumulates the
+loss on-device. Host transfers are counted by instrumenting ``float`` over
+jax arrays (on the CPU backend device→host reads are zero-copy, so jax's
+transfer guard cannot see them): ``train_round_device`` must perform ZERO
+conversions, the public ``train_round`` wrapper exactly ONE per round.
+
+The instrumentation shadows ``float`` in the *worker module's* namespace
+(and this test module's, for the sanity check) rather than in builtins —
+patching builtins breaks jax's own ``isinstance(x, float)`` checks."""
+import jax
+import numpy as np
+import pytest
+
+import repro.fed.worker as worker_mod
+from repro.data.pipeline import BatchIterator
+from repro.fed.worker import Worker, WorkerConfig
+from repro.models.mlp import init_mlp_classifier, mlp_loss_and_grad
+
+N_SAMPLES, BATCH, EPOCHS = 96, 32, 2
+BATCHES_PER_ROUND = (N_SAMPLES // BATCH) * EPOCHS       # 6
+
+_REAL_FLOAT = float          # captured before any fixture patches the name
+
+
+def _make_worker(seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(N_SAMPLES, 8)).astype(np.float32)
+    y = rng.integers(0, 3, size=(N_SAMPLES,)).astype(np.int32)
+    cfg = WorkerConfig(worker_id=0, batch_size=BATCH, local_epochs=EPOCHS)
+    w = Worker(cfg=cfg, loader=BatchIterator((x, y), BATCH, seed=seed),
+               loss_and_grad=mlp_loss_and_grad)
+    params = init_mlp_classifier(jax.random.PRNGKey(0), 8, 3, hidden=(16,))
+    return w, params
+
+
+@pytest.fixture
+def float_counter(monkeypatch):
+    """Counts float(<jax.Array>) conversions — each is a host sync."""
+    calls = {"n": 0}
+
+    def counting_float(x=0.0):
+        if isinstance(x, jax.Array):
+            calls["n"] += 1
+        return _REAL_FLOAT(x)
+
+    monkeypatch.setattr(worker_mod, "float", counting_float, raising=False)
+    monkeypatch.setitem(globals(), "float", counting_float)
+    return calls
+
+
+def test_train_round_single_host_sync(float_counter):
+    w, params = _make_worker()
+    w.train_round(params)                       # warm-up / jit compile
+    float_counter["n"] = 0
+    _, cost = w.train_round(params)
+    assert float_counter["n"] == 1, (
+        f"train_round synced {float_counter['n']} times for "
+        f"{BATCHES_PER_ROUND} batches; must be exactly 1 per round")
+    assert np.isfinite(cost)
+
+
+def test_train_round_device_zero_host_syncs(float_counter):
+    w, params = _make_worker()
+    w.train_round(params)
+    float_counter["n"] = 0
+    _, cost = w.train_round_device(params)
+    assert float_counter["n"] == 0
+    assert isinstance(cost, jax.Array)          # still on device
+    assert np.isfinite(float(cost))
+
+
+def test_counter_sees_per_batch_syncs(float_counter):
+    """Sanity: the counter detects the old per-batch pattern it guards
+    against."""
+    w, params = _make_worker()
+    float_counter["n"] = 0
+    for batch in w.loader.epoch():
+        (loss, _), _ = w.loss_and_grad(params, batch)
+        float(loss)                             # the old per-batch host sync
+    assert float_counter["n"] == N_SAMPLES // BATCH
+
+
+def test_train_round_cost_matches_device_path():
+    w1, params = _make_worker(seed=3)
+    w2, _ = _make_worker(seed=3)
+    p1, c1 = w1.train_round(params)
+    p2, c2 = w2.train_round_device(params)
+    assert c1 == pytest.approx(float(c2), rel=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
