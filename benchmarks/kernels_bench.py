@@ -23,15 +23,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
+from repro.core import flat as fl
+from repro.fed import rounds as rd
 from repro.kernels import fused_wire as fw
 from repro.kernels import ops, ref
 from repro.kernels import pack2bit as pk
 from repro.kernels import ternary_encode as te
+from repro.utils import HOST_SYNC_PRIMITIVES, jaxpr_primitive_counts
 
 M = 1 << 20            # 1M params
 N_WORKERS = 8
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_kernels.json")
+BENCH_SMOKE_JSON = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_kernels_smoke.json")
 
 
 def _bench(fn, *args, reps=3):
@@ -159,6 +164,83 @@ def _batched_uplink(m: int, n_workers: int, reps: int) -> dict:
     }
 
 
+def _scan_rounds_bench(m: int, n_workers: int, rounds: int,
+                       reps: int) -> dict:
+    """Multi-round FedPC: a Python loop re-dispatching ONE jitted round body
+    (local models + round_step — what the real Python driver compiles) vs
+    the same body under a single jitted lax.scan (the scan driver). Both
+    sides jit identical work, so the delta is pure per-round dispatch +
+    host-return overhead.
+
+    The structural win is asserted at jaxpr level before timing: the scan
+    program contains exactly TWO pallas_call eqns total (uplink + master,
+    amortized over every round by the scan) and ZERO host-sync primitives —
+    the Python loop re-dispatches both launches and returns control to the
+    host every round.
+    """
+    rows = m // 128
+    wire = rd.WirePath(rd.WireConfig(), interpret=True,
+                       block_rows=rows // fl.PACK)
+    key = jax.random.PRNGKey(17)
+    buf = jax.random.normal(key, (rows, 128))
+    state = rd.RoundState(
+        buf_p1=buf, buf_p2=0.9 * buf,
+        prev_costs=jnp.ones((n_workers,)),
+        round=jnp.asarray(3, jnp.int32))
+    deltas = 0.01 * jax.random.normal(
+        jax.random.fold_in(key, 1), (rounds, n_workers, rows, 128))
+    sizes = jnp.linspace(50.0, 200.0, n_workers)
+
+    def worker_fn(wc, gbuf, t):
+        d = jnp.take(deltas, t - 3, axis=0)
+        costs = 1.0 / (t.astype(jnp.float32)
+                       + jnp.arange(n_workers, dtype=jnp.float32) + 1.0)
+        return wc, gbuf[None] + d, costs
+
+    def scan_fn(st):
+        st, _, infos = rd.scan_rounds(wire, st, worker_fn, 0, rounds, sizes)
+        return st, infos["k_star"]
+
+    counts = jaxpr_primitive_counts(scan_fn, state)
+    assert counts.get("pallas_call") == 2, counts
+    host_syncs = sum(counts.get(p, 0) for p in HOST_SYNC_PRIMITIVES)
+    assert host_syncs == 0, counts
+
+    scan_jit = jax.jit(scan_fn)
+
+    def round_body(st):
+        _, bufs, costs = worker_fn(0, st.buf_p1, st.round)
+        st, _, _ = wire.round_step(st, bufs, costs, sizes)
+        return st
+
+    body_jit = jax.jit(round_body)
+
+    def loop():
+        st = state
+        for _ in range(rounds):
+            st = body_jit(st)
+        return st.buf_p1
+
+    def scan():
+        st, _ = scan_jit(state)
+        return st.buf_p1
+
+    np.testing.assert_array_equal(np.asarray(loop()), np.asarray(scan()))
+    us_loop = _bench(loop, reps=reps)
+    us_scan = _bench(scan, reps=reps)
+    return {
+        "params": m,
+        "n_workers": n_workers,
+        "rounds": rounds,
+        "loop_us": us_loop,
+        "scan_us": us_scan,
+        "scan_speedup": us_loop / us_scan,
+        "pallas_calls_in_scan_program": counts.get("pallas_call"),
+        "host_sync_primitives_in_scan_program": host_syncs,
+        "mode": "cpu-interpret",
+    }
+
+
 _SYNC_BENCH_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -276,6 +358,18 @@ def run(smoke: bool = False) -> dict:
              f"loop={b['uplink_loop_us']:.0f}us "
              f"speedup={b['stacked_speedup']:.2f}x launches=1v{N_WORKERS}")
 
+    # ---- multi-round scan driver vs per-round Python loop ---------------
+    scan_results = []
+    scan_sizes = (((1 << 14), 4, 2),) if smoke else ((1 << 20, 4, 3),)
+    for m, n_rounds, reps in scan_sizes:
+        tag = (f"{m // (1 << 20)}M" if m >= (1 << 20) else f"{m // 1024}K")
+        sc = _scan_rounds_bench(m, 4, n_rounds, reps)
+        scan_results.append(sc)
+        emit(f"scan_rounds_{tag}_{n_rounds}r", sc["scan_us"],
+             f"loop={sc['loop_us']:.0f}us "
+             f"speedup={sc['scan_speedup']:.2f}x "
+             f"launches_in_program=2 host_syncs=0")
+
     # ---- sharded vs replicated fed sync (8-device subprocess mesh) ------
     sync_results = []
     for m, reps in sizes:
@@ -299,9 +393,15 @@ def run(smoke: bool = False) -> dict:
                "backend": jax.default_backend(),
                "results": results,
                "batched_uplink": uplink_results,
+               "scan_rounds": scan_results,
                "sharded_sync": sync_results}
     if smoke:
-        emit("bench_kernels_smoke", 0.0, "smoke run: JSON not written")
+        # tiny-size smoke numbers land in their own JSON (uploaded as a CI
+        # artifact); BENCH_kernels.json keeps only real-size runs.
+        with open(BENCH_SMOKE_JSON, "w") as f:
+            json.dump(payload, f, indent=2)
+        emit("bench_kernels_smoke_json", 0.0,
+             os.path.abspath(BENCH_SMOKE_JSON))
     else:
         with open(BENCH_JSON, "w") as f:
             json.dump(payload, f, indent=2)
@@ -312,5 +412,6 @@ def run(smoke: bool = False) -> dict:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny sizes for CI; skips BENCH_kernels.json write")
+                    help="tiny sizes for CI; writes BENCH_kernels_smoke.json "
+                         "(artifact) instead of BENCH_kernels.json")
     run(smoke=ap.parse_args().smoke)

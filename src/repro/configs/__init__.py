@@ -1,5 +1,8 @@
 """Config registry: importing this package registers every architecture."""
 from repro.configs.base import ArchConfig, get_config, list_configs, register  # noqa: F401
+from repro.configs.federation import (  # noqa: F401
+    FedScenario, get_scenario, list_scenarios,
+)
 
 # Assigned architectures (public-literature pool) + the paper-analog config.
 from repro.configs import (  # noqa: F401

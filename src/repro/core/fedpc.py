@@ -38,6 +38,24 @@ class FedPCConfig:
     alpha_round1: float = 0.01    # Eq. (4) threshold (worker lr at round 1)
     pack_bits: int = 2            # wire width per ternary code
     weight_bits: int = 32         # wire width per weight (paper uses fp32)
+    betas: tuple | None = None    # per-worker beta_k (len n_workers); None = uniform
+    participation: float = 1.0    # FedAvg-style C-fraction of workers per round
+
+    def __post_init__(self):
+        if self.betas is not None and len(self.betas) != self.n_workers:
+            raise ValueError(
+                f"betas has {len(self.betas)} entries for "
+                f"{self.n_workers} workers")
+        if not 0.0 < self.participation <= 1.0:
+            raise ValueError(
+                f"participation must be in (0, 1], got {self.participation}")
+
+    @property
+    def beta_vector(self):
+        """(N,) per-worker beta_k — ``betas`` when set, else uniform."""
+        if self.betas is not None:
+            return jnp.asarray(self.betas, jnp.float32)
+        return jnp.full((self.n_workers,), self.beta, jnp.float32)
 
 
 class FedPCState(NamedTuple):
@@ -67,15 +85,19 @@ def worker_ternary(
     cfg: FedPCConfig,
     local_params: PyTree,
     state: FedPCState,
+    beta=None,
 ) -> PyTree:
     """Alg. 2 line 8: Eq. (4) at round 1, Eq. (5) afterwards.
 
     Both branches are evaluated and selected on the (possibly traced) round
-    index — they are elementwise and cheap relative to training.
+    index — they are elementwise and cheap relative to training. ``beta``
+    (scalar, may be traced) overrides the shared threshold — the worker's
+    own beta_k in the heterogeneous regime.
     """
+    beta = cfg.beta if beta is None else beta
     t1 = ternarize_tree_round1(local_params, state.params, cfg.alpha_round1)
     # At round 1 params_prev is zeros; the selected branch ignores it.
-    tt = ternarize_tree(local_params, state.params, state.params_prev, cfg.beta)
+    tt = ternarize_tree(local_params, state.params, state.params_prev, beta)
     pick = jnp.asarray(state.round) <= 1
     return jax.tree_util.tree_map(
         lambda a, b: jnp.where(pick, a, b), t1, tt
@@ -98,13 +120,15 @@ def master_round(
     representation so it can be jit/shard_map'ed with static shapes.
     """
     k_star, scores = _select_pilot(costs, state.prev_costs, sizes, state.round)
+    betas = cfg.beta_vector
 
-    # Every worker's ternary codes (the pilot's row is masked in Eq. (3)).
-    ternaries = jax.vmap(lambda p: worker_ternary(cfg, p, state))(stacked_params)
+    # Every worker's ternary codes (the pilot's row is masked in Eq. (3)),
+    # each thresholded by its own beta_k.
+    ternaries = jax.vmap(lambda p, b: worker_ternary(cfg, p, state, b))(
+        stacked_params, betas)
 
     q_pilot = jax.tree_util.tree_map(lambda x: x[k_star], stacked_params)
     p_shares = sizes.astype(jnp.float32) / jnp.sum(sizes.astype(jnp.float32))
-    betas = jnp.full((cfg.n_workers,), cfg.beta, jnp.float32)
 
     new_params = master_update_tree(
         q_pilot, ternaries, p_shares, betas, k_star,

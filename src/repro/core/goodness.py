@@ -21,14 +21,28 @@ def goodness(
     prev_costs: jax.Array,   # (N,) float — C_k^{t-1} (ignored when t == 1)
     sizes: jax.Array,        # (N,) float or int — S_k
     t: jax.Array | int,      # round index, 1-based
+    mask: jax.Array | None = None,  # (N,) participation; None = everyone
 ) -> jax.Array:
-    """Eq. (1). Returns (N,) goodness scores."""
+    """Eq. (1). Returns (N,) goodness scores.
+
+    With a participation ``mask`` (1 = sampled this round), non-participants
+    score ``-inf`` so the pilot is always drawn from the sampled set —
+    the FedAvg-style C-fraction regime of McMahan et al. (1602.05629).
+    A worker with no cost history yet (``prev_cost == +inf`` — first
+    sampled after round 1) scores by the round-1 rule ``S_k / C_k`` rather
+    than the degenerate ``S_k · (inf − C_k) = inf``, which would hijack
+    pilot selection by index regardless of sizes and costs.
+    """
     sizes = sizes.astype(jnp.float32)
     costs = costs.astype(jnp.float32)
     prev_costs = prev_costs.astype(jnp.float32)
     g1 = sizes / jnp.maximum(costs, 1e-12)
-    gt = sizes * (prev_costs - costs)
-    return jnp.where(jnp.asarray(t) <= 1, g1, gt)
+    gt = jnp.where(jnp.isfinite(prev_costs),
+                   sizes * (prev_costs - costs), g1)
+    g = jnp.where(jnp.asarray(t) <= 1, g1, gt)
+    if mask is not None:
+        g = jnp.where(mask > 0, g, -jnp.inf)
+    return g
 
 
 def select_pilot(
@@ -36,9 +50,12 @@ def select_pilot(
     prev_costs: jax.Array,
     sizes: jax.Array,
     t: jax.Array | int,
+    mask: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Returns (k_star, scores). Ties break to the lowest index (argmax)."""
-    scores = goodness(costs, prev_costs, sizes, t)
+    """Returns (k_star, scores). Ties break to the lowest index (argmax).
+    Fully traceable — ``k_star`` stays a device scalar; with ``mask`` the
+    pilot is guaranteed to be a participating worker."""
+    scores = goodness(costs, prev_costs, sizes, t, mask)
     return jnp.argmax(scores), scores
 
 

@@ -24,7 +24,11 @@ class BatchIterator:
         for a in self.arrays:
             assert a.shape[0] == self.n
 
-    def epoch(self) -> Iterator[tuple]:
+    def epoch_indices(self) -> Iterator[np.ndarray]:
+        """One epoch's batch index arrays (same rng draw as :meth:`epoch` —
+        the two are interchangeable schedule-wise). Lets gather-style
+        consumers (the simulator's scan driver) keep one resident copy of
+        the shard instead of materialized batches."""
         order = self._rng.permutation(self.n)
         end = (self.n // self.batch_size) * self.batch_size \
             if self.drop_remainder else self.n
@@ -32,6 +36,10 @@ class BatchIterator:
             sel = order[s : s + self.batch_size]
             if len(sel) == 0:
                 break
+            yield sel
+
+    def epoch(self) -> Iterator[tuple]:
+        for sel in self.epoch_indices():
             yield tuple(a[sel] for a in self.arrays)
 
     def steps_per_epoch(self) -> int:

@@ -1,3 +1,7 @@
-from repro.fed.worker import WorkerConfig, make_worker_configs  # noqa: F401
-from repro.fed.rounds import RoundEngine, WireConfig, WirePath  # noqa: F401
+from repro.fed.worker import Worker, WorkerConfig, make_worker_configs  # noqa: F401
+from repro.fed.rounds import (  # noqa: F401
+    RoundEngine, RoundState, WireConfig, WirePath, init_round_state,
+    load_round_state, participation_mask, participation_masks,
+    save_round_state, scan_rounds,
+)
 from repro.fed.simulator import FedSimulator, SimResult  # noqa: F401

@@ -70,17 +70,20 @@ def _shard_map(body, mesh, in_specs, out_specs, manual_axes):
 # ---------------------------------------------------------------------------
 
 def _sync_body(q_buf, p_prev, p_prev2, *, wire: rd.WirePath, k_star, w,
-               t, fed_axis, n_fed, mode):
+               t, fed_axis, n_fed, mode, betas=None):
     """One (fed, model) device's slice of the round sync — a thin driver
     over :class:`repro.fed.rounds.WirePath`.
 
     q_buf: (1, sr, 128) this worker's slab of its flattened weights;
     p_prev/p_prev2: (sr, 128) slabs of the public history (replicated over
-    fed, sharded over model). Returns the (sr, 128) slab of the new global
+    fed, sharded over model). ``betas`` is an optional (F,) per-worker
+    beta_k vector (replicated): each fed instance ternarizes its own slab
+    with its own threshold. Returns the (sr, 128) slab of the new global
     flat model (identical on every fed instance).
     """
     idx = jax.lax.axis_index(fed_axis)
     q = q_buf[0]
+    beta_k = None if betas is None else jnp.take(betas, idx)
     # pilot upload+broadcast == masked all-reduce over the fed axis
     q_pilot = jax.lax.psum(jnp.where(idx == k_star, q, 0.0), fed_axis)
     wf = w.astype(jnp.float32)                    # (F,) masked Eq.(3) weights
@@ -88,11 +91,11 @@ def _sync_body(q_buf, p_prev, p_prev2, *, wire: rd.WirePath, k_star, w,
     if mode == "packed":
         # Fused uplink on the slab → uint8 §3.3 codes on the wire → fused
         # master over the gathered stack (in-register decode, Eq. (3)).
-        pk = wire.uplink_traced(q, p_prev, p_prev2, t=t)
+        pk = wire.uplink_traced(q, p_prev, p_prev2, t=t, beta=beta_k)
         pk_all = jax.lax.all_gather(pk, fed_axis)     # (F, sr/4, 128)
         return wire.master(q_pilot, pk_all, wf, p_prev, p_prev2, t=t)
 
-    tern = wire.codes(q, p_prev, p_prev2, t)          # int8 (sr, 128)
+    tern = wire.codes(q, p_prev, p_prev2, t, beta=beta_k)  # int8 (sr, 128)
     if mode == "reduce":
         # Beyond-paper: Eq. (3) needs only Σ_k w_k T_k — reduce in-network
         # instead of gathering N ternary slabs. psum_scatter + all_gather is
@@ -122,12 +125,21 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
                    strategy: str = "fedpc", alpha0: float = 0.01,
                    beta: float = 0.2, alpha1: float = 0.01, *,
                    model_axis: str = "model", shard_wire: bool = True,
-                   wire_block_rows: int | None = None) -> Callable:
-    """Returns sync(params_F, costs, sizes, state) -> (new_global_params, aux).
+                   wire_block_rows: int | None = None,
+                   betas=None) -> Callable:
+    """Returns sync(params_F, costs, sizes, state, mask=None) ->
+    (new_global_params, aux).
 
     params_F leaves are stacked (F, ...) over the fed axis; state carries
     the public history (params, params_prev — replicated) plus per-round
     costs (F,) and the 1-based round index.
+
+    ``betas`` is an optional (F,) per-worker beta_k vector — each fed
+    instance ternarizes with its own threshold and Eq. (3) weights carry
+    p_k·beta_k. ``mask`` (optional (F,) 0/1, passed per call) is a
+    partial-participation round: non-sampled workers are excluded from
+    pilot selection, contribute zero Eq. (3) weight, and keep their
+    previous cost in the carried state.
 
     With ``shard_wire=True`` (default) and a ``model_axis`` in the mesh, the
     flat wire buffers are sharded over the model axis: per-device wire
@@ -139,16 +151,28 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
     M = mesh.shape.get(model_axis, 1) if shard_wire else 1
     m_axis = model_axis if M > 1 else None
     wcfg = rd.WireConfig(alpha0=alpha0, beta=beta, alpha1=alpha1)
+    betas_arr = None if betas is None else jnp.asarray(betas, jnp.float32)
 
     def sync(params_F: PyTree, costs: jax.Array, sizes: jax.Array,
-             state: dict) -> tuple[PyTree, dict]:
+             state: dict, mask: jax.Array | None = None
+             ) -> tuple[PyTree, dict]:
         t = state["round"]
-        k_star, scores = _select_pilot(costs, state["prev_costs"], sizes, t)
+        k_star, scores = _select_pilot(costs, state["prev_costs"], sizes, t,
+                                       mask)
         p_shares = sizes.astype(jnp.float32) / jnp.sum(sizes)
 
         if strategy == "fedavg":
+            # C-fraction FedAvg: average over the sampled workers only,
+            # shares renormalized over the sampled set (mask has >= 1
+            # participant by construction).
+            if mask is None:
+                wts = p_shares
+            else:
+                wm = p_shares * jnp.asarray(mask, jnp.float32)
+                wts = wm / jnp.sum(wm)
+
             def avg(x):
-                wb = p_shares.reshape((-1,) + (1,) * (x.ndim - 1))
+                wb = wts.reshape((-1,) + (1,) * (x.ndim - 1))
                 return jnp.sum(x.astype(jnp.float32) * wb, axis=0).astype(x.dtype)
             new_params = jax.tree_util.tree_map(avg, params_F)
         else:
@@ -158,7 +182,8 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
             # round, not one per leaf, each moving rows/M per device.
             layout = fl.layout_of(state["params"], shards=M)
             wire = rd.WirePath(wcfg, block_rows=wire_block_rows)
-            w = wire.weights(p_shares, k_star, t)
+            w = wire.weights(p_shares, k_star, t, betas=betas_arr,
+                             mask=mask)
             q_flat_F = fl.flatten_stacked(params_F, layout)
             p1_flat = fl.flatten_tree(state["params"], layout)
             p2_flat = fl.flatten_tree(state["params_prev"], layout)
@@ -182,7 +207,7 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
 
             body = partial(
                 _sync_body, wire=wire, k_star=k_star, w=w, t=t,
-                fed_axis=fed_axis, n_fed=F,
+                fed_axis=fed_axis, n_fed=F, betas=betas_arr,
                 mode={"fedpc_packed": "packed",
                       "fedpc_reduce": "reduce"}.get(strategy, "gather"))
 
@@ -196,10 +221,14 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
             )(q_flat_F, p1_flat, p2_flat)
             new_params = fl.unflatten_tree(new_flat, layout)
 
+        costs_eff = costs.astype(jnp.float32)
+        if mask is not None:    # non-participants carry their previous cost
+            costs_eff = jnp.where(jnp.asarray(mask) > 0, costs_eff,
+                                  state["prev_costs"])
         new_state = {
             "params": new_params,
             "params_prev": state["params"],
-            "prev_costs": costs.astype(jnp.float32),
+            "prev_costs": costs_eff,
             "round": t + 1,
         }
         aux = {"k_star": k_star, "goodness": scores}
@@ -214,16 +243,19 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
 
 def build_fed_step(model: Model, mesh: Mesh, fed_axis: str = "data",
                    strategy: str = "fedpc", local_steps: int = 1,
-                   lr: float = 0.01) -> Callable:
-    """fed_step(state, opt_states_F, batch_F, sizes) ->
+                   lr: float = 0.01, betas=None) -> Callable:
+    """fed_step(state, opt_states_F, batch_F, sizes, mask=None) ->
        (state', opt_states_F', metrics)
 
     batch_F: pytree with leaves (F, local_steps, B_local, ...) — each fed
     worker's private micro-batches for this round. Worker k trains
     ``local_steps`` steps from the shared global params (its private
     optimizer state persists), reports its final loss as the round cost.
+    ``betas``/``mask`` as in :func:`build_fed_sync` (under SPMD every
+    worker still computes when masked — the mask drops its contribution
+    from the aggregate, the federated semantics of a skipped round).
     """
-    sync = build_fed_sync(model, mesh, fed_axis, strategy)
+    sync = build_fed_sync(model, mesh, fed_axis, strategy, betas=betas)
 
     def local_train(params, opt_state, batches):
         def step(carry, b):
@@ -234,11 +266,17 @@ def build_fed_step(model: Model, mesh: Mesh, fed_axis: str = "data",
         return p, os, losses[-1]
 
     def fed_step(state: dict, opt_states_F: PyTree, batch_F: PyTree,
-                 sizes: jax.Array):
+                 sizes: jax.Array, mask: jax.Array | None = None):
         params_F, opt_F, costs = jax.vmap(
             local_train, in_axes=(None, 0, 0))(
                 state["params"], opt_states_F, batch_F)
-        new_params, aux = sync(params_F, costs, sizes, state)
+        if mask is not None:    # a skipped worker's private state is frozen
+            opt_F = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(
+                    (mask > 0).reshape((-1,) + (1,) * (new.ndim - 1)),
+                    new, old),
+                opt_F, opt_states_F)
+        new_params, aux = sync(params_F, costs, sizes, state, mask)
         metrics = {"cost_mean": jnp.mean(costs), "k_star": aux["k_star"]}
         return aux["state"], opt_F, metrics
 

@@ -1,36 +1,54 @@
-"""The FedPC round engine — the wire protocol of Eq. (3)-(5)/§3.3 in ONE place.
+"""The FedPC round core — Algorithm 1 as a pure, device-resident recurrence.
 
-Both runtimes are thin drivers over this module:
+The paper's round is one pure function of public state: score goodness
+(Eq. (1)) → pick the pilot → ternarize/pack everyone's evolution
+(Eq. (4)/(5), §3.3) → master update (Eq. (3)). This module expresses it
+exactly that way:
 
-* ``repro.fed.simulator.run_fedpc`` — workers are in-process Python objects;
-  the engine runs the whole uplink as one batched kernel launch over the
-  stacked worker buffers and one fused master launch (``RoundEngine``).
+* :class:`WirePath` owns the *math*: ternarize (Eq. (4)/(5)) → pack (§3.3)
+  → aggregate (the masked Σ_k w_k β_k T_k) → master update (Eq. (3)), over
+  the flat ``(rows, 128)`` buffers of ``repro.core.flat``. Fused Pallas
+  kernels where the data layout allows, jnp reference semantics (``codes``
+  / ``combine``) for runtimes that move their own bytes between the steps.
+* :class:`RoundState` is the *whole* public inter-round state as one pytree:
+  the history buffers P^{t-1}/P^{t-2}, last-round costs, and the round
+  counter. It is a valid ``lax.scan`` carry and serializes through
+  ``repro.checkpoint`` (:func:`save_round_state` / :func:`load_round_state`).
+* :func:`WirePath.round_step` is the recurrence itself —
+  ``(state, bufs_q, costs, sizes) -> (state', new_buf, info)`` — fully
+  traceable: pilot selection stays on device (``k_star`` is never pulled to
+  the host; the pilot buffer is gathered with a dynamic index), the batched
+  uplink and the fused master update are the round's only two kernel
+  launches, and both scenario axes ride along as optional operands: a
+  per-round participation ``mask`` (sampled workers only) and a per-worker
+  ``betas`` vector (heterogeneous beta_k on the wire).
+* :func:`scan_rounds` drives many rounds as ONE ``lax.scan`` over
+  ``round_step`` — zero per-round device→host transfers; the pilot history
+  and per-round costs come back stacked in ``infos`` for a single post-scan
+  fetch (ledger backfill).
+
+Both runtimes are thin drivers over this core:
+
+* ``repro.fed.simulator`` — in-process workers; ``run_fedpc`` steps
+  ``round_step`` per round (workers are stateful Python), ``run_fedpc_scan``
+  runs the whole federation under ``lax.scan``.
 * ``repro.fed.distributed.build_fed_sync`` — workers are slices of a mesh
   axis; the shard_map body calls the same :class:`WirePath` methods on its
   local slab and moves bytes with collectives between them.
 
-The split of responsibilities:
-
-* :class:`WirePath` owns the *math*: ternarize (Eq. (4)/(5)) → pack (§3.3)
-  → aggregate (the masked Σ_k w_k T_k) → master update (Eq. (3)), over the
-  flat ``(rows, 128)`` buffers of ``repro.core.flat``. Fused Pallas kernels
-  where the data layout allows, jnp reference semantics (``codes`` /
-  ``combine``) for runtimes that move their own bytes between the steps.
-* :class:`RoundEngine` owns the *state*: the public two-step history
-  (P^{t-1}, P^{t-2}) carried between rounds, rotated exactly as Algorithm 1
-  prescribes.
-
-Nothing here selects the pilot — goodness (Alg. 1 line 4) stays in
-``repro.core.goodness`` and is shared by both runtimes already.
+:class:`RoundEngine` remains as the thin stateful wrapper the per-round
+drivers use (it holds the history buffers and calls the pure core).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import flat as fl
+from repro.core.goodness import select_pilot
 from repro.core.ternary import ternarize, ternarize_round1
 from repro.kernels import ops
 from repro.utils import PyTree
@@ -49,6 +67,82 @@ class WireConfig:
         return cls(alpha0=cfg.alpha0, beta=cfg.beta, alpha1=cfg.alpha_round1)
 
 
+class RoundState(NamedTuple):
+    """Device-resident inter-round federation state — one pure pytree.
+
+    Everything Algorithm 1 carries between rounds, and nothing else: the
+    two-step public history needed by Eq. (3)/(5), the previous costs needed
+    by Eq. (1), and the 1-based index of the round about to run. Being a
+    flat pytree of arrays makes it a ``lax.scan`` carry, a jit donation
+    target, and a checkpointable object all at once.
+    """
+    buf_p1: jax.Array      # (rows, 128) — P^{t-1}
+    buf_p2: jax.Array      # (rows, 128) — P^{t-2}
+    prev_costs: jax.Array  # (N,) — C_k^{t-1}, +inf before round 1
+    round: jax.Array       # scalar int32, 1-based round about to run
+
+
+def init_round_state(init_params: PyTree, n_workers: int,
+                     layout: fl.FlatLayout | None = None) -> RoundState:
+    """Fresh :class:`RoundState` at round 1 (P^{t-2} = 0, costs = +inf)."""
+    layout = layout or fl.layout_of(init_params)
+    buf_p1 = fl.flatten_tree(init_params, layout)
+    return RoundState(
+        buf_p1=buf_p1,
+        buf_p2=jnp.zeros_like(buf_p1),
+        prev_costs=jnp.full((n_workers,), jnp.inf, jnp.float32),
+        round=jnp.asarray(1, jnp.int32),
+    )
+
+
+def save_round_state(directory: str, state: RoundState,
+                     metadata: dict | None = None) -> str:
+    """Serialize a :class:`RoundState` through ``repro.checkpoint``.
+
+    The (single, intentional) host sync here reads ``state.round`` for the
+    checkpoint step — checkpointing is already an I/O barrier.
+    """
+    from repro.checkpoint import save_checkpoint
+    meta = {"kind": "fedpc_round_state", **(metadata or {})}
+    return save_checkpoint(directory, state._asdict(), int(state.round),
+                           metadata=meta)
+
+
+def load_round_state(directory: str, like: RoundState,
+                     step: int | None = None) -> tuple[RoundState, dict]:
+    """Restore a :class:`RoundState` saved by :func:`save_round_state`.
+
+    ``like`` supplies the expected structure/shapes (strict-checked by the
+    checkpoint layer) — e.g. ``init_round_state(params, n)``.
+    """
+    from repro.checkpoint import load_checkpoint
+    tree, manifest = load_checkpoint(directory, like._asdict(), step)
+    return RoundState(**tree), manifest
+
+
+def participation_mask(key: jax.Array, n_workers: int,
+                       fraction: float) -> jax.Array:
+    """One round's FedAvg-style C-fraction mask: a traceable (N,) float32
+    0/1 vector with ``max(1, round(C·N))`` uniformly sampled workers."""
+    m = max(1, int(round(fraction * n_workers)))
+    perm = jax.random.permutation(key, n_workers)
+    return (perm < m).astype(jnp.float32)
+
+
+def participation_masks(key: jax.Array, n_rounds: int, n_workers: int,
+                        fraction: float, start_round: int = 1) -> jax.Array:
+    """(n_rounds, N) masks — the per-round ``xs`` of :func:`scan_rounds`.
+    Pre-generating them (rather than sampling inside the scan body) lets a
+    Python-loop driver and the scan driver consume identical schedules.
+    Each row is keyed by its ABSOLUTE round index (``start_round + i``), so
+    a run resumed at round t draws exactly the rows an uninterrupted run
+    would have used for rounds t, t+1, ..."""
+    return jnp.stack([
+        participation_mask(jax.random.fold_in(key, start_round + i),
+                           n_workers, fraction)
+        for i in range(n_rounds)])
+
+
 @dataclass(frozen=True)
 class WirePath:
     """Ternarize → pack → aggregate → master-update over flat buffers.
@@ -58,6 +152,11 @@ class WirePath:
     shards alike. ``interpret=None`` defers to the backend (Python
     interpret on CPU, compiled on TPU); ``block_rows=None`` uses the
     kernels' VMEM-sized default tile.
+
+    ``cfg.beta`` is the shared default threshold; every method that touches
+    Eq. (5) or the Eq. (3) coefficients accepts an optional per-worker
+    override (``beta=`` a traced scalar for single-worker slabs, ``betas=``
+    a ``(N,)`` vector for stacked/aggregate forms).
     """
     cfg: WireConfig = WireConfig()
     interpret: bool | None = None
@@ -66,11 +165,13 @@ class WirePath:
     # -- elementwise protocol math (jnp semantics, traced round index) ------
 
     def codes(self, q: jax.Array, p1: jax.Array, p2: jax.Array,
-              t) -> jax.Array:
+              t, *, beta=None) -> jax.Array:
         """Eq. (4) at t <= 1 (``p1`` holds P^0), Eq. (5) after; int8 codes
-        of ``q.shape``. Works on any slab/shape — it is elementwise."""
+        of ``q.shape``. Works on any slab/shape — it is elementwise.
+        ``beta`` (scalar, may be traced) overrides the shared threshold."""
+        beta = self.cfg.beta if beta is None else beta
         t1 = ternarize_round1(q, p1, self.cfg.alpha1)
-        tt = ternarize(q, p1, p2, self.cfg.beta)
+        tt = ternarize(q, p1, p2, beta)
         return jnp.where(jnp.asarray(t) <= 1, t1, tt)
 
     def combine(self, q_pilot: jax.Array, coeff: jax.Array, p1: jax.Array,
@@ -82,13 +183,30 @@ class WirePath:
         rt = q_pilot - coeff * step
         return jnp.where(jnp.asarray(t) <= 1, r1, rt)
 
-    def weights(self, p_shares: jax.Array, k_star, t) -> jax.Array:
+    def weights(self, p_shares: jax.Array, k_star, t, *, betas=None,
+                mask=None) -> jax.Array:
         """Masked per-worker Eq. (3) coefficients: p_k at round 1 (the
-        alpha0 rule), p_k·beta_k after; the pilot's entry is zeroed."""
+        alpha0 rule), p_k·beta_k after; the pilot's entry is zeroed.
+
+        ``betas`` is an optional (N,) per-worker beta_k vector (defaults to
+        the shared ``cfg.beta``); ``mask`` an optional (N,) participation
+        mask — non-participants contribute exactly ±0.0 to the reduce, the
+        same mechanism that already masks the pilot. Shares are NOT
+        renormalized over the sampled set: p_k = S_k/S stays the paper's
+        global data share, so a round's update magnitude scales with how
+        much data actually reported."""
         n = p_shares.shape[0]
-        mask = (jnp.arange(n) != k_star).astype(jnp.float32)
-        scale = jnp.where(jnp.asarray(t) <= 1, 1.0, self.cfg.beta)
-        return mask * p_shares.astype(jnp.float32) * scale
+        not_pilot = (jnp.arange(n) != k_star).astype(jnp.float32)
+        if betas is None:
+            scale = jnp.where(jnp.asarray(t) <= 1, 1.0, self.cfg.beta)
+        else:
+            betas = jnp.asarray(betas, jnp.float32)
+            scale = jnp.where(jnp.asarray(t) <= 1, jnp.ones_like(betas),
+                              betas)
+        w = not_pilot * p_shares.astype(jnp.float32) * scale
+        if mask is not None:
+            w = w * jnp.asarray(mask, jnp.float32)
+        return w
 
     # -- fused kernel path over (rows, 128) slabs ---------------------------
 
@@ -102,20 +220,23 @@ class WirePath:
             block_rows=self.block_rows)
 
     def uplink_traced(self, buf_q: jax.Array, buf_p1: jax.Array,
-                      buf_p2: jax.Array, *, t) -> jax.Array:
-        """Like :meth:`uplink` but ``t`` may be traced (branch selected
-        in-register) — the distributed sync's per-slab uplink."""
+                      buf_p2: jax.Array, *, t, beta=None) -> jax.Array:
+        """Like :meth:`uplink` but ``t`` (and an optional per-worker
+        ``beta``) may be traced — the distributed sync's per-slab uplink."""
+        beta = self.cfg.beta if beta is None else beta
         return ops.flat_ternary_pack_traced(
-            buf_q, buf_p1, buf_p2, t=t, beta=self.cfg.beta,
+            buf_q, buf_p1, buf_p2, t=t, beta=beta,
             alpha1=self.cfg.alpha1, interpret=self.interpret,
             block_rows=self.block_rows)
 
     def uplink_stacked(self, bufs_q: jax.Array, buf_p1: jax.Array,
-                       buf_p2: jax.Array, *, t) -> jax.Array:
+                       buf_p2: jax.Array, *, t, betas=None) -> jax.Array:
         """All N workers' wire buffers in ONE launch: (N, rows, 128) →
-        (N, rows//4, 128) uint8 — the simulator's batched uplink."""
+        (N, rows//4, 128) uint8 — the batched uplink. ``betas`` is an
+        optional (N,) per-worker beta_k vector."""
+        beta = self.cfg.beta if betas is None else betas
         return ops.flat_ternary_pack_stacked(
-            bufs_q, buf_p1, buf_p2, t=t, beta=self.cfg.beta,
+            bufs_q, buf_p1, buf_p2, t=t, beta=beta,
             alpha1=self.cfg.alpha1, interpret=self.interpret,
             block_rows=self.block_rows)
 
@@ -130,34 +251,117 @@ class WirePath:
             block_rows=self.block_rows)
 
     def round_from_stacked(self, bufs_q: jax.Array, k_star, w: jax.Array,
-                           buf_p1: jax.Array, buf_p2: jax.Array, *, t
-                           ) -> tuple[jax.Array, jax.Array]:
+                           buf_p1: jax.Array, buf_p2: jax.Array, *, t,
+                           betas=None) -> tuple[jax.Array, jax.Array]:
         """A full round over stacked worker buffers: batched uplink + fused
         master — exactly two kernel launches regardless of N.
 
         The pilot's row is packed like everyone else's and masked out of
         Eq. (3) by ``w[k_star] == 0`` (bitwise identical to zero-filling it:
-        0·T contributes exactly ±0.0 to the reduce).
+        0·T contributes exactly ±0.0 to the reduce) — the same mechanism
+        drops non-participating workers when ``w`` carries a mask.
 
-        Returns ``(new_global_buf, packed_stacked)`` — the packed buffers
-        ride along for byte accounting / ledger purposes.
+        ``k_star`` may be traced: the pilot buffer is gathered with a
+        dynamic index, no host sync. Returns ``(new_global_buf,
+        packed_stacked)`` — the packed buffers ride along for byte
+        accounting / ledger purposes.
         """
-        packed = self.uplink_stacked(bufs_q, buf_p1, buf_p2, t=t)
-        buf_pilot = bufs_q[k_star]
+        packed = self.uplink_stacked(bufs_q, buf_p1, buf_p2, t=t,
+                                     betas=betas)
+        buf_pilot = jnp.take(bufs_q, k_star, axis=0)
         new_buf = self.master(buf_pilot, packed, w, buf_p1, buf_p2, t=t)
         return new_buf, packed
+
+    # -- the pure recurrence ------------------------------------------------
+
+    def round_step(self, state: RoundState, bufs_q: jax.Array,
+                   costs: jax.Array, sizes: jax.Array, *, betas=None,
+                   mask=None) -> tuple[RoundState, jax.Array, dict]:
+        """Algorithm 1, one full round, as a pure traced function.
+
+        ``state`` — inter-round carry; ``bufs_q`` (N, rows, 128) — every
+        worker's flattened local model; ``costs``/``sizes`` (N,). Optional
+        ``betas`` (N,) per-worker beta_k and ``mask`` (N,) participation
+        (non-participants: excluded from pilot selection, zero Eq. (3)
+        weight, previous cost carried forward — their ``bufs_q`` row may be
+        anything, conventionally the current global buffer).
+
+        Returns ``(state', new_global_buf, info)`` with ``info`` holding the
+        on-device round records (``k_star``, ``goodness``, ``costs``) that a
+        driver fetches ONCE after all rounds to backfill ledger and pilot
+        history. Exactly two kernel launches; zero host syncs.
+        """
+        t = state.round
+        sizes = jnp.asarray(sizes, jnp.float32)
+        costs = jnp.asarray(costs, jnp.float32)
+        k_star, scores = select_pilot(costs, state.prev_costs, sizes, t,
+                                      mask)
+        p_shares = sizes / jnp.sum(sizes)
+        w = self.weights(p_shares, k_star, t, betas=betas, mask=mask)
+        new_buf, _packed = self.round_from_stacked(
+            bufs_q, k_star, w, state.buf_p1, state.buf_p2, t=t, betas=betas)
+        if mask is None:
+            costs_eff = costs
+        else:   # non-participants did not train: carry their previous cost
+            costs_eff = jnp.where(jnp.asarray(mask) > 0, costs,
+                                  state.prev_costs)
+        new_state = RoundState(buf_p1=new_buf, buf_p2=state.buf_p1,
+                               prev_costs=costs_eff, round=t + 1)
+        info = {"k_star": k_star, "goodness": scores, "costs": costs_eff}
+        return new_state, new_buf, info
+
+
+WorkerFn = Callable[[Any, jax.Array, jax.Array],
+                    tuple[Any, jax.Array, jax.Array]]
+
+
+def scan_rounds(wire: WirePath, state: RoundState, worker_fn: WorkerFn,
+                worker_carry: Any, n_rounds: int, sizes: jax.Array, *,
+                betas=None, masks=None
+                ) -> tuple[RoundState, Any, dict]:
+    """Many rounds of Algorithm 1 as ONE ``lax.scan`` over ``round_step``.
+
+    ``worker_fn(worker_carry, global_buf, t) -> (worker_carry, bufs_q,
+    costs)`` produces the round's local models — it is traced into the scan
+    body, so it must be pure (private optimizer states etc. live in
+    ``worker_carry``). ``masks`` is an optional (n_rounds, N) participation
+    schedule (see :func:`participation_masks`); ``betas`` an optional (N,)
+    per-worker beta_k vector.
+
+    The scan body costs exactly two kernel launches and performs zero
+    device→host transfers; ``infos`` comes back with per-round stacked
+    ``k_star`` / ``goodness`` / ``costs`` for one post-scan fetch. XLA
+    double-buffers the carry, so the history buffers are reused in place
+    across rounds (jit the caller with ``donate_argnums`` on ``state`` to
+    extend that to the initial buffers).
+    """
+    sizes = jnp.asarray(sizes, jnp.float32)
+
+    def body(carry, x):
+        st, wc = carry
+        wc, bufs_q, costs = worker_fn(wc, st.buf_p1, st.round)
+        st, _new_buf, info = wire.round_step(st, bufs_q, costs, sizes,
+                                             betas=betas, mask=x)
+        return (st, wc), info
+
+    (state, worker_carry), infos = jax.lax.scan(
+        body, (state, worker_carry), masks, length=n_rounds)
+    return state, worker_carry, infos
 
 
 class RoundEngine:
     """Carries the public history across rounds and drives :class:`WirePath`.
 
-    The simulator's per-round protocol work reduces to::
+    The per-round drivers' protocol work reduces to::
 
         bufs_q = engine.flatten_locals(locals_)           # stack worker trees
         new_params = engine.run_round(bufs_q, k_star, p_shares, t)
 
     which is two kernel launches + one unflatten. The history rotation
-    (P^{t-1}, P^{t-2}) ← (P^t, P^{t-1}) happens inside ``run_round``.
+    (P^{t-1}, P^{t-2}) ← (P^t, P^{t-1}) happens inside ``run_round``. This
+    is a thin stateful wrapper over the pure core — jit-able multi-round
+    drivers should carry a :class:`RoundState` through
+    :meth:`WirePath.round_step` / :func:`scan_rounds` instead.
     """
 
     def __init__(self, init_params: PyTree, cfg: WireConfig | None = None,
@@ -176,11 +380,11 @@ class RoundEngine:
         return fl.flatten_stacked(stacked, self.layout)
 
     def run_round(self, bufs_q: jax.Array, k_star, p_shares: jax.Array,
-                  t) -> PyTree:
+                  t, *, betas=None, mask=None) -> PyTree:
         """Alg. 1 lines 5-8 for one round; returns the new global pytree and
-        advances the engine's history."""
-        w = self.wire.weights(p_shares, k_star, t)
+        advances the engine's history. ``k_star`` may be traced."""
+        w = self.wire.weights(p_shares, k_star, t, betas=betas, mask=mask)
         new_buf, _packed = self.wire.round_from_stacked(
-            bufs_q, k_star, w, self.buf_p1, self.buf_p2, t=t)
+            bufs_q, k_star, w, self.buf_p1, self.buf_p2, t=t, betas=betas)
         self.buf_p1, self.buf_p2 = new_buf, self.buf_p1
         return fl.unflatten_tree(new_buf, self.layout)

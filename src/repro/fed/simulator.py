@@ -4,6 +4,26 @@ Drives FedPC, FedAvg and Phong et al. over N in-process workers with private
 data shards and private hyper-parameters, with exact Eq. (8) byte accounting
 and the §4.2 information-flow ledger enforced on every round.
 
+Two FedPC drivers share the pure round core (``repro.fed.rounds``):
+
+* :meth:`FedSimulator.run_fedpc` — workers are stateful Python objects, so
+  rounds step in a Python loop, but the protocol is device-resident: pilot
+  selection is traced (``k_star`` never syncs to the host mid-run), worker
+  costs stay device scalars, and the ledger / pilot history are backfilled
+  from ONE post-loop fetch. The only per-round host syncs left are the
+  opt-in worker-side evasion defence (``evade_streak`` — inherently a host
+  behaviour: workers compare their history to decide what to report) and
+  ``eval_every``.
+* :meth:`FedSimulator.run_fedpc_scan` — the jitted multi-round path: every
+  worker's batch schedule is pre-drawn on the host, then ALL rounds run as
+  one ``lax.scan`` over ``WirePath.round_step`` — two kernel launches per
+  round, zero per-round device→host transfers.
+
+Both drivers support the two scenario axes of the round core: FedAvg-style
+C-fraction **partial participation** (sampled workers only; the same
+pre-generated mask schedule feeds both drivers) and **heterogeneous
+per-worker beta_k** on the wire.
+
 This is what the paper-table benchmarks (Tables 2–4, Figs 4/6) run on; the
 TPU-mesh counterpart with the same math as collectives is
 ``repro.fed.distributed``.
@@ -11,6 +31,7 @@ TPU-mesh counterpart with the same math as collectives is
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Callable, Optional
 
 import jax
@@ -19,8 +40,8 @@ import numpy as np
 
 from repro.core import baselines as bl
 from repro.core import fedpc as fp
+from repro.core import flat as fl
 from repro.core import protocol as proto
-from repro.core.goodness import select_pilot
 from repro.core.privacy import LeakageLedger
 from repro.fed import rounds as rd
 from repro.fed.worker import Worker
@@ -35,10 +56,27 @@ class SimResult:
     pilot_history: list = field(default_factory=list)  # FedPC only
     bytes_per_round: list = field(default_factory=list)
     eval_history: list = field(default_factory=list)
+    round_state: Optional[rd.RoundState] = None        # FedPC resume handle
 
     @property
     def total_bytes(self) -> float:
         return float(np.sum(self.bytes_per_round))
+
+
+def _should_donate() -> bool:
+    """Donate the RoundState buffers into the jitted step where the backend
+    honours donation (CPU silently copies and warns, so skip it there)."""
+    return jax.default_backend() != "cpu"
+
+
+def _own_state(state: rd.RoundState, was_caller_supplied: bool
+               ) -> rd.RoundState:
+    """Copy a caller-supplied resume state before it enters a donating jit —
+    the caller keeps a valid handle (e.g. for save_round_state or a second
+    driver run from the same checkpoint)."""
+    if was_caller_supplied and _should_donate():
+        return jax.tree_util.tree_map(jnp.copy, state)
+    return state
 
 
 class FedSimulator:
@@ -56,32 +94,137 @@ class FedSimulator:
         self.evade_streak = evade_streak  # 0 = defence off
 
     # ------------------------------------------------------------------
-    # FedPC (Algorithms 1 & 2)
+    # FedPC shared plumbing
     # ------------------------------------------------------------------
-    def run_fedpc(self, rounds: int, eval_every: int = 0) -> SimResult:
+    def _resolve_scenario(self, participation, betas, rounds, seed, t0):
+        """(masks host (R,N) float or None, betas device (N,) or None).
+
+        Masks are keyed by ABSOLUTE round (``t0`` onward), so a resumed run
+        draws the same schedule an uninterrupted run would for those rounds.
+        """
         cfg = self.fed_cfg
-        state = fp.init_state(self.init_params, self.n)
+        frac = cfg.participation if participation is None else participation
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"participation must be in (0, 1], got {frac}")
+        masks = None
+        if frac < 1.0:
+            masks = np.asarray(rd.participation_masks(
+                jax.random.PRNGKey(seed), rounds, self.n, frac,
+                start_round=t0))
+        if betas is not None:
+            betas_arr = jnp.asarray(betas, jnp.float32)
+        elif cfg.betas is not None:
+            betas_arr = cfg.beta_vector
+        else:
+            # Workers that drew a private beta_k (make_worker_configs'
+            # beta_menu sets WorkerConfig.beta; None = no draw) put them on
+            # the wire, with cfg.beta filling any gaps; an undrawn fleet
+            # stays on the shared-scalar path so cfg.beta remains the
+            # single knob (bitwise-identical to before).
+            wb = [w.cfg.beta for w in self.workers]
+            betas_arr = (jnp.asarray(
+                [cfg.beta if b is None else b for b in wb], jnp.float32)
+                if any(b is not None for b in wb) else None)
+        return masks, betas_arr
+
+    def _backfill_ledger(self, t0: int, pilots: np.ndarray,
+                         masks: np.ndarray | None) -> None:
+        """Record each round's uplink events after the fact — the ledger is
+        host metadata, so it is reconstructed from the single post-run fetch
+        of the on-device pilot history (§4.2 invariants unchanged)."""
+        for i, k_star in enumerate(pilots):
+            t = t0 + i
+            row = None if masks is None else masks[i]
+            for k in range(self.n):
+                if row is None or row[k]:
+                    self.ledger.record(k, t, "cost", False)
+            self.ledger.record(int(k_star), t, "pilot_params", True)
+            for k in range(self.n):
+                if (row is None or row[k]) and k != int(k_star):
+                    self.ledger.record(k, t, "packed_ternary", False)
+
+    def _finish_fedpc(self, res: SimResult, state: rd.RoundState,
+                      layout: fl.FlatLayout, t0: int,
+                      k_stars: list, raw_costs: list,
+                      masks: np.ndarray | None, model_bytes: int,
+                      ledger_done: bool) -> SimResult:
+        """The ONE post-run device→host fetch: pilot history + costs come
+        back together; ledger, byte accounting and summaries are host work."""
+        pilots = np.asarray(jnp.stack(k_stars))
+        costs_mat = np.asarray(jnp.stack(raw_costs))        # (R, N)
+        if not ledger_done:
+            self._backfill_ledger(t0, pilots, masks)
+        for i in range(len(pilots)):
+            row = np.ones(self.n) if masks is None else masks[i]
+            vals = np.where(row > 0, costs_mat[i], 0.0)
+            res.costs.append(float(np.average(vals,
+                                              weights=self.sizes * row)))
+            res.pilot_history.append(int(pilots[i]))
+            res.bytes_per_round.append(proto.fedpc_bytes_per_round(
+                model_bytes, int(np.sum(row > 0))))
+        res.params = fl.unflatten_tree(state.buf_p1, layout)
+        res.round_state = state
+        return res
+
+    # ------------------------------------------------------------------
+    # FedPC (Algorithms 1 & 2) — Python-loop driver, stateful workers
+    # ------------------------------------------------------------------
+    def run_fedpc(self, rounds: int, eval_every: int = 0, *,
+                  participation: Optional[float] = None,
+                  betas=None, participation_seed: int = 0,
+                  state: Optional[rd.RoundState] = None) -> SimResult:
+        """Run ``rounds`` rounds (resuming from ``state`` if given).
+
+        Per round: workers train locally (device costs), one traced
+        ``round_step`` does pilot selection + batched uplink + fused master
+        update (two kernel launches). Pilot history and costs stay on
+        device until the end of the run.
+        """
+        cfg = self.fed_cfg
+        wire = rd.WirePath(rd.WireConfig.from_fedpc(cfg))
+        layout = fl.layout_of(self.init_params)
+        resumed = state is not None
+        if state is None:
+            state = rd.init_round_state(self.init_params, self.n, layout)
+        state = _own_state(state, resumed)
+        t0 = int(state.round)                 # one setup-time sync
+        masks, betas_arr = self._resolve_scenario(
+            participation, betas, rounds, participation_seed, t0)
+        if self.evade_streak and masks is not None:
+            raise ValueError("evasion defence + partial participation is "
+                             "not supported in one run")
         model_bytes = proto.model_size_bytes(self.init_params)
-        res = SimResult("fedpc", state.params)
-        prev_costs_rep = [np.inf] * self.n
+        params = fl.unflatten_tree(state.buf_p1, layout)
+        res = SimResult("fedpc", params)
+        sizes = jnp.asarray(self.sizes)
 
-        # The round engine owns the whole wire path (Eq. (3)-(5)/§3.3) and
-        # the (P^{t-1}, P^{t-2}) history buffers; this loop only trains
-        # workers, selects the pilot and keeps the ledger/byte accounting.
-        engine = rd.RoundEngine(self.init_params,
-                                rd.WireConfig.from_fedpc(cfg))
-        p_shares = jnp.asarray(self.sizes / self.sizes.sum())
+        step = jax.jit(
+            partial(wire.round_step, betas=betas_arr),
+            donate_argnums=(0,) if _should_donate() else ())
+        # The defence's reported-cost memory: on resume, state.prev_costs
+        # holds exactly the last reported costs (a fresh state holds the
+        # same +inf this used to start from).
+        prev_costs_rep = (list(np.asarray(state.prev_costs))
+                          if self.evade_streak else [np.inf] * self.n)
+        k_stars: list = []
+        raw_costs: list = []
 
-        for t in range(1, rounds + 1):
+        for i in range(rounds):
+            t = t0 + i
+            row = None if masks is None else masks[i]
             # --- workers train locally (parallel in the real system) ---
             locals_, costs = [], []
-            for w in self.workers:
-                q, c = w.train_round(state.params)
+            for k, w in enumerate(self.workers):
+                if row is None or row[k]:
+                    q, c = w.train_round_device(params)
+                else:       # not sampled: nothing trains, nothing uploads
+                    q, c = params, 0.0
                 locals_.append(q)
-                costs.append(c)
-                self.ledger.record(w.cfg.worker_id, t, "cost", False)
+                costs.append(jnp.asarray(c, jnp.float32))
 
-            # --- worker-side evasion defence (§4.2 discussion) ---
+            # --- worker-side evasion defence (§4.2 discussion): inherently
+            # a host behaviour — each worker inspects its own pilot history
+            # to decide what to report, so this path syncs k* per round ---
             rep_costs = list(costs)
             if self.evade_streak:
                 for k in range(self.n):
@@ -89,36 +232,151 @@ class FedSimulator:
                             >= self.evade_streak):
                         rep_costs[k] = prev_costs_rep[k]  # goodness → 0
 
-            costs_arr = jnp.asarray(rep_costs, jnp.float32)
-            k_star, _ = select_pilot(
-                costs_arr, state.prev_costs, jnp.asarray(self.sizes), t)
-            k_star = int(k_star)
-
-            # --- uplinks: pilot sends weights; others send 2-bit codes ---
-            # The engine packs ALL N workers' wire buffers in ONE batched
-            # kernel launch (the pilot's row is masked out of Eq. (3) by its
-            # zero weight) and applies the fused master update — the whole
-            # round's wire math is two launches regardless of N.
-            self.ledger.record(k_star, t, "pilot_params", True)
-            for k in range(self.n):
-                if k != k_star:
-                    self.ledger.record(k, t, "packed_ternary", False)
-            bufs_q = engine.flatten_locals(locals_)
-            new_params = engine.run_round(bufs_q, k_star, p_shares, t)
-
-            state = fp.FedPCState(
-                params=new_params, params_prev=state.params,
-                prev_costs=costs_arr, round=jnp.asarray(t + 1))
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *locals_)
+            bufs_q = fl.flatten_stacked(stacked, layout)
+            costs_arr = jnp.stack(
+                [jnp.asarray(c, jnp.float32) for c in rep_costs])
+            mask_dev = None if row is None else jnp.asarray(row)
+            state, new_buf, info = step(state, bufs_q, costs_arr, sizes,
+                                        mask=mask_dev)
+            params = fl.unflatten_tree(new_buf, layout)
+            k_stars.append(info["k_star"])
+            raw_costs.append(jnp.stack(costs))   # reported costs, un-evaded
             prev_costs_rep = rep_costs
 
-            res.costs.append(float(np.average(costs, weights=self.sizes)))
-            res.pilot_history.append(k_star)
-            res.bytes_per_round.append(proto.fedpc_bytes_per_round(
-                model_bytes, self.n))
-            if eval_every and self.eval_fn and t % eval_every == 0:
-                res.eval_history.append((t, self.eval_fn(new_params)))
-        res.params = state.params
-        return res
+            if self.evade_streak:     # defence needs the ledger live
+                k_host = int(info["k_star"])
+                self._backfill_ledger(t, np.asarray([k_host]), None)
+            if eval_every and self.eval_fn and (t - t0 + 1) % eval_every == 0:
+                res.eval_history.append((t, self.eval_fn(params)))
+
+        return self._finish_fedpc(res, state, layout, t0, k_stars,
+                                  raw_costs, masks, model_bytes,
+                                  ledger_done=bool(self.evade_streak))
+
+    # ------------------------------------------------------------------
+    # FedPC — scan driver: ALL rounds inside one jitted lax.scan
+    # ------------------------------------------------------------------
+    def run_fedpc_scan(self, rounds: int, *,
+                       participation: Optional[float] = None,
+                       betas=None, participation_seed: int = 0,
+                       state: Optional[rd.RoundState] = None) -> SimResult:
+        """The device-resident multi-round driver.
+
+        Every worker's batch schedule for all ``rounds`` is pre-drawn on the
+        host (consuming each loader's rng exactly as the Python driver
+        would, skipped rounds included), then local training + the round
+        protocol run as ONE ``lax.scan`` over ``WirePath.round_step``: two
+        kernel launches per round, zero per-round device→host transfers.
+        Ledger and pilot history are backfilled from a single post-scan
+        fetch. Bitwise-identical to :meth:`run_fedpc` on the same fresh
+        simulator state.
+
+        Requires jit-able workers: every loader's shard size must be a
+        multiple of its batch size (no ragged last batch). The evasion
+        defence (per-round host behaviour) is not available here.
+        """
+        if self.evade_streak:
+            raise ValueError("evade_streak requires the Python-loop driver "
+                             "(per-round host behaviour)")
+        cfg = self.fed_cfg
+        wire = rd.WirePath(rd.WireConfig.from_fedpc(cfg))
+        layout = fl.layout_of(self.init_params)
+        resumed = state is not None
+        if state is None:
+            state = rd.init_round_state(self.init_params, self.n, layout)
+        state = _own_state(state, resumed)
+        t0 = int(state.round)                 # one setup-time sync
+        masks, betas_arr = self._resolve_scenario(
+            participation, betas, rounds, participation_seed, t0)
+        model_bytes = proto.model_size_bytes(self.init_params)
+        params0 = fl.unflatten_tree(state.buf_p1, layout)
+        res = SimResult("fedpc", params0)
+
+        # --- pre-draw every worker's batch schedule (host) --------------
+        # Only the sample INDICES are pre-drawn — (rounds, steps, bs) int32
+        # per worker; the shard itself lives on device once and the scan
+        # body gathers batches from it, so device memory stays
+        # O(shard + rounds·steps·bs·4B) instead of O(rounds · shard).
+        shards, index_schedules, steps_per_round = [], [], []
+        for k, w in enumerate(self.workers):
+            if not w.uniform_batches:
+                raise ValueError(
+                    f"worker {k}: scan driver needs batch_size "
+                    f"({w.loader.batch_size}) to divide the shard size "
+                    f"({w.loader.n}) — no ragged last batch under scan")
+            steps = w.cfg.local_epochs * w.loader.steps_per_epoch()
+            steps_per_round.append(steps)
+            rows = []
+            for i in range(rounds):
+                if masks is None or masks[i, k]:
+                    rows.append(np.stack(
+                        [sel for _ in range(w.cfg.local_epochs)
+                         for sel in w.loader.epoch_indices()]))
+                else:       # skipped round: loader rng untouched; the
+                    # gathered batch is masked out of all state anyway
+                    rows.append(np.zeros((steps, w.loader.batch_size),
+                                         np.int64))
+            index_schedules.append(jnp.asarray(np.stack(rows), jnp.int32))
+            shards.append(tuple(jnp.asarray(a) for a in w.loader.arrays))
+            if w.opt_state is None:
+                w.opt_state = w.opt.init(params0)
+
+        worker_carry = tuple(
+            (w.opt_state, jnp.asarray(w.step, jnp.int32))
+            for w in self.workers)
+        masks_dev = None if masks is None else jnp.asarray(masks)
+        sizes = jnp.asarray(self.sizes)
+
+        def worker_fn(wc, buf, t):
+            params = fl.unflatten_tree(buf, layout)
+            r = t - t0                        # row into the schedules
+            m_row = (None if masks_dev is None
+                     else jnp.take(masks_dev, r, axis=0))
+            new_wc, bufs, costs = [], [], []
+            for k, w in enumerate(self.workers):
+                opt_state, step0 = wc[k]
+                idx = jnp.take(index_schedules[k], r, axis=0)  # (steps, bs)
+                bk = tuple(
+                    jnp.take(a, idx.reshape(-1), axis=0).reshape(
+                        idx.shape + a.shape[1:])
+                    for a in shards[k])
+                # The same recurrence train_round_device jits standalone —
+                # traced here inside the round body (bitwise-identical).
+                pk, osk, sk, cost_k = w.scan_train(params, opt_state,
+                                                   step0, bk)
+                buf_k = fl.flatten_tree(pk, layout)
+                if m_row is not None:         # skipped: state frozen
+                    m = m_row[k] > 0
+                    buf_k = jnp.where(m, buf_k, buf)
+                    osk = jax.tree_util.tree_map(
+                        lambda a, b: jnp.where(m, a, b), osk, opt_state)
+                    sk = jnp.where(m, sk, step0)
+                    cost_k = jnp.where(m, cost_k, 0.0)
+                new_wc.append((osk, sk))
+                bufs.append(buf_k)
+                costs.append(cost_k)
+            return tuple(new_wc), jnp.stack(bufs), jnp.stack(costs)
+
+        run = jax.jit(
+            lambda st, wc: rd.scan_rounds(
+                wire, st, worker_fn, wc, rounds, sizes,
+                betas=betas_arr, masks=masks_dev),
+            donate_argnums=(0,) if _should_donate() else ())
+        state, worker_carry, infos = run(state, worker_carry)
+
+        # write back worker state (host bookkeeping, once)
+        for k, w in enumerate(self.workers):
+            w.opt_state = worker_carry[k][0]
+            part = rounds if masks is None else int(np.sum(masks[:, k] > 0))
+            w.step += steps_per_round[k] * part
+
+        k_stars = list(infos["k_star"])
+        raw_costs = list(infos["costs"])
+        return self._finish_fedpc(res, state, layout, t0, k_stars,
+                                  raw_costs, masks, model_bytes,
+                                  ledger_done=False)
 
     # ------------------------------------------------------------------
     # FedAvg baseline

@@ -12,7 +12,11 @@ re-read from HBM — never exists: codes live only in VMEM registers.
 ``ternary_pack_any_2d`` carries the round index as a scalar operand so a
 traced ``t`` selects the Eq. (4)/(5) branch in-register (for jit'd round
 loops); ``ternary_pack_stacked_2d`` batches all N workers' uplinks into ONE
-launch over a (N, R, 512) stack sharing the public history blocks.
+launch over a (N, R, 512) stack sharing the public history blocks. The
+stacked kernel's Eq. (5) threshold may be a per-worker ``(N,)`` beta vector
+(heterogeneous beta_k): it rides as a (N, 1) operand blocked over the
+worker grid axis, so each worker's block reads its own scalar — no dynamic
+in-kernel indexing.
 
 ``packed_master_update_2d`` — master downlink side of Eq. (3). Consumes the
 *packed* uint8 codes of all N workers, decodes the 2-bit fields in-register,
@@ -105,11 +109,13 @@ def _ternary_pack_any_kernel(q_ref, p1_ref, p2_ref, scal_ref, out_ref):
     out_ref[...] = _pack_tile(_codes_any(q, p1, p2, t, beta, alpha1))
 
 
-def _ternary_pack_stacked_kernel(q_ref, p1_ref, p2_ref, scal_ref, out_ref):
+def _ternary_pack_stacked_kernel(q_ref, p1_ref, p2_ref, beta_ref, scal_ref,
+                                 out_ref):
     q = q_ref[0].astype(jnp.float32)                   # block (1, R, 512)
     p1 = p1_ref[...].astype(jnp.float32)               # shared history block
     p2 = p2_ref[...].astype(jnp.float32)
-    t, beta, alpha1 = scal_ref[0], scal_ref[1], scal_ref[2]
+    beta = beta_ref[0, 0]                              # this worker's beta_k
+    t, alpha1 = scal_ref[0], scal_ref[1]
     out_ref[0] = _pack_tile(_codes_any(q, p1, p2, t, beta, alpha1))
 
 
@@ -203,8 +209,11 @@ def ternary_pack_stacked_2d(q, p1, p2, t, beta, alpha1, *,
     q (N, R, 512) — every worker's history view; p1/p2 (R, 512) — the shared
     public history, re-read per worker block (it is the same HBM buffer, not
     N copies). Grid is (N, R/block): worker-major, so the §3.3 byte order of
-    each worker's buffer matches :func:`ternary_pack_2d` exactly. Returns
-    (N, R, 128) uint8.
+    each worker's buffer matches :func:`ternary_pack_2d` exactly.
+
+    ``beta`` is either one scalar (shared threshold) or a ``(N,)`` vector of
+    per-worker beta_k — worker k's blocks read ``beta[k]`` via the blocked
+    (1, 1) operand. Returns (N, R, 128) uint8.
     """
     n, rows, _ = q.shape
     grid = (n, rows // block_rows)
@@ -212,18 +221,20 @@ def ternary_pack_stacked_2d(q, p1, p2, t, beta, alpha1, *,
                           lambda k, i: (k, i, 0))
     h_spec = pl.BlockSpec((block_rows, LANES * PACK), lambda k, i: (i, 0))
     out_spec = pl.BlockSpec((1, block_rows, LANES), lambda k, i: (k, i, 0))
+    betas = jnp.broadcast_to(
+        jnp.asarray(beta, jnp.float32).reshape(-1, 1), (n, 1))
+    beta_spec = pl.BlockSpec((1, 1), lambda k, i: (k, 0))
     scal = jnp.stack([jnp.asarray(t, jnp.float32),
-                      jnp.asarray(beta, jnp.float32),
                       jnp.asarray(alpha1, jnp.float32)])
     return pl.pallas_call(
         _ternary_pack_stacked_kernel,
         grid=grid,
-        in_specs=[q_spec, h_spec, h_spec,
+        in_specs=[q_spec, h_spec, h_spec, beta_spec,
                   pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((n, rows, LANES), jnp.uint8),
         interpret=interpret,
-    )(q, p1, p2, scal)
+    )(q, p1, p2, betas, scal)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))

@@ -148,14 +148,16 @@ def flat_ternary_pack(buf_q, buf_p1, buf_p2, *, t: int, beta: float,
         interpret=interpret, block_rows=br)
 
 
-def flat_ternary_pack_traced(buf_q, buf_p1, buf_p2, *, t, beta: float,
+def flat_ternary_pack_traced(buf_q, buf_p1, buf_p2, *, t, beta,
                              alpha1: float, interpret: bool | None = None,
                              block_rows: int | None = None):
     """Fused uplink over FlatParams buffers with a *traced* round index.
 
     Same contract as :func:`flat_ternary_pack` but ``t`` may be a traced
     scalar (the Eq. (4)/(5) branch is selected in-register), so it can live
-    inside a jit'd round loop such as the distributed sync body.
+    inside a jit'd round loop such as the distributed sync body. ``beta``
+    may also be traced — e.g. this fed instance's own beta_k gathered from a
+    heterogeneous per-worker vector.
     """
     interpret = _default_interpret() if interpret is None else interpret
     rows = buf_q.shape[0]
@@ -168,14 +170,15 @@ def flat_ternary_pack_traced(buf_q, buf_p1, buf_p2, *, t, beta: float,
         interpret=interpret, block_rows=br)
 
 
-def flat_ternary_pack_stacked(bufs_q, buf_p1, buf_p2, *, t, beta: float,
+def flat_ternary_pack_stacked(bufs_q, buf_p1, buf_p2, *, t, beta,
                               alpha1: float, interpret: bool | None = None,
                               block_rows: int | None = None):
     """Batched uplink: (N, rows, 128) worker buffers → (N, rows//4, 128)
     packed wire buffers in ONE kernel launch.
 
     The shared public history ``buf_p1``/``buf_p2`` is passed once, not
-    stacked N times. ``t`` may be traced (scalar-operand branch select).
+    stacked N times. ``t`` may be traced (scalar-operand branch select);
+    ``beta`` is a shared scalar or a per-worker ``(N,)`` vector of beta_k.
     """
     interpret = _default_interpret() if interpret is None else interpret
     n, rows, _ = bufs_q.shape

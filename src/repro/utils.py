@@ -92,6 +92,46 @@ def split_rngs(key, n: int):
     return list(jax.random.split(key, n))
 
 
+# -- jaxpr accounting (structural asserts in tests and benches) -------------
+
+# Primitives that imply host interaction from inside a traced program; a
+# device-resident round loop must contain none of them.
+HOST_SYNC_PRIMITIVES = frozenset({
+    "io_callback", "pure_callback", "debug_callback", "callback",
+    "infeed", "outfeed", "device_put",
+})
+
+
+def iter_jaxpr_eqns(jaxpr, into_pallas: bool = True):
+    """Yield every eqn of ``jaxpr`` recursively (scan/cond/pjit sub-jaxprs
+    included). ``into_pallas=False`` skips pallas_call kernel bodies —
+    values there live in VMEM/registers, so HBM-intermediate accounting
+    must not see them."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if not into_pallas and eqn.primitive.name == "pallas_call":
+            continue
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                inner = getattr(sub, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    yield from iter_jaxpr_eqns(inner, into_pallas)
+                elif hasattr(sub, "eqns"):
+                    yield from iter_jaxpr_eqns(sub, into_pallas)
+
+
+def jaxpr_primitive_counts(fn: Callable, *args, **kwargs) -> dict:
+    """{primitive name: count} over ``fn``'s full jaxpr — e.g.
+    ``counts.get("pallas_call")`` is the kernel-launch count (a scanned body
+    counts once regardless of trip count) and any name in
+    ``HOST_SYNC_PRIMITIVES`` flags a device→host round-trip."""
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    counts: dict = {}
+    for eqn in iter_jaxpr_eqns(jaxpr.jaxpr):
+        counts[eqn.primitive.name] = counts.get(eqn.primitive.name, 0) + 1
+    return counts
+
+
 def log2_int(x: int) -> int:
     l = int(math.log2(x))
     assert (1 << l) == x, f"{x} is not a power of two"

@@ -212,30 +212,22 @@ def test_layout_shards_align_slabs():
 # (the CPU-interpret analogue of the ≥1.5× HBM-traffic win on TPU).
 # ---------------------------------------------------------------------------
 
-def _walk_jaxpr(jaxpr, pallas_eqns, int8_sizes):
-    for eqn in jaxpr.eqns:
+def _count(fn, *args):
+    """(pallas launch count, HBM int8 intermediate sizes) — kernel
+    internals are excluded (in-register values don't touch HBM)."""
+    from repro.utils import iter_jaxpr_eqns
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    launches, int8_sizes = 0, []
+    for eqn in iter_jaxpr_eqns(jaxpr.jaxpr, into_pallas=False):
         if eqn.primitive.name == "pallas_call":
-            pallas_eqns.append(eqn)
-            continue              # kernel internals don't touch HBM
+            launches += 1
+            continue
         for v in eqn.outvars:
             aval = getattr(v, "aval", None)
             if (aval is not None and getattr(aval, "dtype", None) is not None
                     and aval.dtype == jnp.int8):
                 int8_sizes.append(int(np.prod(aval.shape)))
-        for p in eqn.params.values():
-            for sub in (p if isinstance(p, (list, tuple)) else [p]):
-                inner = getattr(sub, "jaxpr", None)
-                if inner is not None and hasattr(inner, "eqns"):
-                    _walk_jaxpr(inner, pallas_eqns, int8_sizes)
-                elif hasattr(sub, "eqns"):
-                    _walk_jaxpr(sub, pallas_eqns, int8_sizes)
-
-
-def _count(fn, *args):
-    jaxpr = jax.make_jaxpr(fn)(*args)
-    pallas_eqns, int8_sizes = [], []
-    _walk_jaxpr(jaxpr.jaxpr, pallas_eqns, int8_sizes)
-    return len(pallas_eqns), int8_sizes
+    return launches, int8_sizes
 
 
 def test_fused_uplink_single_launch_no_int8_intermediate():

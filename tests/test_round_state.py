@@ -1,0 +1,295 @@
+"""The pure round core (repro.fed.rounds): RoundState/round_step/scan_rounds.
+
+Covers the device-resident refactor's contract:
+  * round_step with an all-ones mask + uniform beta_k is BITWISE equal to
+    the plain full-participation path (property test over rounds/sizes);
+  * scan-driven rounds equal a Python-loop driver bitwise over >= 5 rounds;
+  * the scanned program is exactly 2 pallas launches (uplink + master) and
+    contains zero host-sync primitives — pilot selection stays traced;
+  * partial participation: pilot always sampled, masked workers contribute
+    zero weight and keep their previous cost;
+  * per-worker beta_k matches the pytree oracle end-to-end;
+  * RoundState round-trips through repro.checkpoint bitwise (mid-federation
+    resume).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import flat as fl
+from repro.core.ternary import ternarize_tree, ternarize_tree_round1
+from repro.core.update import master_update_tree
+from repro.fed import rounds as rd
+from repro.utils import HOST_SYNC_PRIMITIVES, jaxpr_primitive_counts
+
+N = 5
+ROWS = 64
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"w": jax.random.normal(k, (41, 23)),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (23,))}
+
+
+def _fixture(seed=0, n=N):
+    tree = _tree(seed)
+    layout = fl.layout_of(tree)
+    state = rd.init_round_state(tree, n, layout)
+    key = jax.random.PRNGKey(seed + 77)
+    deltas = 0.05 * jax.random.normal(key, (n,) + state.buf_p1.shape)
+    sizes = jnp.linspace(20.0, 80.0, n)
+    return tree, layout, state, deltas, sizes
+
+
+def _worker_fn(deltas, n=N):
+    def fn(wc, buf, t):
+        bufs_q = buf[None] + deltas * (1.0 + 0.1 * t.astype(jnp.float32))
+        costs = 1.0 / (t.astype(jnp.float32)
+                       + jnp.arange(n, dtype=jnp.float32) + 1.0)
+        return wc, bufs_q, costs
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Identity property: all-ones mask + uniform beta_k == plain path, bitwise
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 4), st.sampled_from([2, 5, 9]))
+@settings(max_examples=8, deadline=None)
+def test_ones_mask_uniform_betas_bitwise_identity(seed, n):
+    wire = rd.WirePath(rd.WireConfig())
+    tree, layout, state, deltas, sizes = _fixture(seed, n)
+    worker = _worker_fn(deltas, n)
+    _, bufs_q, costs = worker(0, state.buf_p1, state.round)
+
+    plain, plain_buf, plain_info = wire.round_step(
+        state, bufs_q, costs, sizes)
+    dressed, dressed_buf, _ = wire.round_step(
+        state, bufs_q, costs, sizes,
+        betas=jnp.full((n,), wire.cfg.beta), mask=jnp.ones((n,)))
+    np.testing.assert_array_equal(np.asarray(plain_buf),
+                                  np.asarray(dressed_buf))
+    for a, b in zip(plain, dressed):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_round_step_matches_engine_path():
+    """round_step == the RoundEngine wrapper on the same inputs (the
+    engine is now a thin shell over the pure core)."""
+    wire = rd.WirePath(rd.WireConfig())
+    tree, layout, state, deltas, sizes = _fixture(3)
+    _, bufs_q, costs = _worker_fn(deltas)(0, state.buf_p1, state.round)
+
+    _, new_buf, info = wire.round_step(state, bufs_q, costs, sizes)
+    engine = rd.RoundEngine(tree, wire.cfg)
+    p_shares = sizes / jnp.sum(sizes)
+    engine.run_round(bufs_q, info["k_star"], p_shares, 1)
+    np.testing.assert_array_equal(np.asarray(engine.buf_p1),
+                                  np.asarray(new_buf))
+
+
+# ---------------------------------------------------------------------------
+# scan == Python loop, bitwise, >= 5 rounds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", ["plain", "masked+betas"])
+def test_scan_matches_python_loop_bitwise(scenario):
+    wire = rd.WirePath(rd.WireConfig())
+    tree, layout, state0, deltas, sizes = _fixture(1)
+    worker = _worker_fn(deltas)
+    n_rounds = 6
+    if scenario == "plain":
+        betas, masks = None, None
+    else:
+        betas = jnp.linspace(0.1, 0.3, N)
+        masks = rd.participation_masks(jax.random.PRNGKey(5), n_rounds,
+                                       N, 0.6)
+
+    st_scan, _, infos = jax.jit(lambda s: rd.scan_rounds(
+        wire, s, worker, 0, n_rounds, sizes, betas=betas, masks=masks))(
+        state0)
+
+    # The Python-loop driver jits the same round body (local models + one
+    # round_step) and re-dispatches it every round — what scan_rounds rolls
+    # into a single program.
+    def body(s, mask_row):
+        _, bufs_q, costs = worker(0, s.buf_p1, s.round)
+        return wire.round_step(s, bufs_q, costs, sizes, betas=betas,
+                               mask=mask_row)
+
+    body_jit = jax.jit(body)
+    body_jit_nomask = jax.jit(lambda s: body(s, None))
+    st = state0
+    ks = []
+    for r in range(n_rounds):
+        if masks is None:
+            st, _, info = body_jit_nomask(st)
+        else:
+            st, _, info = body_jit(st, masks[r])
+        ks.append(int(info["k_star"]))
+
+    for a, b in zip(st, st_scan):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(infos["k_star"]),
+                                  np.asarray(ks))
+
+
+# ---------------------------------------------------------------------------
+# Structure: 2 launches per round, zero host syncs, traced pilot
+# ---------------------------------------------------------------------------
+
+def test_round_step_two_launches_no_host_sync():
+    wire = rd.WirePath(rd.WireConfig(), interpret=True)
+    _, _, state, deltas, sizes = _fixture(0)
+    bufs = jnp.zeros((N,) + state.buf_p1.shape)
+    costs = jnp.ones((N,))
+    counts = jaxpr_primitive_counts(
+        lambda s, b, c: wire.round_step(s, b, c, sizes), state, bufs, costs)
+    assert counts.get("pallas_call") == 2, counts
+    assert sum(counts.get(p, 0) for p in HOST_SYNC_PRIMITIVES) == 0, counts
+
+
+def test_scan_program_two_launches_total_no_host_sync():
+    """The whole multi-round program holds exactly two pallas_call eqns —
+    the scan body is traced once regardless of trip count — and no
+    host-sync primitives: zero per-round device→host transfers by
+    construction."""
+    wire = rd.WirePath(rd.WireConfig(), interpret=True)
+    _, _, state, deltas, sizes = _fixture(0)
+    worker = _worker_fn(deltas)
+    counts = jaxpr_primitive_counts(
+        lambda s: rd.scan_rounds(wire, s, worker, 0, 7, sizes), state)
+    assert counts.get("pallas_call") == 2, counts
+    assert counts.get("scan", 0) >= 1, counts
+    assert sum(counts.get(p, 0) for p in HOST_SYNC_PRIMITIVES) == 0, counts
+
+
+def test_round_step_pilot_stays_on_device():
+    wire = rd.WirePath(rd.WireConfig())
+    _, _, state, deltas, sizes = _fixture(2)
+    _, bufs_q, costs = _worker_fn(deltas)(0, state.buf_p1, state.round)
+    _, _, info = jax.jit(
+        lambda s, b, c: wire.round_step(s, b, c, sizes))(
+        state, bufs_q, costs)
+    assert isinstance(info["k_star"], jax.Array)
+    assert info["k_star"].shape == ()
+
+
+# ---------------------------------------------------------------------------
+# Partial participation semantics
+# ---------------------------------------------------------------------------
+
+def test_participation_mask_properties():
+    for frac, want in ((0.6, 3), (0.2, 1), (1.0, 5)):
+        m = rd.participation_mask(jax.random.PRNGKey(0), N, frac)
+        assert set(np.asarray(m).tolist()) <= {0.0, 1.0}
+        assert int(np.asarray(m).sum()) == want
+    masks = rd.participation_masks(jax.random.PRNGKey(1), 8, N, 0.4)
+    assert masks.shape == (8, N)
+    assert np.all(np.asarray(masks).sum(axis=1) == 2)
+
+
+def test_first_time_participant_scores_round1_rule():
+    """A worker first sampled after round 1 still carries prev_cost=+inf;
+    it must score by the round-1 rule S_k/C_k, not inf (which would hijack
+    pilot selection by index)."""
+    from repro.core.goodness import goodness
+    sizes = jnp.array([10.0, 20.0, 30.0])
+    costs = jnp.array([1.0, 2.0, 3.0])
+    prev = jnp.array([jnp.inf, 1.5, jnp.inf])
+    g = np.asarray(goodness(costs, prev, sizes, 3))
+    assert np.isfinite(g).all()
+    np.testing.assert_allclose(g[0], 10.0)
+    np.testing.assert_allclose(g[1], 20.0 * (1.5 - 2.0))
+    np.testing.assert_allclose(g[2], 10.0)
+
+
+def test_masked_workers_excluded():
+    """Non-participants: never pilot, zero Eq. (3) weight, previous cost
+    carried forward."""
+    wire = rd.WirePath(rd.WireConfig())
+    _, _, state, deltas, sizes = _fixture(4)
+    state = state._replace(prev_costs=jnp.linspace(1.0, 2.0, N),
+                           round=jnp.asarray(3, jnp.int32))
+    worker = _worker_fn(deltas)
+    _, bufs_q, costs = worker(0, state.buf_p1, state.round)
+    mask = jnp.asarray([0.0, 1.0, 0.0, 1.0, 1.0])
+
+    new_state, _, info = wire.round_step(state, bufs_q, costs, sizes,
+                                         mask=mask)
+    k = int(info["k_star"])
+    assert mask[k] == 1.0
+    w = wire.weights(sizes / sizes.sum(), k, 3, mask=mask)
+    np.testing.assert_array_equal(np.asarray(w[np.asarray(mask) == 0]), 0.0)
+    pc = np.asarray(new_state.prev_costs)
+    np.testing.assert_array_equal(pc[0], np.asarray(state.prev_costs)[0])
+    np.testing.assert_array_equal(pc[2], np.asarray(state.prev_costs)[2])
+    np.testing.assert_array_equal(pc[1], np.asarray(costs)[1])
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous beta_k vs the pytree oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t", [1, 3])
+def test_betas_vector_matches_tree_oracle(t):
+    wire = rd.WirePath(rd.WireConfig())
+    tree, layout, state, deltas, sizes = _fixture(6)
+    if t > 1:
+        p2t = jax.tree_util.tree_map(lambda x: 0.9 * x, tree)
+        state = state._replace(buf_p2=fl.flatten_tree(p2t, layout),
+                               prev_costs=jnp.ones((N,)),
+                               round=jnp.asarray(t, jnp.int32))
+    else:
+        p2t = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    betas = jnp.asarray([0.1, 0.15, 0.2, 0.25, 0.3])
+    worker = _worker_fn(deltas)
+    _, bufs_q, costs = worker(0, state.buf_p1, state.round)
+    _, new_buf, info = wire.round_step(state, bufs_q, costs, sizes,
+                                       betas=betas)
+    got = fl.unflatten_tree(new_buf, layout)
+
+    locals_ = [fl.unflatten_tree(bufs_q[k], layout) for k in range(N)]
+    k_star = int(info["k_star"])
+    terns = ([ternarize_tree_round1(l, tree, wire.cfg.alpha1)
+              for l in locals_] if t == 1 else
+             [ternarize_tree(l, tree, p2t, float(betas[k]))
+              for k, l in enumerate(locals_)])
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *terns)
+    p_shares = sizes / jnp.sum(sizes)
+    want = master_update_tree(locals_[k_star], stacked, p_shares, betas,
+                              k_star, tree, p2t, t, wire.cfg.alpha0)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trip: resume mid-federation, bitwise
+# ---------------------------------------------------------------------------
+
+def test_round_state_checkpoint_resume_bitwise(tmp_path):
+    wire = rd.WirePath(rd.WireConfig())
+    tree, layout, state0, deltas, sizes = _fixture(8)
+    worker = _worker_fn(deltas)
+    run = jax.jit(lambda s, n: rd.scan_rounds(wire, s, worker, 0, n, sizes),
+                  static_argnums=1)
+
+    st_full, _, _ = run(state0, 6)
+
+    st_half, _, _ = run(state0, 3)
+    rd.save_round_state(str(tmp_path), st_half, metadata={"algo": "fedpc"})
+    like = rd.init_round_state(tree, N, layout)
+    st_loaded, manifest = rd.load_round_state(str(tmp_path), like)
+    assert manifest["metadata"]["kind"] == "fedpc_round_state"
+    assert manifest["step"] == 4                      # 3 rounds done, next=4
+    for a, b in zip(st_loaded, st_half):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    st_resumed, _, _ = run(st_loaded, 3)
+    for a, b in zip(st_resumed, st_full):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

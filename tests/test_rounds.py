@@ -152,25 +152,9 @@ def test_wire_weights_match_masked_weights():
 # batched pallas_call, the whole round exactly two)
 # ---------------------------------------------------------------------------
 
-def _walk_jaxpr(jaxpr, pallas_eqns):
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            pallas_eqns.append(eqn)
-            continue
-        for p in eqn.params.values():
-            for sub in (p if isinstance(p, (list, tuple)) else [p]):
-                inner = getattr(sub, "jaxpr", None)
-                if inner is not None and hasattr(inner, "eqns"):
-                    _walk_jaxpr(inner, pallas_eqns)
-                elif hasattr(sub, "eqns"):
-                    _walk_jaxpr(sub, pallas_eqns)
-
-
 def _count_launches(fn, *args):
-    jaxpr = jax.make_jaxpr(fn)(*args)
-    pallas_eqns = []
-    _walk_jaxpr(jaxpr.jaxpr, pallas_eqns)
-    return len(pallas_eqns)
+    from repro.utils import jaxpr_primitive_counts
+    return jaxpr_primitive_counts(fn, *args).get("pallas_call", 0)
 
 
 def test_batched_uplink_single_launch():
