@@ -1,0 +1,152 @@
+"""Bench-smoke regression gate.
+
+Compares a freshly produced ``BENCH_kernels_smoke.json`` against the
+committed baseline and fails (exit 1) when any kernel timing entry got more
+than ``--threshold`` slower. Used by CI: the baseline is the file as
+committed on the branch, the candidate is what ``kernels_bench --smoke``
+just wrote on the runner.
+
+Two comparison classes, both keyed by JSON path:
+
+* ``*_speedup`` ratios (fused-vs-unfused, stacked-vs-loop, ...). Both
+  sides of a speedup are measured in the SAME bench run on the SAME
+  machine, so the ratio survives the committed-baseline-vs-CI-runner
+  hardware gap — but only when the thing being timed is big enough to
+  time: a speedup is gated only if its record's slowest ``_us`` sibling
+  clears the noise floor (sub-millisecond smoke timings swing 2-4x
+  run-to-run, measured, so their ratios are noise too). At today's smoke
+  sizes this arms for nothing; grow the smoke sizes (or gate a real-size
+  run) and the same script gets real teeth with no changes.
+* absolute ``*_us`` entries — the gross-blowup guard, clamped to the
+  noise floor before the ratio. Nothing a healthy smoke run produces
+  clears the floor, so ordinary jitter (or a slower CI host) can never
+  trip it; an interpret-mode structural regression of the class this
+  repo has actually had (the 0.20x worker-major stacked uplink — ~23ms
+  at smoke sizes) lands past floor×threshold and fails.
+
+Entries new in the candidate pass (no baseline to regress from); entries
+that disappeared fail (a silently dropped bench is as bad as a slow one —
+this exact-match axis is the gate's always-on value). The
+``sharded_sync`` section is excluded by default: it times an 8-process
+host-device mesh whose wall clock is scheduler-bound (observed 4x+
+run-to-run on a loaded box), not a kernel property.
+
+Usage:
+    python -m benchmarks.check_bench_regression BASELINE CANDIDATE \
+        [--threshold 1.25] [--floor-us 20000] [--exclude sharded_sync]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def iter_entries(node, path=""):
+    """Yield (json_path, value, record) for every numeric ``*_us`` or
+    ``*_speedup`` leaf; ``record`` is the enclosing dict, so a speedup can
+    be weighed by the size of its sibling timings."""
+    if isinstance(node, dict):
+        for key, val in node.items():
+            sub = f"{path}.{key}" if path else key
+            if (isinstance(val, (int, float))
+                    and (key.endswith("_us") or key.endswith("_speedup"))):
+                yield sub, float(val), node
+            else:
+                yield from iter_entries(val, sub)
+    elif isinstance(node, list):
+        for item in node:
+            # Lists of bench records: key rows by their identifying fields
+            # so reordering does not misalign the comparison.
+            if isinstance(item, dict):
+                tag = "/".join(
+                    str(item[k]) for k in ("params", "n_workers", "rounds",
+                                           "fed", "model") if k in item)
+                yield from iter_entries(item, f"{path}[{tag}]")
+            else:
+                yield from iter_entries(item, path)
+
+
+def _record_scale_us(record: dict) -> float:
+    """The slowest timing in a record — how 'big' its measurements are."""
+    vals = [v for k, v in record.items()
+            if k.endswith("_us") and isinstance(v, (int, float))]
+    return max(vals, default=0.0)
+
+
+def compare(baseline: dict, candidate: dict, threshold: float,
+            floor_us: float, exclude: tuple = ()) -> list[str]:
+    def keep(key):
+        return not any(key.startswith(p) for p in exclude)
+    base = {k: (v, rec) for k, v, rec in iter_entries(baseline) if keep(k)}
+    cand = {k: (v, rec) for k, v, rec in iter_entries(candidate) if keep(k)}
+    failures = []
+    for key, (base_v, base_rec) in sorted(base.items()):
+        if key not in cand:
+            failures.append(f"MISSING  {key} (baseline {base_v:.0f})")
+            continue
+        cand_v, cand_rec = cand[key]
+        if key.endswith("_speedup"):
+            # Same-run ratio — machine-independent, but only meaningful
+            # when the record's slow side clears the noise floor in BOTH
+            # runs (sub-floor timings swing 2-4x, so do their ratios).
+            armed = (min(_record_scale_us(base_rec),
+                         _record_scale_us(cand_rec)) >= floor_us)
+            bad = armed and cand_v < base_v / threshold
+            note = "" if armed else " (below noise floor, not gated)"
+            print(f"{'SLOWDOWN' if bad else 'ok':9s}{key}: "
+                  f"{base_v:.2f}x -> {cand_v:.2f}x{note}")
+            if bad:
+                failures.append(
+                    f"SLOWDOWN {key}: {base_v:.2f}x -> {cand_v:.2f}x "
+                    f"(lost >{threshold:.2f}x ground vs same-run "
+                    f"counterpart)")
+        else:
+            ratio = max(cand_v, floor_us) / max(base_v, floor_us)
+            bad = ratio > threshold
+            print(f"{'SLOWDOWN' if bad else 'ok':9s}{key}: "
+                  f"{base_v:.0f}us -> {cand_v:.0f}us ({ratio:.2f}x)")
+            if bad:
+                failures.append(f"SLOWDOWN {key}: {base_v:.0f}us -> "
+                                f"{cand_v:.0f}us ({ratio:.2f}x)")
+    for key in sorted(set(cand) - set(base)):
+        print(f"new      {key}: {cand[key][0]:.2f} (no baseline)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_kernels_smoke.json")
+    ap.add_argument("candidate", help="freshly produced smoke JSON")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="max allowed candidate/baseline ratio (1.25 = "
+                         "fail on >25%% slowdown)")
+    ap.add_argument("--floor-us", type=float, default=20000.0,
+                    help="noise floor: absolute entries are clamped up to "
+                         "this before the ratio, and speedups only gate "
+                         "when their record's slow side clears it — "
+                         "sub-floor timings (and their ratios) never trip "
+                         "the gate")
+    ap.add_argument("--exclude", nargs="*", default=["sharded_sync"],
+                    help="JSON-path prefixes to skip (default: the "
+                         "scheduler-bound multi-process sync bench)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+    failures = compare(baseline, candidate, args.threshold, args.floor_us,
+                       tuple(args.exclude))
+    if failures:
+        print(f"\nFAIL: {len(failures)} kernel entr"
+              f"{'y' if len(failures) == 1 else 'ies'} regressed "
+              f">{(args.threshold - 1) * 100:.0f}%:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print(f"\nOK: no kernel entry regressed >{(args.threshold - 1) * 100:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

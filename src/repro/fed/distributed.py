@@ -126,6 +126,7 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
                    beta: float = 0.2, alpha1: float = 0.01, *,
                    model_axis: str = "model", shard_wire: bool = True,
                    wire_block_rows: int | None = None,
+                   wire_block_workers: int | None = None,
                    betas=None) -> Callable:
     """Returns sync(params_F, costs, sizes, state, mask=None) ->
     (new_global_params, aux).
@@ -146,6 +147,11 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
     memory and fed-collective payload are ``rows/M``. ``shard_wire=False``
     keeps the replicated wire path (used by the parity tests and meshes
     without a model axis — both paths produce identical global params).
+
+    ``wire_block_rows``/``wire_block_workers`` pin the wire-kernel tiling on
+    each device's slab (master VMEM per tile stays O(block) regardless of
+    F); left as None they resolve through the ``kernels.tune`` table —
+    tiling never changes bits.
     """
     F = mesh.shape[fed_axis]
     M = mesh.shape.get(model_axis, 1) if shard_wire else 1
@@ -181,7 +187,8 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
             # single shard_map over (fed, model) — one fed collective per
             # round, not one per leaf, each moving rows/M per device.
             layout = fl.layout_of(state["params"], shards=M)
-            wire = rd.WirePath(wcfg, block_rows=wire_block_rows)
+            wire = rd.WirePath(wcfg, block_rows=wire_block_rows,
+                               block_workers=wire_block_workers)
             w = wire.weights(p_shares, k_star, t, betas=betas_arr,
                              mask=mask)
             q_flat_F = fl.flatten_stacked(params_F, layout)

@@ -157,10 +157,17 @@ class WirePath:
     Eq. (5) or the Eq. (3) coefficients accepts an optional per-worker
     override (``beta=`` a traced scalar for single-worker slabs, ``betas=``
     a ``(N,)`` vector for stacked/aggregate forms).
+
+    ``block_rows``/``block_workers`` pin the kernel tiling of the batched
+    uplink and the accumulating master; left as None they resolve per
+    (shape, N, backend) through the ``repro.kernels.tune`` table. Tiling
+    never changes results — the master accumulates workers in a fixed
+    sequential order, so every plan is bitwise-identical.
     """
     cfg: WireConfig = WireConfig()
     interpret: bool | None = None
     block_rows: int | None = None
+    block_workers: int | None = None
 
     # -- elementwise protocol math (jnp semantics, traced round index) ------
 
@@ -232,23 +239,25 @@ class WirePath:
     def uplink_stacked(self, bufs_q: jax.Array, buf_p1: jax.Array,
                        buf_p2: jax.Array, *, t, betas=None) -> jax.Array:
         """All N workers' wire buffers in ONE launch: (N, rows, 128) →
-        (N, rows//4, 128) uint8 — the batched uplink. ``betas`` is an
-        optional (N,) per-worker beta_k vector."""
+        (N, rows//4, 128) uint8 — the batched uplink (rows-major grid, the
+        shared history block is fetched once per row block, not once per
+        worker). ``betas`` is an optional (N,) per-worker beta_k vector."""
         beta = self.cfg.beta if betas is None else betas
         return ops.flat_ternary_pack_stacked(
             bufs_q, buf_p1, buf_p2, t=t, beta=beta,
             alpha1=self.cfg.alpha1, interpret=self.interpret,
-            block_rows=self.block_rows)
+            block_rows=self.block_rows, block_workers=self.block_workers)
 
     def master(self, buf_pilot: jax.Array, packed: jax.Array, w: jax.Array,
                buf_p1: jax.Array, buf_p2: jax.Array, *, t) -> jax.Array:
-        """Fused Eq. (3) over packed wire codes: in-register 2-bit decode +
-        masked weighted reduce + history step, one launch. ``t`` may be
-        traced."""
+        """Fused Eq. (3) over packed wire codes: register-only 2-bit decode
+        (w folded into the de-bias) grid-accumulated over the worker axis
+        into the resident output block — one launch, VMEM independent of N.
+        ``t`` may be traced."""
         return ops.flat_master_update(
             buf_pilot, packed, w, buf_p1, buf_p2, t=t,
             alpha0=self.cfg.alpha0, interpret=self.interpret,
-            block_rows=self.block_rows)
+            block_rows=self.block_rows, block_workers=self.block_workers)
 
     def round_from_stacked(self, bufs_q: jax.Array, k_star, w: jax.Array,
                            buf_p1: jax.Array, buf_p2: jax.Array, *, t,
@@ -366,10 +375,12 @@ class RoundEngine:
 
     def __init__(self, init_params: PyTree, cfg: WireConfig | None = None,
                  *, shards: int = 1, interpret: bool | None = None,
-                 block_rows: int | None = None):
+                 block_rows: int | None = None,
+                 block_workers: int | None = None):
         self.layout = fl.layout_of(init_params, shards=shards)
-        self.wire = WirePath(cfg or WireConfig(),
-                             interpret=interpret, block_rows=block_rows)
+        self.wire = WirePath(cfg or WireConfig(), interpret=interpret,
+                             block_rows=block_rows,
+                             block_workers=block_workers)
         self.buf_p1 = fl.flatten_tree(init_params, self.layout)   # P^{t-1}
         self.buf_p2 = jnp.zeros_like(self.buf_p1)                 # P^{t-2}
 

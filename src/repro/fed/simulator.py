@@ -172,16 +172,22 @@ class FedSimulator:
     def run_fedpc(self, rounds: int, eval_every: int = 0, *,
                   participation: Optional[float] = None,
                   betas=None, participation_seed: int = 0,
-                  state: Optional[rd.RoundState] = None) -> SimResult:
+                  state: Optional[rd.RoundState] = None,
+                  wire_block_rows: Optional[int] = None,
+                  wire_block_workers: Optional[int] = None) -> SimResult:
         """Run ``rounds`` rounds (resuming from ``state`` if given).
 
         Per round: workers train locally (device costs), one traced
         ``round_step`` does pilot selection + batched uplink + fused master
         update (two kernel launches). Pilot history and costs stay on
-        device until the end of the run.
+        device until the end of the run. ``wire_block_rows`` /
+        ``wire_block_workers`` pin the wire-kernel tiling (default: the
+        ``kernels.tune`` plan for this shape — tiling never changes bits).
         """
         cfg = self.fed_cfg
-        wire = rd.WirePath(rd.WireConfig.from_fedpc(cfg))
+        wire = rd.WirePath(rd.WireConfig.from_fedpc(cfg),
+                           block_rows=wire_block_rows,
+                           block_workers=wire_block_workers)
         layout = fl.layout_of(self.init_params)
         resumed = state is not None
         if state is None:
@@ -261,7 +267,9 @@ class FedSimulator:
     def run_fedpc_scan(self, rounds: int, *,
                        participation: Optional[float] = None,
                        betas=None, participation_seed: int = 0,
-                       state: Optional[rd.RoundState] = None) -> SimResult:
+                       state: Optional[rd.RoundState] = None,
+                       wire_block_rows: Optional[int] = None,
+                       wire_block_workers: Optional[int] = None) -> SimResult:
         """The device-resident multi-round driver.
 
         Every worker's batch schedule for all ``rounds`` is pre-drawn on the
@@ -281,7 +289,9 @@ class FedSimulator:
             raise ValueError("evade_streak requires the Python-loop driver "
                              "(per-round host behaviour)")
         cfg = self.fed_cfg
-        wire = rd.WirePath(rd.WireConfig.from_fedpc(cfg))
+        wire = rd.WirePath(rd.WireConfig.from_fedpc(cfg),
+                           block_rows=wire_block_rows,
+                           block_workers=wire_block_workers)
         layout = fl.layout_of(self.init_params)
         resumed = state is not None
         if state is None:

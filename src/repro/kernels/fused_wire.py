@@ -1,7 +1,7 @@
 """Fused Pallas TPU kernels for the FedPC flat wire path.
 
-Two kernels cover the whole per-round wire cost over the ``FlatParams``
-buffer (``repro.core.flat``):
+Two kernel families cover the whole per-round wire cost over the
+``FlatParams`` buffer (``repro.core.flat``):
 
 ``ternary_pack_2d`` / ``ternary_pack_round1_2d`` — worker uplink. Fuses
 Eq. (5) (resp. Eq. (4)) ternarization *directly* into the §3.3 2-bit packed
@@ -11,24 +11,49 @@ out. The separate int8 code tensor of the two-kernel composition
 re-read from HBM — never exists: codes live only in VMEM registers.
 ``ternary_pack_any_2d`` carries the round index as a scalar operand so a
 traced ``t`` selects the Eq. (4)/(5) branch in-register (for jit'd round
-loops); ``ternary_pack_stacked_2d`` batches all N workers' uplinks into ONE
-launch over a (N, R, 512) stack sharing the public history blocks. The
-stacked kernel's Eq. (5) threshold may be a per-worker ``(N,)`` beta vector
-(heterogeneous beta_k): it rides as a (N, 1) operand blocked over the
-worker grid axis, so each worker's block reads its own scalar — no dynamic
+loops).
+
+``ternary_pack_stacked_2d`` batches all N workers' uplinks into ONE launch
+over a (N, R, 512) stack. The grid is **rows-major with the worker axis
+minor**: for one row block the kernel steps through consecutive worker
+blocks, so the shared ``p1``/``p2`` history blocks keep the same block index
+across those steps and are fetched once per row block instead of once per
+(worker, row) step — N× less history traffic than the old worker-major
+order. ``block_workers`` workers ride in each block (vectorized, still
+register-only); when the plan collapses to one step (``block_rows == R`` and
+``block_workers == N`` — the cpu-interpret optimum, where per-step
+machinery dominates) the launch drops the grid entirely. The Eq. (5)
+threshold may be a per-worker ``(N,)`` beta vector (heterogeneous beta_k):
+it rides as a (N, 1) operand blocked over the worker axis — no dynamic
 in-kernel indexing.
 
 ``packed_master_update_2d`` — master downlink side of Eq. (3). Consumes the
-*packed* uint8 codes of all N workers, decodes the 2-bit fields in-register,
-and fuses the masked weighted worker reduction, the history-step multiply
-and the subtraction into one VMEM pass. Both round branches of Eq. (3)
-(t == 1 uses ``alpha0``, t > 1 uses P^{t-1} − P^{t-2}) are computed from
-scalar operands so the round index may be traced.
+*packed* uint8 codes of all N workers on a 2-D ``(rows, workers)`` grid and
+**accumulates** the weighted ternary sum into a revisited output block: the
+output's block index ignores the (minor) worker axis, so it stays resident
+in VMEM while the grid walks the workers, collecting Σ_k w_k T_k in place;
+the final worker step folds in the Eq. (3) combine (q − coeff·mult). VMEM
+per step is O(block) — independent of N — so federations scale past the
+paper's 10 nodes without growing the tile. The 2-bit decode is bit
+arithmetic on the packed byte (broadcast divide by powers of four — no
+``jnp.stack``, no (N, R, 128, 4) intermediate) with the per-worker ``w[k]``
+multiply folded straight into the decoded field. Worker contributions are
+accumulated strictly sequentially (k = 0..N−1), so the result is **bitwise
+invariant across every (block_rows, block_workers) plan** — autotuning can
+never change the math (``kernels.ref.packed_master_accum_ref`` is the
+order-exact oracle). Both round branches of Eq. (3) (t == 1 uses
+``alpha0``, t > 1 uses P^{t-1} − P^{t-2}) are computed from scalar operands
+so the round index may be traced.
 
 Layout: the flat (rows, 128) buffer is viewed as (rows/4, 512) so that the
 four *consecutive* codes forming each wire byte sit in the last axis —
 exactly the §3.3 / ``core.packing.pack2bit`` byte order. Shifts are
-multiplies/divides by powers of two (VPU-safe, exact for 2-bit fields).
+multiplies/divides by powers of two (VPU-safe, exact for 2-bit fields);
+the pack runs in float (exact for the 0..170 byte range), one cast out.
+
+Block sizes: callers normally leave ``block_rows``/``block_workers`` to the
+``repro.kernels.tune`` autotuner (via the ``ops`` wrappers); the module
+defaults here are the TPU-shaped fallbacks.
 """
 from __future__ import annotations
 
@@ -41,6 +66,7 @@ from jax.experimental import pallas as pl
 LANES = 128
 PACK = 4
 BLOCK_ROWS = 64            # (64, 512) fp32 tile = 128 KiB per input
+BLOCK_WORKERS = 1          # one worker per step → master VMEM is O(block)
 
 
 def _codes_eq5(q, p1, p2, beta):
@@ -50,34 +76,53 @@ def _codes_eq5(q, p1, p2, beta):
     significant = jnp.abs(delta) >= beta * jnp.abs(step)
     return jnp.where(significant, jnp.sign(delta * step), 0.0)
 
-
 def _codes_eq4(q, p0, alpha):
     """Eq. (4) round-1 codes in-register vs the public init P^0."""
     d = q - p0
     return (d > alpha).astype(jnp.float32) - (d < -alpha).astype(jnp.float32)
 
 
+def _codes_any(q, p1, p2, t, beta, alpha1):
+    """Round-branch select on a (possibly traced) round index: Eq. (4) at
+    t <= 1 (p1 slot holds P^0), Eq. (5) after. Both branches share the
+    ``q - p1`` evolution and are in-register VPU ops, so evaluating both
+    costs no HBM traffic."""
+    delta = q - p1
+    step = p1 - p2
+    c5 = jnp.where(jnp.abs(delta) >= beta * jnp.abs(step),
+                   jnp.sign(delta * step), 0.0)
+    c4 = ((delta > alpha1).astype(jnp.float32)
+          - (delta < -alpha1).astype(jnp.float32))
+    return jnp.where(t <= 1.0, c4, c5)
+
+
 def _pack_tile(codes):
-    """(R, 512) float codes → (R, 128) uint8, 4 consecutive codes per byte."""
-    r = codes.shape[0]
-    biased = (codes.astype(jnp.int32) + 1).reshape(r, LANES, PACK)
-    byte = (biased[..., 0]
-            + biased[..., 1] * 4
-            + biased[..., 2] * 16
-            + biased[..., 3] * 64)
+    """(..., 512) float codes → (..., 128) uint8, 4 consecutive codes/byte.
+
+    Packed in float (biased fields 0..2, byte value ≤ 170 — exact in fp32)
+    with a single cast out: one dtype conversion instead of the int32
+    round-trip, measurably faster on XLA:CPU and identical bits.
+    """
+    lead = codes.shape[:-1]
+    b = (codes + 1.0).reshape(*lead, LANES, PACK)
+    byte = b[..., 0] + b[..., 1] * 4.0 + b[..., 2] * 16.0 + b[..., 3] * 64.0
     return byte.astype(jnp.uint8)
 
 
-def _unpack_tile(b):
-    """(N, R, 128) uint8 → (N, R, 512) float codes in {-1, 0, +1}."""
-    bi = b.astype(jnp.int32)
-    f0 = bi % 4
-    f1 = (bi // 4) % 4
-    f2 = (bi // 16) % 4
-    f3 = (bi // 64) % 4
-    fields = jnp.stack([f0, f1, f2, f3], axis=-1)      # (N, R, 128, 4)
-    n, r = b.shape[0], b.shape[1]
-    return (fields - 1).astype(jnp.float32).reshape(n, r, LANES * PACK)
+def _weighted_decode(b, w):
+    """(R, 128) packed byte + scalar w → (R, 512) float32 ``w · code``.
+
+    Pure bit arithmetic on the byte: a broadcast divide by [1, 4, 16, 64]
+    (powers of four built from a shifted iota — VPU-safe, no closed-over
+    array constant) isolates the four 2-bit fields, and the ``w`` multiply
+    is folded into the de-bias (``w·field − w`` = ``w·(field − 1)``) so the
+    bare {-1, 0, 1} code tensor never materializes.
+    """
+    bi = b.astype(jnp.int32)[:, :, None]                   # (R, 128, 1)
+    e = jax.lax.broadcasted_iota(jnp.int32, (1, 1, PACK), 2)
+    fields = (bi // jax.lax.shift_left(jnp.int32(1), 2 * e)) % 4
+    wf = fields.astype(jnp.float32) * w - w                # w · (field − 1)
+    return wf.reshape(b.shape[0], LANES * PACK)
 
 
 def _ternary_pack_kernel(q_ref, p1_ref, p2_ref, beta_ref, out_ref):
@@ -93,14 +138,6 @@ def _ternary_pack_round1_kernel(q_ref, p0_ref, alpha_ref, out_ref):
     out_ref[...] = _pack_tile(_codes_eq4(q, p0, alpha_ref[0]))
 
 
-def _codes_any(q, p1, p2, t, beta, alpha1):
-    """Round-branch select on a (possibly traced) round index: Eq. (4) at
-    t <= 1 (p1 slot holds P^0), Eq. (5) after. Both branches are in-register
-    VPU ops, so evaluating both costs no HBM traffic."""
-    return jnp.where(t <= 1.0, _codes_eq4(q, p1, alpha1),
-                     _codes_eq5(q, p1, p2, beta))
-
-
 def _ternary_pack_any_kernel(q_ref, p1_ref, p2_ref, scal_ref, out_ref):
     q = q_ref[...].astype(jnp.float32)
     p1 = p1_ref[...].astype(jnp.float32)
@@ -109,26 +146,59 @@ def _ternary_pack_any_kernel(q_ref, p1_ref, p2_ref, scal_ref, out_ref):
     out_ref[...] = _pack_tile(_codes_any(q, p1, p2, t, beta, alpha1))
 
 
-def _ternary_pack_stacked_kernel(q_ref, p1_ref, p2_ref, beta_ref, scal_ref,
-                                 out_ref):
-    q = q_ref[0].astype(jnp.float32)                   # block (1, R, 512)
-    p1 = p1_ref[...].astype(jnp.float32)               # shared history block
-    p2 = p2_ref[...].astype(jnp.float32)
-    beta = beta_ref[0, 0]                              # this worker's beta_k
+def _stacked_kernel(q_ref, p1_ref, p2_ref, beta_ref, scal_ref, out_ref):
+    """One (block_workers, block_rows) step of the stacked uplink —
+    vectorized over the worker-block axis, shared history broadcast."""
     t, alpha1 = scal_ref[0], scal_ref[1]
-    out_ref[0] = _pack_tile(_codes_any(q, p1, p2, t, beta, alpha1))
+    q = q_ref[...].astype(jnp.float32)                 # (bw, br, 512)
+    p1 = p1_ref[...].astype(jnp.float32)[None]         # shared history block
+    p2 = p2_ref[...].astype(jnp.float32)[None]
+    beta = beta_ref[...].astype(jnp.float32)[:, :, None]   # (bw, 1, 1)
+    out_ref[...] = _pack_tile(_codes_any(q, p1, p2, t, beta, alpha1))
 
 
-def _master_kernel(q_ref, pk_ref, w_ref, p1_ref, p2_ref, scal_ref, out_ref):
-    q = q_ref[...].astype(jnp.float32)                 # (R, 512)
-    tern = _unpack_tile(pk_ref[...])                   # (N, R, 512)
-    w = w_ref[...].astype(jnp.float32)                 # (N,) masked p_k*beta_k
-    coeff = jnp.tensordot(w, tern, axes=1)             # (R, 512)
-    step = p1_ref[...].astype(jnp.float32) - p2_ref[...].astype(jnp.float32)
+def _master_accum_kernel(q_ref, pk_ref, w_ref, p1_ref, p2_ref, scal_ref,
+                         out_ref, *, block_workers: int, last_k: int):
+    """One (row block, worker block) step of the accumulating master.
+
+    The output block is revisited across the (minor) worker axis: step
+    k == 0 zeroes it, every step folds its workers' weighted codes in
+    strictly ascending order, and the last worker step applies Eq. (3).
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    acc = out_ref[...].astype(jnp.float32)
+    for j in range(block_workers):                     # sequential: bitwise
+        acc = acc + _weighted_decode(pk_ref[j], w_ref[j, 0])
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+    @pl.when(k == last_k)
+    def _combine():
+        t, alpha0 = scal_ref[0], scal_ref[1]
+        step = (p1_ref[...].astype(jnp.float32)
+                - p2_ref[...].astype(jnp.float32))
+        mult = jnp.where(t <= 1.0, alpha0, step)       # Eq. (3) branches
+        coeff = out_ref[...].astype(jnp.float32)
+        q = q_ref[...].astype(jnp.float32)
+        out_ref[...] = (q - coeff * mult).astype(out_ref.dtype)
+
+
+def _master_oneshot_kernel(q_ref, pk_ref, w_ref, p1_ref, p2_ref, scal_ref,
+                           out_ref, *, n_workers: int):
+    """Single-step master (cpu-interpret plan): same strictly-sequential
+    worker accumulation as the grid kernel — bitwise identical output."""
+    acc = jnp.zeros((q_ref.shape[0], LANES * PACK), jnp.float32)
+    for j in range(n_workers):
+        acc = acc + _weighted_decode(pk_ref[j], w_ref[j, 0])
     t, alpha0 = scal_ref[0], scal_ref[1]
-    # Eq. (3): t == 1 scales by alpha0, t > 1 by the history step.
+    step = p1_ref[...].astype(jnp.float32) - p2_ref[...].astype(jnp.float32)
     mult = jnp.where(t <= 1.0, alpha0, step)
-    out_ref[...] = (q - coeff * mult).astype(out_ref.dtype)
+    q = q_ref[...].astype(jnp.float32)
+    out_ref[...] = (q - acc * mult).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
@@ -200,34 +270,57 @@ def ternary_pack_any_2d(q, p1, p2, t, beta, alpha1, *, interpret: bool = True,
     )(q, p1, p2, scal)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows",
+                                             "block_workers"))
 def ternary_pack_stacked_2d(q, p1, p2, t, beta, alpha1, *,
                             interpret: bool = True,
-                            block_rows: int = BLOCK_ROWS):
+                            block_rows: int = BLOCK_ROWS,
+                            block_workers: int = BLOCK_WORKERS):
     """Batched uplink: all N workers' wire buffers from ONE launch.
 
     q (N, R, 512) — every worker's history view; p1/p2 (R, 512) — the shared
-    public history, re-read per worker block (it is the same HBM buffer, not
-    N copies). Grid is (N, R/block): worker-major, so the §3.3 byte order of
-    each worker's buffer matches :func:`ternary_pack_2d` exactly.
+    public history passed once, not stacked N times. Grid is
+    (R/block_rows, N/block_workers) — **rows-major, worker minor**, so the
+    history blocks keep their block index across the consecutive worker
+    steps of one row block and are re-fetched per *row block*, not per
+    (worker, row) step. Blocks are vectorized over ``block_workers``
+    workers; ``block_rows == R`` with ``block_workers == N`` collapses to a
+    grid-less single-step launch (the cpu-interpret optimum — see
+    ``repro.kernels.tune``). Every plan packs bitwise-identically (the math
+    is elementwise).
 
     ``beta`` is either one scalar (shared threshold) or a ``(N,)`` vector of
     per-worker beta_k — worker k's blocks read ``beta[k]`` via the blocked
-    (1, 1) operand. Returns (N, R, 128) uint8.
+    (block_workers, 1) operand. Returns (N, R, 128) uint8.
     """
     n, rows, _ = q.shape
-    grid = (n, rows // block_rows)
-    q_spec = pl.BlockSpec((1, block_rows, LANES * PACK),
-                          lambda k, i: (k, i, 0))
-    h_spec = pl.BlockSpec((block_rows, LANES * PACK), lambda k, i: (i, 0))
-    out_spec = pl.BlockSpec((1, block_rows, LANES), lambda k, i: (k, i, 0))
     betas = jnp.broadcast_to(
         jnp.asarray(beta, jnp.float32).reshape(-1, 1), (n, 1))
-    beta_spec = pl.BlockSpec((1, 1), lambda k, i: (k, 0))
     scal = jnp.stack([jnp.asarray(t, jnp.float32),
                       jnp.asarray(alpha1, jnp.float32)])
+    if block_rows >= rows and block_workers >= n:
+        # One step: whole-operand blocks, no grid — skips the per-step
+        # block machinery entirely (interpret mode pays it per step).
+        return pl.pallas_call(
+            _stacked_kernel,
+            in_specs=[pl.BlockSpec(q.shape, None),
+                      pl.BlockSpec(p1.shape, None),
+                      pl.BlockSpec(p2.shape, None),
+                      pl.BlockSpec(betas.shape, None),
+                      pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec((n, rows, LANES), None),
+            out_shape=jax.ShapeDtypeStruct((n, rows, LANES), jnp.uint8),
+            interpret=interpret,
+        )(q, p1, p2, betas, scal)
+    grid = (rows // block_rows, n // block_workers)
+    q_spec = pl.BlockSpec((block_workers, block_rows, LANES * PACK),
+                          lambda i, k: (k, i, 0))
+    h_spec = pl.BlockSpec((block_rows, LANES * PACK), lambda i, k: (i, 0))
+    beta_spec = pl.BlockSpec((block_workers, 1), lambda i, k: (k, 0))
+    out_spec = pl.BlockSpec((block_workers, block_rows, LANES),
+                            lambda i, k: (k, i, 0))
     return pl.pallas_call(
-        _ternary_pack_stacked_kernel,
+        _stacked_kernel,
         grid=grid,
         in_specs=[q_spec, h_spec, h_spec, beta_spec,
                   pl.BlockSpec(memory_space=pl.ANY)],
@@ -237,32 +330,60 @@ def ternary_pack_stacked_2d(q, p1, p2, t, beta, alpha1, *,
     )(q, p1, p2, betas, scal)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows",
+                                             "block_workers"))
 def packed_master_update_2d(q_pilot, packed, w, p1, p2, t, alpha0, *,
                             interpret: bool = True,
-                            block_rows: int = BLOCK_ROWS):
-    """Fused Eq. (3) over packed wire codes.
+                            block_rows: int = BLOCK_ROWS,
+                            block_workers: int = BLOCK_WORKERS):
+    """Fused Eq. (3) over packed wire codes, grid-accumulated over workers.
 
     q_pilot/p1/p2 (R, 512) float; packed (N, R, 128) uint8 — every worker's
     §3.3 wire buffer, pilot row masked by ``w``; w (N,) masked p_k·beta_k at
     t > 1 / p_k at t == 1; ``t`` may be traced. Returns (R, 512) in
     q_pilot.dtype.
 
-    VMEM per tile at N=16, R=64: 3 × 128 KiB float inputs + 128 KiB packed —
-    decoded codes exist only in registers.
+    The 2-D (rows, workers) grid iterates workers minor and the output
+    block's index ignores the worker axis, so the Σ_k w_k T_k accumulator
+    *is* the resident output block: VMEM per step is
+    ``(3 float + 1 out) · block_rows·512·4B + block_workers·block_rows·128B``
+    — independent of N at the default ``block_workers = 1``, which is what
+    lets N = 64+ federations run without growing the tile (the old kernel
+    held all N packed blocks at once). Workers accumulate strictly
+    sequentially regardless of the (block_rows, block_workers) plan, so
+    every plan is bitwise-identical to
+    ``kernels.ref.packed_master_accum_ref``.
     """
     n, rows, _ = packed.shape
-    grid = (rows // block_rows,)
-    spec_f = pl.BlockSpec((block_rows, LANES * PACK), lambda i: (i, 0))
-    spec_pk = pl.BlockSpec((n, block_rows, LANES), lambda i: (0, i, 0))
+    w2 = w.astype(jnp.float32).reshape(n, 1)
     scal = jnp.stack([jnp.asarray(t, jnp.float32),
                       jnp.asarray(alpha0, jnp.float32)])
+    if block_rows >= rows and block_workers >= n:
+        return pl.pallas_call(
+            functools.partial(_master_oneshot_kernel, n_workers=n),
+            in_specs=[pl.BlockSpec(q_pilot.shape, None),
+                      pl.BlockSpec(packed.shape, None),
+                      pl.BlockSpec(w2.shape, None),
+                      pl.BlockSpec(p1.shape, None),
+                      pl.BlockSpec(p2.shape, None),
+                      pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec(q_pilot.shape, None),
+            out_shape=jax.ShapeDtypeStruct(q_pilot.shape, q_pilot.dtype),
+            interpret=interpret,
+        )(q_pilot, packed, w2, p1, p2, scal)
+    grid = (rows // block_rows, n // block_workers)
+    spec_f = pl.BlockSpec((block_rows, LANES * PACK), lambda i, k: (i, 0))
+    spec_pk = pl.BlockSpec((block_workers, block_rows, LANES),
+                           lambda i, k: (k, i, 0))
+    spec_w = pl.BlockSpec((block_workers, 1), lambda i, k: (k, 0))
+    out_spec = pl.BlockSpec((block_rows, LANES * PACK), lambda i, k: (i, 0))
     return pl.pallas_call(
-        _master_kernel,
+        functools.partial(_master_accum_kernel, block_workers=block_workers,
+                          last_k=n // block_workers - 1),
         grid=grid,
-        in_specs=[spec_f, spec_pk, pl.BlockSpec(memory_space=pl.ANY),
-                  spec_f, spec_f, pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=spec_f,
+        in_specs=[spec_f, spec_pk, spec_w, spec_f, spec_f,
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct(q_pilot.shape, q_pilot.dtype),
         interpret=interpret,
-    )(q_pilot, packed, w.astype(jnp.float32), p1, p2, scal)
+    )(q_pilot, packed, w2, p1, p2, scal)

@@ -1,13 +1,13 @@
 """Public jit'd wrappers over the Pallas kernels.
 
 Handles: flat (or pytree) → padded (rows, 128) layout, interpret-mode
-selection (Python execution on CPU, compiled on TPU), and un-padding.
+selection (Python execution on CPU, compiled on TPU), block-plan selection
+(callers that leave ``block_rows``/``block_workers`` unset get the
+``repro.kernels.tune`` plan for their shape and backend), and un-padding.
 These are drop-in replacements for the core/* reference functions and are
 what the distributed sync uses when ``use_kernels=True``.
 """
 from __future__ import annotations
-
-import math
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +16,7 @@ from repro.kernels import fused_wire as fw
 from repro.kernels import pack2bit as pk
 from repro.kernels import master_update as mu
 from repro.kernels import ternary_encode as te
+from repro.kernels import tune
 from repro.utils import round_up
 
 LANES = 128
@@ -36,22 +37,21 @@ def _to_2d(x: jax.Array, row_multiple: int, lane_multiple: int = LANES):
     return flat.reshape(rows, per_row), n
 
 
-def _block_rows_for(rows: int, want: int) -> int:
-    """Largest multiple of gcd(rows, want) that divides ``rows`` and is
-    ≤ ``want``.
+# Canonical gcd-snapping lives in tune (one implementation; its docstring
+# carries the alignment argument).
+_block_rows_for = tune.fit_block_rows
 
-    The gcd floors the probe (≤ want/g steps vs the old unit-step scan) and
-    — since padded rows and ``want`` are both multiples of 8 — guarantees
-    the result stays 8-sublane aligned, which the old probe did not (e.g.
-    rows=8400, want=64 → 48 here vs the unaligned 60 before).
-    """
-    if rows <= want:
-        return rows
-    g = math.gcd(rows, want)
-    b = (want // g) * g
-    while rows % b:
-        b -= g
-    return b
+
+def _stacked_plan(kind: str, rows: int, n: int, block_rows: int | None,
+                  block_workers: int | None, interpret: bool) -> tuple[int,
+                                                                       int]:
+    """Resolve a worker-batched kernel's (block_rows, block_workers): any
+    axis the caller left as None comes from the tuner table / heuristic;
+    explicit requests are snapped to legal tilings (divisors)."""
+    tuned_br, tuned_bw = tune.lookup(kind, rows, n, interpret=interpret)
+    br = _block_rows_for(rows, block_rows or tuned_br)
+    bw = tune.fit_block_workers(n, block_workers or tuned_bw)
+    return br, bw
 
 
 def ternary_encode(q, p1, p2, beta: float, interpret: bool | None = None):
@@ -105,7 +105,9 @@ def ternary_pack(q, p1, p2, beta: float, interpret: bool | None = None):
     q2, n = _to_2d(q, 8, LANES * fw.PACK)
     p12, _ = _to_2d(p1, 8, LANES * fw.PACK)
     p22, _ = _to_2d(p2, 8, LANES * fw.PACK)
-    br = _block_rows_for(q2.shape[0], fw.BLOCK_ROWS)
+    br = _block_rows_for(
+        q2.shape[0], tune.lookup("uplink", q2.shape[0],
+                                 interpret=interpret)[0])
     out = fw.ternary_pack_2d(q2, p12, p22, beta, interpret=interpret,
                              block_rows=br)
     n_bytes = -(-n // fw.PACK)
@@ -117,7 +119,9 @@ def ternary_pack_round1(q, p0, alpha: float, interpret: bool | None = None):
     interpret = _default_interpret() if interpret is None else interpret
     q2, n = _to_2d(q, 8, LANES * fw.PACK)
     p02, _ = _to_2d(p0, 8, LANES * fw.PACK)
-    br = _block_rows_for(q2.shape[0], fw.BLOCK_ROWS)
+    br = _block_rows_for(
+        q2.shape[0], tune.lookup("uplink", q2.shape[0],
+                                 interpret=interpret)[0])
     out = fw.ternary_pack_round1_2d(q2, p02, alpha, interpret=interpret,
                                     block_rows=br)
     n_bytes = -(-n // fw.PACK)
@@ -137,7 +141,8 @@ def flat_ternary_pack(buf_q, buf_p1, buf_p2, *, t: int, beta: float,
     rows = buf_q.shape[0]
     r4 = rows // fw.PACK
     q4 = buf_q.reshape(r4, LANES * fw.PACK)
-    br = _block_rows_for(r4, block_rows or fw.BLOCK_ROWS)
+    br = _block_rows_for(
+        r4, block_rows or tune.lookup("uplink", r4, interpret=interpret)[0])
     if t <= 1:
         return fw.ternary_pack_round1_2d(
             q4, buf_p1.reshape(r4, LANES * fw.PACK), alpha1,
@@ -163,7 +168,8 @@ def flat_ternary_pack_traced(buf_q, buf_p1, buf_p2, *, t, beta,
     rows = buf_q.shape[0]
     r4 = rows // fw.PACK
     wide = LANES * fw.PACK
-    br = _block_rows_for(r4, block_rows or fw.BLOCK_ROWS)
+    br = _block_rows_for(
+        r4, block_rows or tune.lookup("uplink", r4, interpret=interpret)[0])
     return fw.ternary_pack_any_2d(
         buf_q.reshape(r4, wide), buf_p1.reshape(r4, wide),
         buf_p2.reshape(r4, wide), t, beta, alpha1,
@@ -172,44 +178,59 @@ def flat_ternary_pack_traced(buf_q, buf_p1, buf_p2, *, t, beta,
 
 def flat_ternary_pack_stacked(bufs_q, buf_p1, buf_p2, *, t, beta,
                               alpha1: float, interpret: bool | None = None,
-                              block_rows: int | None = None):
+                              block_rows: int | None = None,
+                              block_workers: int | None = None):
     """Batched uplink: (N, rows, 128) worker buffers → (N, rows//4, 128)
     packed wire buffers in ONE kernel launch.
 
     The shared public history ``buf_p1``/``buf_p2`` is passed once, not
-    stacked N times. ``t`` may be traced (scalar-operand branch select);
-    ``beta`` is a shared scalar or a per-worker ``(N,)`` vector of beta_k.
+    stacked N times; the rows-major grid re-reads it once per row block,
+    not once per worker. ``t`` may be traced (scalar-operand branch
+    select); ``beta`` is a shared scalar or a per-worker ``(N,)`` vector of
+    beta_k. ``block_rows``/``block_workers`` default to the tuned plan for
+    (rows, N, backend) — see ``repro.kernels.tune``.
     """
     interpret = _default_interpret() if interpret is None else interpret
     n, rows, _ = bufs_q.shape
     r4 = rows // fw.PACK
     wide = LANES * fw.PACK
-    br = _block_rows_for(r4, block_rows or fw.BLOCK_ROWS)
+    br, bw = _stacked_plan("uplink_stacked", r4, n, block_rows,
+                           block_workers, interpret)
     return fw.ternary_pack_stacked_2d(
         bufs_q.reshape(n, r4, wide), buf_p1.reshape(r4, wide),
         buf_p2.reshape(r4, wide), t, beta, alpha1,
-        interpret=interpret, block_rows=br)
+        interpret=interpret, block_rows=br, block_workers=bw)
 
 
 def flat_master_update(buf_q_pilot, packed_stacked, w, buf_p1, buf_p2, *,
                        t, alpha0: float, interpret: bool | None = None,
-                       block_rows: int | None = None):
+                       block_rows: int | None = None,
+                       block_workers: int | None = None):
     """Fused Eq. (3) over the packed wire buffers of all N workers.
 
     buf_* (rows, 128) float; packed_stacked (N, rows//4, 128) uint8; w (N,)
     masked per-worker coefficients (pilot zeroed). ``t`` may be traced.
     Returns the new global buffer, (rows, 128) in buf_q_pilot.dtype.
+
+    The kernel walks a (rows, workers) grid accumulating into the resident
+    output block, so its VMEM is O(block) — independent of N — and the
+    result is bitwise-identical under every (block_rows, block_workers)
+    plan (strictly sequential worker accumulation; the oracle is
+    ``ref.packed_master_accum_ref``). Block sizes default to the tuned
+    plan for (rows, N, backend).
     """
     interpret = _default_interpret() if interpret is None else interpret
     rows = buf_q_pilot.shape[0]
+    n = packed_stacked.shape[0]
     r4 = rows // fw.PACK
     wide = LANES * fw.PACK
-    br = _block_rows_for(r4, block_rows or fw.BLOCK_ROWS)
+    br, bw = _stacked_plan("master", r4, n, block_rows, block_workers,
+                           interpret)
     out = fw.packed_master_update_2d(
         buf_q_pilot.reshape(r4, wide), packed_stacked,
         w.astype(jnp.float32), buf_p1.reshape(r4, wide),
         buf_p2.reshape(r4, wide), t, alpha0,
-        interpret=interpret, block_rows=br)
+        interpret=interpret, block_rows=br, block_workers=bw)
     return out.reshape(rows, LANES)
 
 
@@ -225,8 +246,11 @@ def master_update(q_pilot, tern_stacked, w, p1, p2,
     p12, _ = _to_2d(p1, 8)
     p22, _ = _to_2d(p2, 8)
     rows = q2.shape[0]
-    t2 = jnp.stack([_to_2d(tern_stacked[k], 8)[0]
-                    for k in range(n_workers)])
+    # Pad/reshape all N workers in ONE traced op (the worker axis rides
+    # along), not a Python loop of N per-worker _to_2d + stack.
+    flat = tern_stacked.reshape(n_workers, -1)
+    t2 = jnp.pad(flat, ((0, 0), (0, rows * LANES - flat.shape[1]))
+                 ).reshape(n_workers, rows, LANES)
     br = _block_rows_for(rows, mu.BLOCK_ROWS)
     out = mu.master_update_2d(q2, t2, w.astype(jnp.float32), p12, p22,
                               interpret=interpret, block_rows=br)

@@ -67,6 +67,33 @@ def packed_master_update_ref(q_pilot: jax.Array, packed: jax.Array,
     return (q_pilot.astype(jnp.float32) - coeff * mult).astype(q_pilot.dtype)
 
 
+def packed_master_accum_ref(q_pilot: jax.Array, packed: jax.Array,
+                            w: jax.Array, p1: jax.Array, p2: jax.Array,
+                            t, alpha0: float) -> jax.Array:
+    """Order-exact Eq. (3) oracle over packed codes.
+
+    Accumulates worker contributions strictly sequentially (k = 0..N−1,
+    each folded as ``w_k·field − w_k``) — the exact floating-point order of
+    the grid-accumulated ``packed_master_update_2d`` kernel under EVERY
+    (block_rows, block_workers) plan, so parity tests against this are
+    bitwise, not allclose. Compare against the **jitted** oracle: the
+    kernel always runs under jit, where XLA:CPU contracts mul+sub chains
+    into FMAs that op-by-op eager execution does not (ulp-level drift
+    between eager and jit of this very function). Semantically identical to
+    :func:`packed_master_update_ref` (which reduces with einsum and is the
+    allclose oracle).
+    """
+    coeff = jnp.zeros(packed.shape[1:-1] + (packed.shape[-1] * 4,),
+                      jnp.float32)
+    for k in range(packed.shape[0]):
+        wk = w[k].astype(jnp.float32)
+        fields = unpack2bit_ref(packed[k]).astype(jnp.float32) + 1.0
+        coeff = coeff + (fields * wk - wk)
+    step = (p1 - p2).astype(jnp.float32)
+    mult = jnp.where(jnp.asarray(t, jnp.float32) <= 1.0, alpha0, step)
+    return (q_pilot.astype(jnp.float32) - coeff * mult).astype(q_pilot.dtype)
+
+
 def master_update_ref(q_pilot: jax.Array, tern: jax.Array, w: jax.Array,
                       p1: jax.Array, p2: jax.Array) -> jax.Array:
     """Eq. (3) t>1 on flat arrays. tern (N, M) int8, w (N,) already masked

@@ -1,0 +1,268 @@
+"""Block-size autotuner for the wire kernels.
+
+Which (block_rows, block_workers) plan wins is a property of the *backend*,
+not the math: on TPU the grid must tile VMEM (small row blocks, one worker
+per step so the master's memory stays O(block)); under cpu-interpret every
+grid step pays the interpreter's full block machinery, so the fastest plan
+is the one with the fewest steps (whole-operand blocks, no grid). Every
+plan computes bitwise-identical results (the uplink is elementwise; the
+master accumulates workers in a fixed sequential order), so tuning is free
+to pick purely on time.
+
+The table maps ``(kind, rows, n_workers, backend)`` → plan. ``lookup``
+never times anything: it returns the tuned entry if one exists, else the
+backend heuristic — so production paths (the ``ops`` wrappers call
+``lookup`` whenever the caller leaves ``block_rows``/``block_workers`` as
+None) pay a dict probe, nothing more. ``autotune_stacked`` /
+``autotune_master`` run the actual timed sweep and fill the table; the
+kernel benchmark (`benchmarks/kernels_bench.py`) runs them per shape so
+per-size regressions (e.g. the old hand-tuned 16M fused-uplink loss) are
+tuned away instead of patched.
+
+``save_table``/``load_table`` persist the table as JSON; pointing the
+``REPRO_TUNE_TABLE`` environment variable at such a file pre-loads it at
+import (e.g. a table tuned once on real TPU hardware).
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# TPU-shaped fallbacks (mirrors fused_wire; duplicated to avoid an import
+# cycle with the kernels that consult this module through ops).
+BLOCK_ROWS = 64
+BLOCK_WORKERS = 1
+
+KINDS = ("uplink", "uplink_stacked", "master")
+
+# (kind, rows, n_workers, backend) -> {"block_rows": int, "block_workers": int}
+_TABLE: dict[tuple[str, int, int, str], dict] = {}
+
+# Interpret-mode sweeps execute one Python-level step per grid tile; cap the
+# plans a cpu sweep will even try so autotuning stays seconds, not minutes.
+_MAX_SWEEP_STEPS_INTERPRET = 16
+
+
+def backend_tag(interpret: bool | None = None) -> str:
+    """The table's backend key: 'cpu-interpret' for interpret mode (the
+    hermetic-container default), else the real jax backend ('tpu', ...)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return "cpu-interpret" if interpret else jax.default_backend()
+
+
+def fit_block_rows(rows: int, want: int) -> int:
+    """Largest multiple of gcd(rows, want) ≤ ``want`` that divides ``rows``.
+
+    The gcd floors the probe (≤ want/g steps vs a unit-step scan) and —
+    since padded rows and ``want`` are both multiples of 8 — guarantees the
+    result stays 8-sublane aligned (e.g. rows=8400, want=64 → 48, not the
+    unaligned 60 a plain divisor scan would pick). The single
+    implementation behind ``ops._block_rows_for``."""
+    if rows <= want:
+        return rows
+    g = math.gcd(rows, want)
+    b = (want // g) * g
+    while rows % b:
+        b -= g
+    return b
+
+
+def fit_block_workers(n: int, want: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``want`` (worker blocks must tile
+    the worker axis exactly — N=33 with want=8 gives 3, not 8)."""
+    want = max(1, min(n, want))
+    for b in range(want, 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def default_plan(kind: str, rows: int, n_workers: int = 1,
+                 backend: str | None = None) -> dict:
+    """The untimed heuristic: fewest steps on cpu-interpret (per-step
+    machinery dominates), VMEM-sized O(block) tiles elsewhere."""
+    backend = backend or backend_tag()
+    if backend == "cpu-interpret":
+        return {"block_rows": rows, "block_workers": max(1, n_workers)}
+    return {"block_rows": fit_block_rows(rows, BLOCK_ROWS),
+            "block_workers": fit_block_workers(max(1, n_workers),
+                                               BLOCK_WORKERS)}
+
+
+def lookup(kind: str, rows: int, n_workers: int = 1, *,
+           interpret: bool | None = None) -> tuple[int, int]:
+    """(block_rows, block_workers) for a shape — tuned entry or heuristic.
+
+    Never times anything; this is the hot-path call the ``ops`` wrappers
+    make when the caller leaves the block sizes unspecified.
+    """
+    backend = backend_tag(interpret)
+    plan = _TABLE.get((kind, rows, max(1, n_workers), backend))
+    if plan is None:
+        plan = default_plan(kind, rows, n_workers, backend)
+    return plan["block_rows"], plan["block_workers"]
+
+
+def set_plan(kind: str, rows: int, n_workers: int, plan: dict, *,
+             backend: str | None = None) -> None:
+    """Pin a plan (tests / externally-tuned tables)."""
+    _TABLE[(kind, rows, max(1, n_workers), backend or backend_tag())] = dict(plan)
+
+
+def clear_table() -> None:
+    _TABLE.clear()
+
+
+def master_vmem_tile_bytes(block_rows: int, block_workers: int) -> int:
+    """VMEM footprint model of one accumulating-master grid step: the four
+    resident (block_rows, 512) float32 blocks (q, p1, p2, and the
+    output/accumulator) plus the (block_workers, block_rows, 128) packed
+    uint8 sub-block. Independent of N at fixed ``block_workers`` — the
+    property that lets federation size scale without growing the tile
+    (the pre-accumulation kernel held all N packed blocks: N·block_rows·128
+    bytes, linear in N)."""
+    float_block = block_rows * 512 * 4
+    return 4 * float_block + block_workers * block_rows * 128
+
+
+def master_vmem_tile_bytes_preaccum(block_rows: int, n_workers: int) -> int:
+    """Footprint of the OLD (pre-grid-accumulation) master tile, which
+    blocked the full worker axis: scales linearly with N."""
+    float_block = block_rows * 512 * 4
+    return 4 * float_block + n_workers * block_rows * 128
+
+
+def _time_us(fn: Callable, reps: int) -> float:
+    jax.block_until_ready(fn())                       # compile/warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best
+
+
+def _candidate_plans(rows: int, n: int, backend: str) -> list[dict]:
+    """Small, deduplicated sweep: the one-shot plan, whole-row blocks with
+    worker sub-blocks, and VMEM-tile plans."""
+    cands = [
+        {"block_rows": rows, "block_workers": n},            # one step
+        {"block_rows": rows, "block_workers": 1},            # worker grid
+        {"block_rows": fit_block_rows(rows, BLOCK_ROWS),
+         "block_workers": 1},                                # TPU tile
+        {"block_rows": fit_block_rows(rows, 256),
+         "block_workers": fit_block_workers(n, 8)},
+    ]
+    seen, out = set(), []
+    for c in cands:
+        key = (c["block_rows"], c["block_workers"])
+        steps = (rows // c["block_rows"]) * (n // c["block_workers"])
+        if key in seen:
+            continue
+        if (backend == "cpu-interpret"
+                and steps > _MAX_SWEEP_STEPS_INTERPRET):
+            continue                       # interpret: each step is Python
+        seen.add(key)
+        out.append(c)
+    return out
+
+
+def _sweep(kind: str, rows: int, n: int, run_plan: Callable, *,
+           interpret: bool | None, reps: int) -> dict:
+    backend = backend_tag(interpret)
+    timings = []
+    for plan in _candidate_plans(rows, n, backend):
+        us = _time_us(lambda p=plan: run_plan(p), reps)
+        timings.append({**plan, "us": us})
+    best = min(timings, key=lambda r: r["us"])
+    _TABLE[(kind, rows, n, backend)] = {
+        "block_rows": best["block_rows"],
+        "block_workers": best["block_workers"]}
+    return {"kind": kind, "rows": rows, "n_workers": n, "backend": backend,
+            "best": {k: best[k] for k in ("block_rows", "block_workers")},
+            "timings": timings}
+
+
+def autotune_stacked(rows: int, n_workers: int, *,
+                     interpret: bool | None = None, reps: int = 2,
+                     seed: int = 0) -> dict:
+    """Timed sweep of the stacked-uplink plans for (rows, N); stores the
+    winner in the table and returns the full sweep record. ``rows`` is the
+    kernel-view row count (flat rows / 4)."""
+    from repro.kernels import fused_wire as fw
+    itp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    k = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k, (n_workers, rows, fw.LANES * fw.PACK))
+    p1 = jax.random.normal(jax.random.fold_in(k, 1),
+                           (rows, fw.LANES * fw.PACK))
+    p2 = jax.random.normal(jax.random.fold_in(k, 2),
+                           (rows, fw.LANES * fw.PACK))
+
+    def run_plan(plan):
+        return fw.ternary_pack_stacked_2d(
+            q, p1, p2, 3, 0.2, 0.01, interpret=itp,
+            block_rows=plan["block_rows"],
+            block_workers=plan["block_workers"])
+
+    return _sweep("uplink_stacked", rows, n_workers, run_plan,
+                  interpret=itp, reps=reps)
+
+
+def autotune_master(rows: int, n_workers: int, *,
+                    interpret: bool | None = None, reps: int = 2,
+                    seed: int = 0) -> dict:
+    """Timed sweep of the accumulating-master plans for (rows, N)."""
+    from repro.kernels import fused_wire as fw
+    itp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    k = jax.random.PRNGKey(seed)
+    wide = fw.LANES * fw.PACK
+    q = jax.random.normal(k, (rows, wide))
+    p1 = jax.random.normal(jax.random.fold_in(k, 1), (rows, wide))
+    p2 = jax.random.normal(jax.random.fold_in(k, 2), (rows, wide))
+    packed = jax.random.randint(jax.random.fold_in(k, 3),
+                                (n_workers, rows, fw.LANES), 0,
+                                256).astype(jnp.uint8)
+    w = jnp.full((n_workers,), 0.02)
+
+    def run_plan(plan):
+        return fw.packed_master_update_2d(
+            q, packed, w, p1, p2, 3, 0.01, interpret=itp,
+            block_rows=plan["block_rows"],
+            block_workers=plan["block_workers"])
+
+    return _sweep("master", rows, n_workers, run_plan,
+                  interpret=itp, reps=reps)
+
+
+def save_table(path: str) -> None:
+    """Persist the tuned table as JSON ({'kind|rows|n|backend': plan})."""
+    data = {"|".join(map(str, k)): v for k, v in sorted(_TABLE.items())}
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+
+
+def load_table(path: str, *, replace: bool = False) -> int:
+    """Merge (or replace) the table from a ``save_table`` JSON; returns the
+    number of entries loaded."""
+    with open(path) as f:
+        data = json.load(f)
+    if replace:
+        _TABLE.clear()
+    for key, plan in data.items():
+        kind, rows, n, backend = key.split("|")
+        _TABLE[(kind, int(rows), int(n), backend)] = {
+            "block_rows": int(plan["block_rows"]),
+            "block_workers": int(plan["block_workers"])}
+    return len(data)
+
+
+_env_table = os.environ.get("REPRO_TUNE_TABLE")
+if _env_table and os.path.exists(_env_table):
+    load_table(_env_table)
