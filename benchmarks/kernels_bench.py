@@ -229,6 +229,76 @@ def _worker_scaling(m: int, n_list: tuple, reps: int) -> list:
     return out
 
 
+def _masked_wire(m: int, n_workers: int, reps: int) -> dict:
+    """Secure-aggregation wire overhead at m params x N workers: the
+    masked uplink (ternarize -> RR -> fixed-point weight -> pairwise mask,
+    uint32 words out) vs the plaintext 2-bit stacked uplink, and the
+    sum-then-unmask master vs the accumulating plaintext master — both at
+    their autotuned plans, plus the wire-byte price (uint32 words = 16x
+    the 2-bit codes = fp32-FedAvg-sized uplinks; that is the secure-agg
+    modulus cost, recorded here so the trade is a number, not a vibe)."""
+    from repro.privacy import net_masks, quantize_weights
+    rows = m // 128
+    r4 = rows // 4
+    k = jax.random.PRNGKey(23)
+    bufs_q = jax.random.normal(k, (n_workers, rows, 128))
+    p1 = jax.random.normal(jax.random.fold_in(k, 1), (rows, 128))
+    p2 = jax.random.normal(jax.random.fold_in(k, 2), (rows, 128))
+    w = jnp.full((n_workers,), 1.0 / max(n_workers - 1, 1)).at[0].set(0.0)
+    wq = quantize_weights(w, 24)
+    masks = net_masks(0, n_workers, 3, (r4, 512))
+    tune.autotune_stacked(r4, n_workers, interpret=True, reps=1)
+    tune.autotune_master(r4, n_workers, interpret=True, reps=1)
+    tune.autotune_masked_uplink(r4, n_workers, interpret=True, reps=1)
+    tune.autotune_masked_master(r4, n_workers, interpret=True, reps=1)
+    plan = tune.lookup("uplink_masked", r4, n_workers, interpret=True)
+
+    def uplink_plain():
+        return ops.flat_ternary_pack_stacked(
+            bufs_q, p1, p2, t=3, beta=0.2, alpha1=0.01, interpret=True)
+
+    def uplink_masked():
+        return ops.flat_ternary_pack_masked(
+            bufs_q, p1, p2, t=3, beta=0.2, alpha1=0.01, wq=wq, masks=masks,
+            rr_bits=masks, rr_threshold=0, interpret=True)
+
+    packed = uplink_plain()
+    y = uplink_masked()
+
+    def master_plain():
+        return ops.flat_master_update(bufs_q[0], packed, w, p1, p2, t=3,
+                                      alpha0=0.01, interpret=True)
+
+    def master_masked():
+        return ops.flat_masked_master_update(
+            bufs_q[0], y, jnp.sum(wq), p1, p2, t=3, alpha0=0.01,
+            scale_mult=2.0 ** -24, interpret=True)
+
+    # correctness rides along: masked == plain up to weight quantization
+    np.testing.assert_allclose(np.asarray(master_masked()),
+                               np.asarray(master_plain()),
+                               rtol=1e-5, atol=1e-5)
+    us_up_plain = _bench(uplink_plain, reps=reps)
+    us_up_masked = _bench(uplink_masked, reps=reps)
+    us_ms_plain = _bench(master_plain, reps=reps)
+    us_ms_masked = _bench(master_masked, reps=reps)
+    return {
+        "params": m,
+        "n_workers": n_workers,
+        "uplink_plain_us": us_up_plain,
+        "uplink_masked_us": us_up_masked,
+        "masked_uplink_overhead": us_up_masked / us_up_plain,
+        "master_plain_us": us_ms_plain,
+        "master_masked_us": us_ms_masked,
+        "masked_master_overhead": us_ms_masked / us_ms_plain,
+        "wire_bytes_plain": n_workers * r4 * 128,        # 2-bit codes
+        "wire_bytes_masked": n_workers * r4 * 512 * 4,   # uint32 words
+        "plan": {"block_rows": plan[0], "block_workers": plan[1]},
+        "launches": {"uplink": 1, "master": 1},
+        "mode": "cpu-interpret",
+    }
+
+
 def _scan_rounds_bench(m: int, n_workers: int, rounds: int,
                        reps: int) -> dict:
     """Multi-round FedPC: a Python loop re-dispatching ONE jitted round body
@@ -449,6 +519,24 @@ def run(smoke: bool = False) -> dict:
              f"master_vmem_tile={s['master_vmem_tile_bytes']}B "
              f"(preaccum={s['master_vmem_tile_bytes_preaccum']}B)")
 
+    # ---- secure-aggregation wire: masked vs plaintext kernels -----------
+    mk_m = (1 << 14) if smoke else (1 << 20)
+    mk_tag = (f"{mk_m // (1 << 20)}M" if mk_m >= (1 << 20)
+              else f"{mk_m // 1024}K")
+    masked_results = [_masked_wire(mk_m, N_WORKERS,
+                                   max(r for _, r in sizes))]
+    for s in masked_results:
+        emit(f"masked_uplink_{mk_tag}_{s['n_workers']}w",
+             s["uplink_masked_us"],
+             f"plain={s['uplink_plain_us']:.0f}us "
+             f"overhead={s['masked_uplink_overhead']:.2f}x "
+             f"wire={s['wire_bytes_masked']}B "
+             f"(plain {s['wire_bytes_plain']}B)")
+        emit(f"masked_master_{mk_tag}_{s['n_workers']}w",
+             s["master_masked_us"],
+             f"plain={s['master_plain_us']:.0f}us "
+             f"overhead={s['masked_master_overhead']:.2f}x")
+
     # ---- multi-round scan driver vs per-round Python loop ---------------
     scan_results = []
     scan_sizes = (((1 << 14), 4, 4),) if smoke else ((1 << 20, 4, 3),)
@@ -485,6 +573,7 @@ def run(smoke: bool = False) -> dict:
                "results": results,
                "batched_uplink": uplink_results,
                "worker_scaling": scaling_results,
+               "masked_wire": masked_results,
                "scan_rounds": scan_results,
                "sharded_sync": sync_results}
     if smoke:

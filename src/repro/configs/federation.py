@@ -6,13 +6,18 @@ the paper's uniform full-participation setup: FedAvg-style C-fraction
 regime for cross-device federation) and **heterogeneous per-worker beta_k**
 (per-client adaptive quantization, cf. the communication survey 2405.20431).
 A :class:`FedScenario` names one point in that space so benchmarks,
-examples and tests exercise the same regimes by name.
+examples and tests exercise the same regimes by name. The privacy axis
+(``repro.privacy``) rides along as an optional
+:class:`~repro.privacy.spec.PrivacySpec`: secure-aggregation masking and
+local-DP randomized response on the wire.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import numpy as np
+
+from repro.privacy.spec import PrivacySpec
 
 
 @dataclass(frozen=True)
@@ -21,6 +26,7 @@ class FedScenario:
     name: str
     participation: float = 1.0        # C-fraction of workers per round
     beta_menu: tuple | None = None    # per-worker beta_k draws; None=uniform
+    privacy: PrivacySpec | None = None  # secure-agg / local-DP wire
     description: str = ""
 
     def betas_for(self, n_workers: int, seed: int = 0) -> tuple | None:
@@ -52,6 +58,17 @@ _SCENARIOS = {
             beta_menu=(0.1, 0.2, 0.3),
             description="C=0.25 sampling + heterogeneous beta_k — the "
                         "adaptive-quantization cross-device regime."),
+        FedScenario(
+            "secure-agg", privacy=PrivacySpec(),
+            description="Pairwise-masked secure aggregation: the master "
+                        "sees only the modular sum of fixed-point-weighted "
+                        "ternary fields, never a worker's directions."),
+        FedScenario(
+            "secure-agg-ldp", participation=0.5,
+            privacy=PrivacySpec(dp_epsilon=4.0),
+            description="Secure aggregation + per-round eps=4 local-DP "
+                        "randomized response on the codes, under C=0.5 "
+                        "sampling — the full privacy stack."),
     )
 }
 

@@ -30,6 +30,7 @@ from repro.utils import PyTree
 ALLOWED_UPLINK_FIELDS = {
     "cost",            # scalar loss — Thm 2's only always-shared signal
     "packed_ternary",  # 2-bit codes — Thm 3
+    "masked_words",    # secure-agg wire: mod-2^32 masked fixed-point words
     "pilot_params",    # full weights, ONLY when commanded SEND_MODEL
     "worker_id",
     "round",
@@ -43,8 +44,20 @@ class LeakageError(RuntimeError):
 @dataclass
 class LeakageLedger:
     """Records every value that crosses the worker→master boundary and
-    enforces that full-precision parameters cross only on the pilot path."""
+    enforces that full-precision parameters cross only on the pilot path.
+
+    ``audits`` records traced-program enforcement runs (``repro.privacy
+    .audit``): both runtimes audit their round program at setup when a
+    :class:`~repro.privacy.spec.PrivacySpec` has ``enforce=True`` — a
+    violation raises :class:`LeakageError` before any round runs, and the
+    passing audit is logged here so tests (and operators) can see that
+    enforcement actually happened rather than being test-only."""
     events: list = field(default_factory=list)
+    audits: list = field(default_factory=list)
+
+    def record_audit(self, runtime: str, report: dict) -> None:
+        """Log a passed traced-program audit (see ``repro.privacy.audit``)."""
+        self.audits.append({"runtime": runtime, **report})
 
     def record(self, worker_id: int, round_: int, kind: str,
                is_pilot: bool) -> None:

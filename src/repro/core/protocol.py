@@ -84,11 +84,28 @@ class CommLedger:
 # Analytic communication models (Fig. 6)
 # ---------------------------------------------------------------------------
 
+def _fedpc_wire_bytes(model_bytes: float, n_workers: int, code_bits: float,
+                      weight_bits: int = 32) -> float:
+    """The Eq. (8) shape: V(N+1) download+pilot, plus N-1 non-pilot
+    uplinks at ``code_bits`` per parameter (R = weight_bits/code_bits)."""
+    ratio = weight_bits / code_bits
+    return model_bytes * (n_workers + 1) + model_bytes * (n_workers - 1) / ratio
+
+
 def fedpc_bytes_per_round(model_bytes: float, n_workers: int,
                           weight_bits: int = 32) -> float:
     """Eq. (8): D = V(N+1) + V(N-1)/R, R = weight_bits/2 (2-bit codes)."""
-    ratio = weight_bits / 2.0
-    return model_bytes * (n_workers + 1) + model_bytes * (n_workers - 1) / ratio
+    return _fedpc_wire_bytes(model_bytes, n_workers, 2.0, weight_bits)
+
+
+def fedpc_masked_bytes_per_round(model_bytes: float, n_workers: int,
+                                 word_bits: int = 32) -> float:
+    """Secure-aggregation wire: non-pilot uplinks carry one masked uint32
+    word per parameter (the modulus must hold the cohort sum of fixed-
+    point-weighted fields), so the 2-bit code term of Eq. (8) grows to
+    ``word_bits`` per parameter — the classic secure-agg price. Download
+    and pilot upload are unchanged."""
+    return _fedpc_wire_bytes(model_bytes, n_workers, float(word_bits))
 
 
 def fedavg_bytes_per_round(model_bytes: float, n_workers: int) -> float:

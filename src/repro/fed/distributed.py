@@ -45,6 +45,10 @@ from repro.core import flat as fl
 from repro.core.goodness import select_pilot as _select_pilot
 from repro.fed import rounds as rd
 from repro.models.model import Model
+from repro.privacy import audit as pv_audit
+from repro.privacy import dp as pdp
+from repro.privacy import masking as pvm
+from repro.privacy.spec import PrivacySpec
 from repro.utils import PyTree
 
 from repro.sharding.specs import param_specs, wire_specs
@@ -70,7 +74,8 @@ def _shard_map(body, mesh, in_specs, out_specs, manual_axes):
 # ---------------------------------------------------------------------------
 
 def _sync_body(q_buf, p_prev, p_prev2, *, wire: rd.WirePath, k_star, w,
-               t, fed_axis, n_fed, mode, betas=None):
+               t, fed_axis, n_fed, mode, betas=None, model_axis=None,
+               pmask=None):
     """One (fed, model) device's slice of the round sync — a thin driver
     over :class:`repro.fed.rounds.WirePath`.
 
@@ -87,6 +92,47 @@ def _sync_body(q_buf, p_prev, p_prev2, *, wire: rd.WirePath, k_star, w,
     # pilot upload+broadcast == masked all-reduce over the fed axis
     q_pilot = jax.lax.psum(jnp.where(idx == k_star, q, 0.0), fed_axis)
     wf = w.astype(jnp.float32)                    # (F,) masked Eq.(3) weights
+
+    if mode == "masked":
+        # Secure-aggregation wire: this instance masks its own fixed-point
+        # weighted fields (pairwise net mask derived from stateless
+        # fold_in chains — only this worker's own pair streams, not the
+        # full F(F-1)/2 set the simulator materializes),
+        # the fed collective sums mod 2**32 (masks cancel EXACTLY, and
+        # modular addition is order-free, so psum_scatter+all_gather is
+        # bit-identical to a plain psum and to the replicated path), and
+        # every instance unmasks the identical public sum.
+        spec = wire.privacy
+        sr = q.shape[0]
+        r4 = sr // fl.PACK
+        wide = fl.LANES * fl.PACK
+        m_idx = (jax.lax.axis_index(model_axis) if model_axis is not None
+                 else jnp.int32(0))
+        wq = pvm.quantize_weights(wf, spec.fixpoint_bits)
+        if spec.masking_on:
+            net = pvm.net_mask_slab(spec.mask_seed, idx, n_fed, t,
+                                    (r4, wide), m_idx,
+                                    participation=pmask)
+        else:
+            net = jnp.zeros((r4, wide), jnp.uint32)
+        if spec.dp_on:
+            rr = pdp.rr_bits_worker(spec.dp_seed, t, idx, (r4, wide),
+                                    m_idx)
+        else:
+            rr = net
+        y = wire.uplink_masked_slab(q, p_prev, p_prev2, t=t,
+                                    wq_own=jnp.take(wq, idx), net=net,
+                                    rr=rr, beta=beta_k)
+        if y.shape[0] % n_fed == 0:
+            part = jax.lax.psum_scatter(y, fed_axis, scatter_dimension=0,
+                                        tiled=True)
+            s = jax.lax.all_gather(part, fed_axis, axis=0, tiled=True)
+        else:                       # slab rows not divisible by F
+            s = jax.lax.psum(y, fed_axis)
+        ci = jax.lax.bitcast_convert_type(s - jnp.sum(wq), jnp.int32)
+        coeff = ci.astype(jnp.float32) * jnp.float32(spec.scale_mult)
+        return wire.combine(q_pilot, coeff.reshape(sr, fl.LANES), p_prev,
+                            p_prev2, t)
 
     if mode == "packed":
         # Fused uplink on the slab → uint8 §3.3 codes on the wire → fused
@@ -127,7 +173,9 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
                    model_axis: str = "model", shard_wire: bool = True,
                    wire_block_rows: int | None = None,
                    wire_block_workers: int | None = None,
-                   betas=None) -> Callable:
+                   betas=None, privacy: PrivacySpec | None = None,
+                   renorm_shares: bool = False,
+                   ledger=None) -> Callable:
     """Returns sync(params_F, costs, sizes, state, mask=None) ->
     (new_global_params, aux).
 
@@ -152,12 +200,33 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
     each device's slab (master VMEM per tile stays O(block) regardless of
     F); left as None they resolve through the ``kernels.tune`` table —
     tiling never changes bits.
+
+    An active ``privacy`` spec puts the fedpc strategies on the masked
+    secure-aggregation wire: each instance uploads mod-2**32 masked
+    fixed-point words, the fed collective is the bandwidth-optimal
+    psum_scatter+all_gather over uint32 (modular addition is order-free,
+    so mask cancellation — and bitwise parity with the replicated path —
+    survives ANY reduction topology), and the master never sees a worker's
+    plaintext codes. With ``privacy.enforce`` the traced sync program is
+    audited against the §4.2 leakage policy on first call (shape-only
+    trace) and the passing audit recorded in ``ledger`` when given.
+    ``renorm_shares`` selects the renormalized-share Eq. (3) variant under
+    partial participation.
     """
     F = mesh.shape[fed_axis]
     M = mesh.shape.get(model_axis, 1) if shard_wire else 1
     m_axis = model_axis if M > 1 else None
     wcfg = rd.WireConfig(alpha0=alpha0, beta=beta, alpha1=alpha1)
     betas_arr = None if betas is None else jnp.asarray(betas, jnp.float32)
+    masked_wire = privacy is not None and privacy.active
+    if masked_wire and strategy == "fedavg":
+        # Silently running FedAvg's full-precision psum while the caller
+        # believes secure aggregation is on would be the worst failure
+        # mode a privacy layer can have.
+        raise ValueError("privacy (secure-agg / DP wire) requires a fedpc "
+                         "strategy; strategy='fedavg' moves full-precision "
+                         "params over the fed axis")
+    audit_state = {"done": False}
 
     def sync(params_F: PyTree, costs: jax.Array, sizes: jax.Array,
              state: dict, mask: jax.Array | None = None
@@ -188,7 +257,9 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
             # round, not one per leaf, each moving rows/M per device.
             layout = fl.layout_of(state["params"], shards=M)
             wire = rd.WirePath(wcfg, block_rows=wire_block_rows,
-                               block_workers=wire_block_workers)
+                               block_workers=wire_block_workers,
+                               privacy=privacy if masked_wire else None,
+                               renorm_shares=renorm_shares)
             w = wire.weights(p_shares, k_star, t, betas=betas_arr,
                              mask=mask)
             q_flat_F = fl.flatten_stacked(params_F, layout)
@@ -212,20 +283,34 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
                         x, NamedSharding(mesh, P(None, None)))
                     for x in (p1_flat, p2_flat))
 
+            mode = ("masked" if masked_wire else
+                    {"fedpc_packed": "packed",
+                     "fedpc_reduce": "reduce"}.get(strategy, "gather"))
             body = partial(
                 _sync_body, wire=wire, k_star=k_star, w=w, t=t,
                 fed_axis=fed_axis, n_fed=F, betas=betas_arr,
-                mode={"fedpc_packed": "packed",
-                      "fedpc_reduce": "reduce"}.get(strategy, "gather"))
+                model_axis=m_axis, pmask=mask, mode=mode)
 
             specs = wire_specs(fed_axis, m_axis)
-            new_flat = _shard_map(
+            sharded_sync = _shard_map(
                 body, mesh,
                 in_specs=(specs["stacked"], specs["history"],
                           specs["history"]),
                 out_specs=specs["out"],
                 manual_axes={fed_axis} | ({m_axis} if m_axis else set()),
-            )(q_flat_F, p1_flat, p2_flat)
+            )
+            if (masked_wire and privacy.enforce
+                    and not audit_state["done"]):
+                # §4.2 enforcement hook: audit what actually crosses the
+                # fed axis in this round's traced program (shape-only
+                # trace — runs once, works under an outer jit too).
+                report = pv_audit.check_fed_collectives(
+                    sharded_sync, q_flat_F, p1_flat, p2_flat,
+                    n_fed=F, masked=True)
+                audit_state["done"] = True
+                if ledger is not None:
+                    ledger.record_audit("build_fed_sync", report)
+            new_flat = sharded_sync(q_flat_F, p1_flat, p2_flat)
             new_params = fl.unflatten_tree(new_flat, layout)
 
         costs_eff = costs.astype(jnp.float32)
@@ -250,7 +335,9 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
 
 def build_fed_step(model: Model, mesh: Mesh, fed_axis: str = "data",
                    strategy: str = "fedpc", local_steps: int = 1,
-                   lr: float = 0.01, betas=None) -> Callable:
+                   lr: float = 0.01, betas=None,
+                   privacy: PrivacySpec | None = None,
+                   renorm_shares: bool = False, ledger=None) -> Callable:
     """fed_step(state, opt_states_F, batch_F, sizes, mask=None) ->
        (state', opt_states_F', metrics)
 
@@ -260,9 +347,13 @@ def build_fed_step(model: Model, mesh: Mesh, fed_axis: str = "data",
     optimizer state persists), reports its final loss as the round cost.
     ``betas``/``mask`` as in :func:`build_fed_sync` (under SPMD every
     worker still computes when masked — the mask drops its contribution
-    from the aggregate, the federated semantics of a skipped round).
+    from the aggregate, the federated semantics of a skipped round), and
+    so are ``privacy``/``renorm_shares``/``ledger`` — the secure-agg wire
+    is reachable from the end-to-end driver, not only from the raw sync.
     """
-    sync = build_fed_sync(model, mesh, fed_axis, strategy, betas=betas)
+    sync = build_fed_sync(model, mesh, fed_axis, strategy, betas=betas,
+                          privacy=privacy, renorm_shares=renorm_shares,
+                          ledger=ledger)
 
     def local_train(params, opt_state, batches):
         def step(carry, b):

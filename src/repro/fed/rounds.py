@@ -51,6 +51,10 @@ from repro.core import flat as fl
 from repro.core.goodness import select_pilot
 from repro.core.ternary import ternarize, ternarize_round1
 from repro.kernels import ops
+from repro.privacy import dp as pdp
+from repro.privacy import masking as pvm
+from repro.privacy.accountant import PrivacyAccountant
+from repro.privacy.spec import PrivacySpec
 from repro.utils import PyTree
 
 
@@ -80,11 +84,19 @@ class RoundState(NamedTuple):
     buf_p2: jax.Array      # (rows, 128) — P^{t-2}
     prev_costs: jax.Array  # (N,) — C_k^{t-1}, +inf before round 1
     round: jax.Array       # scalar int32, 1-based round about to run
+    accountant: Any = None  # PrivacyAccountant when the DP wire is on
 
 
 def init_round_state(init_params: PyTree, n_workers: int,
-                     layout: fl.FlatLayout | None = None) -> RoundState:
-    """Fresh :class:`RoundState` at round 1 (P^{t-2} = 0, costs = +inf)."""
+                     layout: fl.FlatLayout | None = None, *,
+                     privacy: PrivacySpec | None = None) -> RoundState:
+    """Fresh :class:`RoundState` at round 1 (P^{t-2} = 0, costs = +inf).
+
+    With a DP-enabled ``privacy`` spec the state carries a zeroed
+    :class:`~repro.privacy.accountant.PrivacyAccountant` — four device
+    scalars that ride the scan carry and the checkpoint alongside the
+    history buffers.
+    """
     layout = layout or fl.layout_of(init_params)
     buf_p1 = fl.flatten_tree(init_params, layout)
     return RoundState(
@@ -92,6 +104,8 @@ def init_round_state(init_params: PyTree, n_workers: int,
         buf_p2=jnp.zeros_like(buf_p1),
         prev_costs=jnp.full((n_workers,), jnp.inf, jnp.float32),
         round=jnp.asarray(1, jnp.int32),
+        accountant=(PrivacyAccountant.zero()
+                    if privacy is not None and privacy.dp_on else None),
     )
 
 
@@ -163,11 +177,23 @@ class WirePath:
     (shape, N, backend) through the ``repro.kernels.tune`` table. Tiling
     never changes results — the master accumulates workers in a fixed
     sequential order, so every plan is bitwise-identical.
+
+    ``privacy`` switches the round onto the secure-aggregation / local-DP
+    wire (``repro.privacy``): the uplink becomes masked fixed-point words
+    (``ternary_pack_masked_2d``) and the master a sum-then-unmask launch
+    (``masked_master_update_2d``) — still two launches, still zero host
+    syncs, and the master never sees an individual worker's ternary
+    directions. ``renorm_shares`` enables the renormalized-share variant
+    of Eq. (3) under partial participation: the data shares p_k are
+    renormalized over the sampled set (mirroring the C-fraction FedAvg
+    fix) instead of keeping the paper's global shares.
     """
     cfg: WireConfig = WireConfig()
     interpret: bool | None = None
     block_rows: int | None = None
     block_workers: int | None = None
+    privacy: PrivacySpec | None = None
+    renorm_shares: bool = False
 
     # -- elementwise protocol math (jnp semantics, traced round index) ------
 
@@ -198,11 +224,18 @@ class WirePath:
         ``betas`` is an optional (N,) per-worker beta_k vector (defaults to
         the shared ``cfg.beta``); ``mask`` an optional (N,) participation
         mask — non-participants contribute exactly ±0.0 to the reduce, the
-        same mechanism that already masks the pilot. Shares are NOT
-        renormalized over the sampled set: p_k = S_k/S stays the paper's
-        global data share, so a round's update magnitude scales with how
-        much data actually reported."""
+        same mechanism that already masks the pilot. By default shares are
+        NOT renormalized over the sampled set: p_k = S_k/S stays the
+        paper's global data share, so a round's update magnitude scales
+        with how much data actually reported; with ``renorm_shares`` the
+        shares are renormalized over the sampled workers (the C-fraction
+        FedAvg convention), keeping the update magnitude constant across
+        rounds regardless of who reported."""
         n = p_shares.shape[0]
+        if self.renorm_shares and mask is not None:
+            pm = p_shares.astype(jnp.float32) * jnp.asarray(mask,
+                                                            jnp.float32)
+            p_shares = pm / jnp.maximum(jnp.sum(pm), 1e-12)
         not_pilot = (jnp.arange(n) != k_star).astype(jnp.float32)
         if betas is None:
             scale = jnp.where(jnp.asarray(t) <= 1, 1.0, self.cfg.beta)
@@ -259,9 +292,78 @@ class WirePath:
             alpha0=self.cfg.alpha0, interpret=self.interpret,
             block_rows=self.block_rows, block_workers=self.block_workers)
 
+    # -- secure-aggregation / local-DP wire (repro.privacy) -----------------
+
+    def uplink_masked(self, bufs_q: jax.Array, buf_p1: jax.Array,
+                      buf_p2: jax.Array, *, t, w: jax.Array, betas=None,
+                      pmask=None) -> tuple[jax.Array, jax.Array]:
+        """All N workers' masked secure-agg wire words in ONE launch.
+
+        Derives the round's pairwise net masks (stateless ``fold_in``
+        chains keyed by the — possibly traced — absolute round ``t``) and
+        the randomized-response bit plane, quantizes the public Eq. (3)
+        weights ``w`` to fixed point, and runs the fused masked uplink:
+        codes exist only in kernel registers, HBM sees masked uint32 words.
+        ``pmask`` is the public participation mask (pairs are active only
+        between sampled workers). Returns ``(masked_words, wq)``.
+        """
+        spec = self.privacy
+        n, rows, _ = bufs_q.shape
+        shape = (rows // fl.PACK, fl.LANES * fl.PACK)
+        wq = pvm.quantize_weights(w, spec.fixpoint_bits)
+        if spec.masking_on:
+            masks = pvm.net_masks(spec.mask_seed, n, t, shape,
+                                  participation=pmask)
+        else:
+            masks = jnp.zeros((n,) + shape, jnp.uint32)
+        if spec.dp_on:
+            rr = pdp.rr_bits(spec.dp_seed, t, (n,) + shape)
+        else:
+            rr = masks          # threshold 0 never reads it
+        beta = self.cfg.beta if betas is None else betas
+        y = ops.flat_ternary_pack_masked(
+            bufs_q, buf_p1, buf_p2, t=t, beta=beta,
+            alpha1=self.cfg.alpha1, wq=wq, masks=masks, rr_bits=rr,
+            rr_threshold=spec.rr_threshold, interpret=self.interpret,
+            block_rows=self.block_rows, block_workers=self.block_workers)
+        return y, wq
+
+    def uplink_masked_slab(self, buf_q: jax.Array, buf_p1: jax.Array,
+                           buf_p2: jax.Array, *, t, wq_own, net, rr,
+                           beta=None) -> jax.Array:
+        """One worker's masked wire words over a single (sr, 128) slab —
+        the distributed per-instance form (the stacked kernel at N = 1).
+        ``wq_own`` is this worker's fixed-point weight (traced scalar);
+        ``net``/``rr`` its (sr//4, 512) net mask / RR bit plane. Returns
+        (sr//4, 512) uint32.
+        """
+        spec = self.privacy
+        beta = self.cfg.beta if beta is None else beta
+        y = ops.flat_ternary_pack_masked(
+            buf_q[None], buf_p1, buf_p2, t=t, beta=beta,
+            alpha1=self.cfg.alpha1, wq=jnp.reshape(wq_own, (1,)),
+            masks=net[None], rr_bits=rr[None],
+            rr_threshold=spec.rr_threshold, interpret=self.interpret,
+            block_rows=self.block_rows, block_workers=self.block_workers)
+        return y[0]
+
+    def master_masked(self, buf_pilot: jax.Array, masked: jax.Array,
+                      wq: jax.Array, buf_p1: jax.Array, buf_p2: jax.Array,
+                      *, t) -> jax.Array:
+        """Sum-then-unmask Eq. (3): modular sum of the masked words (masks
+        cancel exactly), integer de-bias by the public ``sum_k W_k``,
+        fixed-point descale with the RR unbias folded in, combine."""
+        spec = self.privacy
+        return ops.flat_masked_master_update(
+            buf_pilot, masked, jnp.sum(wq), buf_p1, buf_p2, t=t,
+            alpha0=self.cfg.alpha0, scale_mult=spec.scale_mult,
+            interpret=self.interpret, block_rows=self.block_rows,
+            block_workers=self.block_workers)
+
     def round_from_stacked(self, bufs_q: jax.Array, k_star, w: jax.Array,
                            buf_p1: jax.Array, buf_p2: jax.Array, *, t,
-                           betas=None) -> tuple[jax.Array, jax.Array]:
+                           betas=None, pmask=None
+                           ) -> tuple[jax.Array, jax.Array]:
         """A full round over stacked worker buffers: batched uplink + fused
         master — exactly two kernel launches regardless of N.
 
@@ -271,10 +373,20 @@ class WirePath:
         drops non-participating workers when ``w`` carries a mask.
 
         ``k_star`` may be traced: the pilot buffer is gathered with a
-        dynamic index, no host sync. Returns ``(new_global_buf,
-        packed_stacked)`` — the packed buffers ride along for byte
-        accounting / ledger purposes.
+        dynamic index, no host sync. With an active :class:`PrivacySpec`
+        the round takes the masked wire instead (same launch count; the
+        wire buffer is uint32 masked words). ``pmask`` is the public
+        participation mask, consumed only by the masked wire's pairwise
+        mask derivation. Returns ``(new_global_buf, wire_buffer)`` — the
+        wire buffers ride along for byte accounting / ledger purposes.
         """
+        if self.privacy is not None and self.privacy.active:
+            y, wq = self.uplink_masked(bufs_q, buf_p1, buf_p2, t=t, w=w,
+                                       betas=betas, pmask=pmask)
+            buf_pilot = jnp.take(bufs_q, k_star, axis=0)
+            new_buf = self.master_masked(buf_pilot, y, wq, buf_p1, buf_p2,
+                                         t=t)
+            return new_buf, y
         packed = self.uplink_stacked(bufs_q, buf_p1, buf_p2, t=t,
                                      betas=betas)
         buf_pilot = jnp.take(bufs_q, k_star, axis=0)
@@ -307,16 +419,24 @@ class WirePath:
                                       mask)
         p_shares = sizes / jnp.sum(sizes)
         w = self.weights(p_shares, k_star, t, betas=betas, mask=mask)
-        new_buf, _packed = self.round_from_stacked(
-            bufs_q, k_star, w, state.buf_p1, state.buf_p2, t=t, betas=betas)
+        new_buf, _wire = self.round_from_stacked(
+            bufs_q, k_star, w, state.buf_p1, state.buf_p2, t=t, betas=betas,
+            pmask=mask)
         if mask is None:
             costs_eff = costs
         else:   # non-participants did not train: carry their previous cost
             costs_eff = jnp.where(jnp.asarray(mask) > 0, costs,
                                   state.prev_costs)
+        accountant = state.accountant
+        if (accountant is not None and self.privacy is not None
+                and self.privacy.dp_on):
+            accountant = accountant.add(self.privacy.eps_round)
         new_state = RoundState(buf_p1=new_buf, buf_p2=state.buf_p1,
-                               prev_costs=costs_eff, round=t + 1)
+                               prev_costs=costs_eff, round=t + 1,
+                               accountant=accountant)
         info = {"k_star": k_star, "goodness": scores, "costs": costs_eff}
+        if mask is not None:
+            info["mask"] = jnp.asarray(mask, jnp.float32)
         return new_state, new_buf, info
 
 
@@ -326,7 +446,8 @@ WorkerFn = Callable[[Any, jax.Array, jax.Array],
 
 def scan_rounds(wire: WirePath, state: RoundState, worker_fn: WorkerFn,
                 worker_carry: Any, n_rounds: int, sizes: jax.Array, *,
-                betas=None, masks=None
+                betas=None, masks=None, participation: float | None = None,
+                participation_key: jax.Array | None = None
                 ) -> tuple[RoundState, Any, dict]:
     """Many rounds of Algorithm 1 as ONE ``lax.scan`` over ``round_step``.
 
@@ -337,6 +458,16 @@ def scan_rounds(wire: WirePath, state: RoundState, worker_fn: WorkerFn,
     schedule (see :func:`participation_masks`); ``betas`` an optional (N,)
     per-worker beta_k vector.
 
+    Alternatively the participation mask can be sampled INSIDE the scan
+    body — pass ``participation`` (the C fraction) and a
+    ``participation_key``: each round draws
+    ``participation_mask(fold_in(key, t), N, C)`` with the ABSOLUTE round
+    index ``t`` from the carry, so no (n_rounds, N) host-side schedule is
+    materialized (cross-device scale) and a resumed run draws exactly the
+    rows an uninterrupted run would — bit-identical to the precomputed
+    :func:`participation_masks` schedule from the same key. The sampled
+    masks come back in ``infos["mask"]`` for ledger backfill.
+
     The scan body costs exactly two kernel launches and performs zero
     device→host transfers; ``infos`` comes back with per-round stacked
     ``k_star`` / ``goodness`` / ``costs`` for one post-scan fetch. XLA
@@ -345,12 +476,28 @@ def scan_rounds(wire: WirePath, state: RoundState, worker_fn: WorkerFn,
     extend that to the initial buffers).
     """
     sizes = jnp.asarray(sizes, jnp.float32)
+    n_workers = sizes.shape[0]
+    if participation is not None:
+        if masks is not None:
+            raise ValueError("pass a precomputed mask schedule OR in-scan "
+                             "participation sampling, not both")
+        if participation_key is None:
+            raise ValueError("in-scan participation sampling needs a "
+                             "participation_key")
+        if not 0.0 < participation <= 1.0:
+            raise ValueError(
+                f"participation must be in (0, 1], got {participation}")
 
     def body(carry, x):
         st, wc = carry
+        mask = x
+        if participation is not None:
+            mask = participation_mask(
+                jax.random.fold_in(participation_key, st.round),
+                n_workers, participation)
         wc, bufs_q, costs = worker_fn(wc, st.buf_p1, st.round)
         st, _new_buf, info = wire.round_step(st, bufs_q, costs, sizes,
-                                             betas=betas, mask=x)
+                                             betas=betas, mask=mask)
         return (st, wc), info
 
     (state, worker_carry), infos = jax.lax.scan(

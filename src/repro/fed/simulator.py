@@ -45,6 +45,7 @@ from repro.core import protocol as proto
 from repro.core.privacy import LeakageLedger
 from repro.fed import rounds as rd
 from repro.fed.worker import Worker
+from repro.privacy import audit as pv_audit
 from repro.utils import PyTree
 
 
@@ -127,11 +128,50 @@ class FedSimulator:
                 if any(b is not None for b in wb) else None)
         return masks, betas_arr
 
+    def _wire_path(self, wire_block_rows, wire_block_workers) -> rd.WirePath:
+        """The round's WirePath with the config's privacy/renorm axes."""
+        cfg = self.fed_cfg
+        return rd.WirePath(rd.WireConfig.from_fedpc(cfg),
+                           block_rows=wire_block_rows,
+                           block_workers=wire_block_workers,
+                           privacy=cfg.privacy,
+                           renorm_shares=cfg.renorm_shares)
+
+    def _enforce_privacy(self, runtime: str, wire: rd.WirePath,
+                         state: rd.RoundState, betas_arr,
+                         has_mask: bool) -> None:
+        """§4.2 enforcement hook: audit the traced round program (against
+        ShapeDtypeStructs, no real data) before any round runs. A policy
+        violation raises LeakageError here; the passing audit is recorded
+        in the ledger."""
+        spec = self.fed_cfg.privacy
+        if spec is None or not spec.enforce:
+            return
+        bufs = jax.ShapeDtypeStruct((self.n,) + state.buf_p1.shape,
+                                    jnp.float32)
+        costs = jax.ShapeDtypeStruct((self.n,), jnp.float32)
+        # The mask spec must flow through check_round_program's kwargs —
+        # that is what as_specs/make_jaxpr convert to tracers; baking it
+        # into the partial would leave a raw ShapeDtypeStruct inside the
+        # traced program.
+        mask_kw = ({"mask": jax.ShapeDtypeStruct((self.n,), jnp.float32)}
+                   if has_mask else {})
+        report = pv_audit.check_round_program(
+            partial(wire.round_step, betas=betas_arr),
+            state, bufs, costs, jnp.asarray(self.sizes),
+            n_workers=self.n, masked=spec.active, **mask_kw)
+        self.ledger.record_audit(runtime, report)
+
     def _backfill_ledger(self, t0: int, pilots: np.ndarray,
                          masks: np.ndarray | None) -> None:
         """Record each round's uplink events after the fact — the ledger is
         host metadata, so it is reconstructed from the single post-run fetch
-        of the on-device pilot history (§4.2 invariants unchanged)."""
+        of the on-device pilot history (§4.2 invariants unchanged). On the
+        masked wire the master receives mod-2^32 masked words, never the
+        per-worker 2-bit codes — the ledger records what actually crossed."""
+        spec = self.fed_cfg.privacy
+        code_kind = ("masked_words" if spec is not None and spec.active
+                     else "packed_ternary")
         for i, k_star in enumerate(pilots):
             t = t0 + i
             row = None if masks is None else masks[i]
@@ -141,7 +181,7 @@ class FedSimulator:
             self.ledger.record(int(k_star), t, "pilot_params", True)
             for k in range(self.n):
                 if (row is None or row[k]) and k != int(k_star):
-                    self.ledger.record(k, t, "packed_ternary", False)
+                    self.ledger.record(k, t, code_kind, False)
 
     def _finish_fedpc(self, res: SimResult, state: rd.RoundState,
                       layout: fl.FlatLayout, t0: int,
@@ -154,13 +194,17 @@ class FedSimulator:
         costs_mat = np.asarray(jnp.stack(raw_costs))        # (R, N)
         if not ledger_done:
             self._backfill_ledger(t0, pilots, masks)
+        spec = self.fed_cfg.privacy
+        masked_wire = spec is not None and spec.active
         for i in range(len(pilots)):
             row = np.ones(self.n) if masks is None else masks[i]
             vals = np.where(row > 0, costs_mat[i], 0.0)
             res.costs.append(float(np.average(vals,
                                               weights=self.sizes * row)))
             res.pilot_history.append(int(pilots[i]))
-            res.bytes_per_round.append(proto.fedpc_bytes_per_round(
+            bytes_fn = (proto.fedpc_masked_bytes_per_round if masked_wire
+                        else proto.fedpc_bytes_per_round)
+            res.bytes_per_round.append(bytes_fn(
                 model_bytes, int(np.sum(row > 0))))
         res.params = fl.unflatten_tree(state.buf_p1, layout)
         res.round_state = state
@@ -185,13 +229,12 @@ class FedSimulator:
         ``kernels.tune`` plan for this shape — tiling never changes bits).
         """
         cfg = self.fed_cfg
-        wire = rd.WirePath(rd.WireConfig.from_fedpc(cfg),
-                           block_rows=wire_block_rows,
-                           block_workers=wire_block_workers)
+        wire = self._wire_path(wire_block_rows, wire_block_workers)
         layout = fl.layout_of(self.init_params)
         resumed = state is not None
         if state is None:
-            state = rd.init_round_state(self.init_params, self.n, layout)
+            state = rd.init_round_state(self.init_params, self.n, layout,
+                                        privacy=cfg.privacy)
         state = _own_state(state, resumed)
         t0 = int(state.round)                 # one setup-time sync
         masks, betas_arr = self._resolve_scenario(
@@ -203,6 +246,8 @@ class FedSimulator:
         params = fl.unflatten_tree(state.buf_p1, layout)
         res = SimResult("fedpc", params)
         sizes = jnp.asarray(self.sizes)
+        self._enforce_privacy("run_fedpc", wire, state, betas_arr,
+                              has_mask=masks is not None)
 
         step = jax.jit(
             partial(wire.round_step, betas=betas_arr),
@@ -289,13 +334,12 @@ class FedSimulator:
             raise ValueError("evade_streak requires the Python-loop driver "
                              "(per-round host behaviour)")
         cfg = self.fed_cfg
-        wire = rd.WirePath(rd.WireConfig.from_fedpc(cfg),
-                           block_rows=wire_block_rows,
-                           block_workers=wire_block_workers)
+        wire = self._wire_path(wire_block_rows, wire_block_workers)
         layout = fl.layout_of(self.init_params)
         resumed = state is not None
         if state is None:
-            state = rd.init_round_state(self.init_params, self.n, layout)
+            state = rd.init_round_state(self.init_params, self.n, layout,
+                                        privacy=cfg.privacy)
         state = _own_state(state, resumed)
         t0 = int(state.round)                 # one setup-time sync
         masks, betas_arr = self._resolve_scenario(
@@ -303,6 +347,8 @@ class FedSimulator:
         model_bytes = proto.model_size_bytes(self.init_params)
         params0 = fl.unflatten_tree(state.buf_p1, layout)
         res = SimResult("fedpc", params0)
+        self._enforce_privacy("run_fedpc_scan", wire, state, betas_arr,
+                              has_mask=masks is not None)
 
         # --- pre-draw every worker's batch schedule (host) --------------
         # Only the sample INDICES are pre-drawn — (rounds, steps, bs) int32

@@ -1,0 +1,233 @@
+"""Fused Pallas kernels for the secure-aggregation (masked) wire path.
+
+Two kernels mirror the plaintext pair of ``fused_wire`` and keep the round
+at exactly two launches when privacy is on:
+
+``ternary_pack_masked_2d`` — the masked uplink. Fuses Eq. (4)/(5)
+ternarization -> bias to fields {0, 1, 2} -> 3-ary randomized response
+(local DP, threshold 0 = off) -> fixed-point weighting by the public
+per-worker ``W_k`` -> pairwise-mask addition, all in-register: float
+history views in, uint32 masked words out. The plaintext code NEVER exists
+outside VMEM registers — what reaches HBM (and then the wire) is already
+masked. Grid layout is identical to ``ternary_pack_stacked_2d``:
+rows-major with the worker axis minor (shared history fetched once per row
+block), a vectorized (block_workers, block_rows) block, and a grid-less
+one-shot path when the plan collapses to one step.
+
+``masked_master_update_2d`` — the sum-then-unmask master. Walks the same
+2-D (rows, workers) grid as ``packed_master_update_2d``, accumulating the
+masked uint32 words into a revisited uint32 accumulator block (a second
+output whose block index ignores the worker axis; the caller discards it).
+Because the accumulation is modular (mod 2**32), the pairwise masks cancel
+EXACTLY once all workers are folded — the master never observes an
+individual worker's ternary directions, only the sum — and the result is
+bitwise invariant under every block plan *and* every reduction order (no
+sequential-order discipline needed, unlike the float master). The last
+worker step de-biases in the integer domain (subtract the public
+``sum_k W_k``), reinterprets the residue as int32 (|coeff| < 2**31 by the
+``sum w_k <= 1`` weight bound), descales by the fixed-point multiplier
+(with the RR unbias folded in), and applies the Eq. (3) combine.
+
+Wire cost: one uint32 word per parameter — 16x the 2-bit plaintext wire,
+equal to fp32 FedAvg traffic. That is the classic secure-aggregation
+price: the modulus must hold the cohort sum of fixed-point-weighted
+fields. The overhead is benchmarked in ``benchmarks/kernels_bench.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.fused_wire import _codes_any
+from repro.privacy.dp import rr_fields
+
+LANES = 128
+PACK = 4
+BLOCK_ROWS = 64
+BLOCK_WORKERS = 1
+
+def _masked_fields(q, p1, p2, beta, t, alpha1, wq, mask, rr, thr):
+    """In-register masked-word math shared by both uplink launch paths.
+
+    q (bw, br, 512) f32; p1/p2 (br, 512) f32 broadcast over workers; beta
+    (bw, 1, 1); wq (bw, 1, 1) uint32; mask/rr (bw, br, 512) uint32; thr
+    uint32 scalar. Returns uint32 (bw, br, 512).
+    """
+    code = _codes_any(q, p1[None], p2[None], t, beta, alpha1)
+    field = (code + 1.0).astype(jnp.uint32)          # exact for {0, 1, 2}
+    field = rr_fields(field, rr, thr)                # THE oracle expression
+    return wq * field + mask                          # mod 2**32
+
+
+def _masked_pack_kernel(q_ref, p1_ref, p2_ref, beta_ref, wq_ref, mask_ref,
+                        rr_ref, scal_ref, thr_ref, out_ref):
+    t, alpha1 = scal_ref[0], scal_ref[1]
+    q = q_ref[...].astype(jnp.float32)
+    p1 = p1_ref[...].astype(jnp.float32)
+    p2 = p2_ref[...].astype(jnp.float32)
+    beta = beta_ref[...].astype(jnp.float32)[:, :, None]
+    wq = wq_ref[...][:, :, None]
+    out_ref[...] = _masked_fields(q, p1, p2, beta, t, alpha1, wq,
+                                  mask_ref[...], rr_ref[...], thr_ref[0])
+
+
+def _masked_master_kernel(q_ref, y_ref, p1_ref, p2_ref, scal_ref, sumw_ref,
+                          out_ref, acc_ref, *, block_workers: int,
+                          last_k: int):
+    """One (row block, worker block) step of the sum-then-unmask master.
+
+    ``acc_ref`` is the revisited uint32 accumulator output (its block index
+    ignores the worker axis; the wrapper discards it): step k == 0 zeroes
+    it, every step folds its workers mod 2**32, the last step unmasks —
+    integer de-bias, fixed-point descale — and writes the Eq. (3) combine
+    into ``out_ref``.
+    """
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+
+    acc = acc_ref[...]
+    for j in range(block_workers):        # modular: order can't change bits
+        acc = acc + y_ref[j]
+    acc_ref[...] = acc
+
+    @pl.when(k == last_k)
+    def _combine():
+        t, alpha0, smult = scal_ref[0], scal_ref[1], scal_ref[2]
+        ci = jax.lax.bitcast_convert_type(acc_ref[...] - sumw_ref[0],
+                                          jnp.int32)
+        coeff = ci.astype(jnp.float32) * smult
+        step = (p1_ref[...].astype(jnp.float32)
+                - p2_ref[...].astype(jnp.float32))
+        mult = jnp.where(t <= 1.0, alpha0, step)
+        q = q_ref[...].astype(jnp.float32)
+        out_ref[...] = (q - coeff * mult).astype(out_ref.dtype)
+
+
+def _masked_master_oneshot_kernel(q_ref, y_ref, p1_ref, p2_ref, scal_ref,
+                                  sumw_ref, out_ref, *, n_workers: int):
+    """Single-step plan (the cpu-interpret optimum): same modular math."""
+    acc = jnp.zeros((q_ref.shape[0], LANES * PACK), jnp.uint32)
+    for j in range(n_workers):
+        acc = acc + y_ref[j]
+    t, alpha0, smult = scal_ref[0], scal_ref[1], scal_ref[2]
+    ci = jax.lax.bitcast_convert_type(acc - sumw_ref[0], jnp.int32)
+    coeff = ci.astype(jnp.float32) * smult
+    step = p1_ref[...].astype(jnp.float32) - p2_ref[...].astype(jnp.float32)
+    mult = jnp.where(t <= 1.0, alpha0, step)
+    q = q_ref[...].astype(jnp.float32)
+    out_ref[...] = (q - coeff * mult).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows",
+                                             "block_workers"))
+def ternary_pack_masked_2d(q, p1, p2, t, beta, alpha1, wq, masks, rr_bits,
+                           rr_threshold, *, interpret: bool = True,
+                           block_rows: int = BLOCK_ROWS,
+                           block_workers: int = BLOCK_WORKERS):
+    """Masked uplink: all N workers' secure-agg wire words from ONE launch.
+
+    q (N, R, 512) float history views; p1/p2 (R, 512) shared public
+    history; ``beta`` a scalar or (N,) per-worker Eq. (5) threshold; wq
+    (N,) uint32 fixed-point Eq. (3) weights (public); masks/rr_bits
+    (N, R, 512) uint32 (pass the mask buffer for ``rr_bits`` when DP is
+    off — threshold 0 ignores it, and no zero tensor is streamed twice);
+    ``rr_threshold`` the uint16 flip threshold. ``t`` may be traced.
+    Returns uint32 (N, R, 512) — already masked when it first touches HBM.
+    """
+    n, rows, _ = q.shape
+    betas = jnp.broadcast_to(
+        jnp.asarray(beta, jnp.float32).reshape(-1, 1), (n, 1))
+    wq2 = jnp.asarray(wq, jnp.uint32).reshape(n, 1)
+    scal = jnp.stack([jnp.asarray(t, jnp.float32),
+                      jnp.asarray(alpha1, jnp.float32)])
+    thr = jnp.asarray([rr_threshold], jnp.uint32)
+    wide = LANES * PACK
+    if block_rows >= rows and block_workers >= n:
+        return pl.pallas_call(
+            _masked_pack_kernel,
+            in_specs=[pl.BlockSpec(q.shape, None),
+                      pl.BlockSpec(p1.shape, None),
+                      pl.BlockSpec(p2.shape, None),
+                      pl.BlockSpec(betas.shape, None),
+                      pl.BlockSpec(wq2.shape, None),
+                      pl.BlockSpec(masks.shape, None),
+                      pl.BlockSpec(rr_bits.shape, None),
+                      pl.BlockSpec(memory_space=pl.ANY),
+                      pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec((n, rows, wide), None),
+            out_shape=jax.ShapeDtypeStruct((n, rows, wide), jnp.uint32),
+            interpret=interpret,
+        )(q, p1, p2, betas, wq2, masks, rr_bits, scal, thr)
+    grid = (rows // block_rows, n // block_workers)
+    q_spec = pl.BlockSpec((block_workers, block_rows, wide),
+                          lambda i, k: (k, i, 0))
+    h_spec = pl.BlockSpec((block_rows, wide), lambda i, k: (i, 0))
+    w_spec = pl.BlockSpec((block_workers, 1), lambda i, k: (k, 0))
+    return pl.pallas_call(
+        _masked_pack_kernel,
+        grid=grid,
+        in_specs=[q_spec, h_spec, h_spec, w_spec, w_spec, q_spec, q_spec,
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((n, rows, wide), jnp.uint32),
+        interpret=interpret,
+    )(q, p1, p2, betas, wq2, masks, rr_bits, scal, thr)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows",
+                                             "block_workers"))
+def masked_master_update_2d(q_pilot, masked, sum_wq, p1, p2, t, alpha0,
+                            scale_mult, *, interpret: bool = True,
+                            block_rows: int = BLOCK_ROWS,
+                            block_workers: int = BLOCK_WORKERS):
+    """Sum-then-unmask Eq. (3) over masked uint32 wire words.
+
+    q_pilot/p1/p2 (R, 512) float; masked (N, R, 512) uint32; ``sum_wq``
+    the public scalar ``sum_k W_k`` (uint32); ``scale_mult`` the fixed-
+    point descale with the RR unbias folded in; ``t`` may be traced.
+    Returns (R, 512) in q_pilot.dtype. Bitwise invariant under every
+    (block_rows, block_workers) plan — modular accumulation is order-free.
+    """
+    n, rows, _ = masked.shape
+    scal = jnp.stack([jnp.asarray(t, jnp.float32),
+                      jnp.asarray(alpha0, jnp.float32),
+                      jnp.asarray(scale_mult, jnp.float32)])
+    sumw = jnp.asarray(sum_wq, jnp.uint32).reshape(1)
+    if block_rows >= rows and block_workers >= n:
+        return pl.pallas_call(
+            functools.partial(_masked_master_oneshot_kernel, n_workers=n),
+            in_specs=[pl.BlockSpec(q_pilot.shape, None),
+                      pl.BlockSpec(masked.shape, None),
+                      pl.BlockSpec(p1.shape, None),
+                      pl.BlockSpec(p2.shape, None),
+                      pl.BlockSpec(memory_space=pl.ANY),
+                      pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec(q_pilot.shape, None),
+            out_shape=jax.ShapeDtypeStruct(q_pilot.shape, q_pilot.dtype),
+            interpret=interpret,
+        )(q_pilot, masked, p1, p2, scal, sumw)
+    grid = (rows // block_rows, n // block_workers)
+    spec_f = pl.BlockSpec((block_rows, LANES * PACK), lambda i, k: (i, 0))
+    spec_y = pl.BlockSpec((block_workers, block_rows, LANES * PACK),
+                          lambda i, k: (k, i, 0))
+    out, _acc = pl.pallas_call(
+        functools.partial(_masked_master_kernel,
+                          block_workers=block_workers,
+                          last_k=n // block_workers - 1),
+        grid=grid,
+        in_specs=[spec_f, spec_y, spec_f, spec_f,
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=[spec_f, spec_f],
+        out_shape=[jax.ShapeDtypeStruct(q_pilot.shape, q_pilot.dtype),
+                   jax.ShapeDtypeStruct(q_pilot.shape, jnp.uint32)],
+        interpret=interpret,
+    )(q_pilot, masked, p1, p2, scal, sumw)
+    return out

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import fused_wire as fw
+from repro.kernels import masked_wire as mw
 from repro.kernels import pack2bit as pk
 from repro.kernels import master_update as mu
 from repro.kernels import ternary_encode as te
@@ -231,6 +232,62 @@ def flat_master_update(buf_q_pilot, packed_stacked, w, buf_p1, buf_p2, *,
         w.astype(jnp.float32), buf_p1.reshape(r4, wide),
         buf_p2.reshape(r4, wide), t, alpha0,
         interpret=interpret, block_rows=br, block_workers=bw)
+    return out.reshape(rows, LANES)
+
+
+def flat_ternary_pack_masked(bufs_q, buf_p1, buf_p2, *, t, beta,
+                             alpha1: float, wq, masks, rr_bits, rr_threshold,
+                             interpret: bool | None = None,
+                             block_rows: int | None = None,
+                             block_workers: int | None = None):
+    """Masked (secure-agg) uplink over FlatParams buffers: (N, rows, 128)
+    float -> (N, rows//4, 512) uint32 masked wire words in ONE launch.
+
+    ``wq`` (N,) uint32 fixed-point Eq. (3) weights; ``masks``/``rr_bits``
+    (N, rows//4, 512) uint32 (pass ``masks`` again for ``rr_bits`` when DP
+    is off); ``rr_threshold`` the uint16 flip threshold. ``t`` may be
+    traced; ``beta`` a scalar or per-worker (N,) vector. Block plans
+    resolve through the ``kernels.tune`` table (kind ``uplink_masked``,
+    falling back to the ``uplink_stacked`` plan when untuned) — every plan
+    produces identical bits.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    n, rows, _ = bufs_q.shape
+    r4 = rows // fw.PACK
+    wide = LANES * fw.PACK
+    br, bw = _stacked_plan("uplink_masked", r4, n, block_rows,
+                           block_workers, interpret)
+    return mw.ternary_pack_masked_2d(
+        bufs_q.reshape(n, r4, wide), buf_p1.reshape(r4, wide),
+        buf_p2.reshape(r4, wide), t, beta, alpha1, wq, masks, rr_bits,
+        rr_threshold, interpret=interpret, block_rows=br, block_workers=bw)
+
+
+def flat_masked_master_update(buf_q_pilot, masked, sum_wq, buf_p1, buf_p2,
+                              *, t, alpha0: float, scale_mult: float,
+                              interpret: bool | None = None,
+                              block_rows: int | None = None,
+                              block_workers: int | None = None):
+    """Sum-then-unmask Eq. (3) over the masked uint32 wire words.
+
+    buf_* (rows, 128) float; masked (N, rows//4, 512) uint32; ``sum_wq``
+    the public scalar sum of the fixed-point weights; ``scale_mult`` the
+    fixed-point descale with the RR unbias folded in. ``t`` may be traced.
+    Returns the new global buffer, (rows, 128) in buf_q_pilot.dtype —
+    bitwise invariant under every block plan (modular accumulation is
+    order-free; the oracle is ``repro.privacy.ref.masked_master_ref``).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    rows = buf_q_pilot.shape[0]
+    n = masked.shape[0]
+    r4 = rows // fw.PACK
+    wide = LANES * fw.PACK
+    br, bw = _stacked_plan("master_masked", r4, n, block_rows,
+                           block_workers, interpret)
+    out = mw.masked_master_update_2d(
+        buf_q_pilot.reshape(r4, wide), masked, sum_wq,
+        buf_p1.reshape(r4, wide), buf_p2.reshape(r4, wide), t, alpha0,
+        scale_mult, interpret=interpret, block_rows=br, block_workers=bw)
     return out.reshape(rows, LANES)
 
 

@@ -39,7 +39,15 @@ import jax.numpy as jnp
 BLOCK_ROWS = 64
 BLOCK_WORKERS = 1
 
-KINDS = ("uplink", "uplink_stacked", "master")
+KINDS = ("uplink", "uplink_stacked", "master", "uplink_masked",
+         "master_masked")
+
+# Masked kernels share the grid geometry of their plaintext counterparts
+# (same block shapes over the same (rows, N) iteration space), so an
+# untuned masked kind borrows the unmasked kind's tuned plan before
+# falling back to the backend heuristic.
+MASKED_FALLBACK = {"uplink_masked": "uplink_stacked",
+                   "master_masked": "master"}
 
 # (kind, rows, n_workers, backend) -> {"block_rows": int, "block_workers": int}
 _TABLE: dict[tuple[str, int, int, str], dict] = {}
@@ -105,6 +113,9 @@ def lookup(kind: str, rows: int, n_workers: int = 1, *,
     """
     backend = backend_tag(interpret)
     plan = _TABLE.get((kind, rows, max(1, n_workers), backend))
+    if plan is None and kind in MASKED_FALLBACK:
+        plan = _TABLE.get((MASKED_FALLBACK[kind], rows, max(1, n_workers),
+                           backend))
     if plan is None:
         plan = default_plan(kind, rows, n_workers, backend)
     return plan["block_rows"], plan["block_workers"]
@@ -238,6 +249,56 @@ def autotune_master(rows: int, n_workers: int, *,
             block_workers=plan["block_workers"])
 
     return _sweep("master", rows, n_workers, run_plan,
+                  interpret=itp, reps=reps)
+
+
+def _masked_inputs(rows: int, n_workers: int, seed: int):
+    """Shared random operands of the masked-kernel sweeps."""
+    from repro.kernels import fused_wire as fw
+    k = jax.random.PRNGKey(seed)
+    wide = fw.LANES * fw.PACK
+    q = jax.random.normal(k, (n_workers, rows, wide))
+    p1 = jax.random.normal(jax.random.fold_in(k, 1), (rows, wide))
+    p2 = jax.random.normal(jax.random.fold_in(k, 2), (rows, wide))
+    masks = jax.random.bits(jax.random.fold_in(k, 3),
+                            (n_workers, rows, wide), jnp.uint32)
+    wq = jnp.full((n_workers,), (1 << 24) // max(n_workers, 1), jnp.uint32)
+    return q, p1, p2, masks, wq
+
+
+def autotune_masked_uplink(rows: int, n_workers: int, *,
+                           interpret: bool | None = None, reps: int = 2,
+                           seed: int = 0) -> dict:
+    """Timed sweep of the masked-uplink (secure-agg) plans for (rows, N)."""
+    from repro.kernels import masked_wire as mw
+    itp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    q, p1, p2, masks, wq = _masked_inputs(rows, n_workers, seed)
+
+    def run_plan(plan):
+        return mw.ternary_pack_masked_2d(
+            q, p1, p2, 3, 0.2, 0.01, wq, masks, masks, 0, interpret=itp,
+            block_rows=plan["block_rows"],
+            block_workers=plan["block_workers"])
+
+    return _sweep("uplink_masked", rows, n_workers, run_plan,
+                  interpret=itp, reps=reps)
+
+
+def autotune_masked_master(rows: int, n_workers: int, *,
+                           interpret: bool | None = None, reps: int = 2,
+                           seed: int = 0) -> dict:
+    """Timed sweep of the sum-then-unmask master plans for (rows, N)."""
+    from repro.kernels import masked_wire as mw
+    itp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    q, p1, p2, masks, wq = _masked_inputs(rows, n_workers, seed)
+
+    def run_plan(plan):
+        return mw.masked_master_update_2d(
+            q[0], masks, jnp.sum(wq), p1, p2, 3, 0.01, 2.0 ** -24,
+            interpret=itp, block_rows=plan["block_rows"],
+            block_workers=plan["block_workers"])
+
+    return _sweep("master_masked", rows, n_workers, run_plan,
                   interpret=itp, reps=reps)
 
 

@@ -1,0 +1,63 @@
+"""PrivacyAccountant — per-round (eps, delta) composition as a pytree.
+
+The accountant is four device scalars, which makes it a valid ``lax.scan``
+carry: it rides inside :class:`repro.fed.rounds.RoundState`, is updated by
+``round_step`` whenever the round's wire ran the DP mechanism, serializes
+through ``repro.checkpoint`` with the rest of the state, and survives a
+mid-federation resume bit-exactly.
+
+Two read-outs of the same ledger:
+
+* **basic composition** — ``eps_total = sum_t eps_t`` (pure DP adds up);
+* **advanced composition** (Dwork–Rothblum–Vadhan, heterogeneous form) —
+  for any ``delta > 0``,
+
+      eps(delta) = sqrt(2 ln(1/delta) sum_t eps_t^2)
+                   + sum_t eps_t (e^{eps_t} - 1)
+
+  which beats the linear bound once ``T eps^2`` is small; the accountant
+  keeps ``sum eps^2`` and ``sum eps(e^eps - 1)`` so both read-outs are O(1)
+  regardless of how many rounds were composed.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PrivacyAccountant(NamedTuple):
+    """Running per-coordinate (eps, delta) ledger over composed rounds."""
+    spent_rounds: jax.Array   # int32 scalar — rounds that ran the mechanism
+    eps_sum: jax.Array        # float32 — sum_t eps_t
+    eps_sq_sum: jax.Array     # float32 — sum_t eps_t^2
+    eps_lin_sum: jax.Array    # float32 — sum_t eps_t (e^{eps_t} - 1)
+
+    @classmethod
+    def zero(cls) -> "PrivacyAccountant":
+        return cls(spent_rounds=jnp.asarray(0, jnp.int32),
+                   eps_sum=jnp.asarray(0.0, jnp.float32),
+                   eps_sq_sum=jnp.asarray(0.0, jnp.float32),
+                   eps_lin_sum=jnp.asarray(0.0, jnp.float32))
+
+    def add(self, eps) -> "PrivacyAccountant":
+        """Compose one round of a pure-eps mechanism (traceable)."""
+        e = jnp.asarray(eps, jnp.float32)
+        return PrivacyAccountant(
+            spent_rounds=self.spent_rounds + 1,
+            eps_sum=self.eps_sum + e,
+            eps_sq_sum=self.eps_sq_sum + e * e,
+            eps_lin_sum=self.eps_lin_sum + e * (jnp.exp(e) - 1.0))
+
+    def epsilon(self, delta: float | None = None) -> jax.Array:
+        """Total eps spent: basic composition when ``delta`` is None, the
+        advanced-composition bound at ``delta`` otherwise."""
+        if delta is None:
+            return self.eps_sum
+        return (jnp.sqrt(2.0 * jnp.log(1.0 / delta) * self.eps_sq_sum)
+                + self.eps_lin_sum)
+
+    def best_epsilon(self, delta: float) -> jax.Array:
+        """min(basic, advanced) — advanced only wins for long federations."""
+        return jnp.minimum(self.epsilon(), self.epsilon(delta))

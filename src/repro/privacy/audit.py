@@ -1,0 +1,166 @@
+"""Traced-program leakage audits — §4.2 enforcement for both runtimes.
+
+The leakage ledger (``repro.core.privacy``) records what crosses the
+worker→master boundary; these helpers *enforce* the policy on the traced
+round program itself, so a runtime can fail fast at setup instead of
+trusting its drivers. Auditing works on jaxprs: traces run against
+``ShapeDtypeStruct`` specs (never real data, and safe to call while an
+outer jit trace is active).
+
+Two boundaries are audited:
+
+* **Simulator** (:func:`check_round_program`): in ``round_step`` the
+  master-side math is the final pallas launch. Its float operands must be
+  single-buffer slabs (the pilot gather + public history) — no float
+  operand stacked over the worker axis may reach it, i.e. non-pilot
+  full-precision parameters never enter master-side compute. On the masked
+  wire path, additionally no plaintext ternary-code tensor (int8/uint8) may
+  materialize anywhere in the program outside kernel bodies — codes exist
+  only in VMEM registers and leave the worker already masked.
+* **Distributed** (:func:`check_fed_collectives`): what crosses between
+  fed instances is exactly the collective payloads. No float payload
+  stacked over the fed axis may cross (the pilot travels as a masked psum
+  of a single slab), and on the masked wire no int8/uint8 code payload may
+  cross — only mod-2**32 masked words.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.privacy import LeakageError
+from repro.utils import iter_jaxpr_eqns
+
+#: Primitives that move data between fed instances (jax names across
+#: versions: psum_scatter lowers to reduce_scatter).
+COLLECTIVE_PRIMITIVES = frozenset({
+    "psum", "all_gather", "psum_scatter", "reduce_scatter", "all_to_all",
+    "ppermute", "pmax", "pmin",
+})
+
+_CODE_DTYPE_NAMES = ("int8", "uint8")
+
+
+def _is_code_dtype(dtype) -> bool:
+    return str(dtype) in _CODE_DTYPE_NAMES
+
+
+def _is_float_dtype(dtype) -> bool:
+    # guarded: extended dtypes (PRNG keys) reject jnp.issubdtype
+    try:
+        return jnp.issubdtype(dtype, jnp.floating)
+    except TypeError:
+        return False
+
+
+# A per-worker float payload this small is protocol metadata (Eq. (3)
+# weights, costs, goodness — all public scalars per §4.2), not a parameter
+# buffer; the smallest real buffer slab is one (8, 128) tile.
+_SCALAR_PAYLOAD_MAX = 8
+
+
+def _stacked_float_buffer(shape, dtype, n: int) -> bool:
+    """True when (shape, dtype) is a float tensor stacked over the worker
+    axis with real per-worker volume — i.e. parameter-bearing, not the
+    public per-worker scalars the protocol always shares."""
+    if not _is_float_dtype(dtype) or len(shape) < 1 or shape[0] != n:
+        return False
+    per_worker = 1
+    for d in shape[1:]:
+        per_worker *= d
+    return per_worker > _SCALAR_PAYLOAD_MAX
+
+
+def as_specs(tree: Any) -> Any:
+    """Arrays -> ShapeDtypeStructs (non-arrays pass through) so audits can
+    trace a program without touching real data."""
+    return jax.tree_util.tree_map(
+        lambda x: (jax.ShapeDtypeStruct(x.shape, x.dtype)
+                   if hasattr(x, "shape") and hasattr(x, "dtype") else x),
+        tree)
+
+
+def _jaxpr_of(fn: Callable, *args, **kwargs):
+    specs = as_specs((args, kwargs))
+    return jax.make_jaxpr(lambda a, k: fn(*a, **k))(*specs).jaxpr
+
+
+def collective_payloads(fn: Callable, *args, **kwargs) -> list[dict]:
+    """Every collective operand in ``fn``'s traced program:
+    ``{"primitive", "shape", "dtype"}`` per payload tensor."""
+    out = []
+    for eqn in iter_jaxpr_eqns(_jaxpr_of(fn, *args, **kwargs)):
+        if eqn.primitive.name in COLLECTIVE_PRIMITIVES:
+            for v in eqn.invars:
+                aval = getattr(v, "aval", None)
+                if aval is not None and getattr(aval, "shape", None) is not None:
+                    out.append({"primitive": eqn.primitive.name,
+                                "shape": tuple(aval.shape),
+                                "dtype": str(aval.dtype)})
+    return out
+
+
+def check_fed_collectives(fn: Callable, *args, n_fed: int,
+                          masked: bool = False, **kwargs) -> dict:
+    """Audit a distributed sync program's cross-instance payloads.
+
+    Raises :class:`LeakageError` when a floating-point payload stacked over
+    the fed axis crosses a collective (a gather of full-precision worker
+    params), or — with ``masked=True`` — when any plaintext int8/uint8 code
+    payload crosses at all. Returns a summary for ledger recording.
+    """
+    payloads = collective_payloads(fn, *args, **kwargs)
+    for p in payloads:
+        if _stacked_float_buffer(p["shape"], p["dtype"], n_fed):
+            raise LeakageError(
+                f"full-precision payload stacked over the fed axis crosses "
+                f"a {p['primitive']}: shape {p['shape']} {p['dtype']}")
+        if masked and _is_code_dtype(p["dtype"]):
+            raise LeakageError(
+                f"plaintext ternary codes cross a {p['primitive']} on the "
+                f"masked wire: shape {p['shape']} {p['dtype']}")
+    return {"boundary": "fed-collectives", "n_payloads": len(payloads),
+            "masked": masked}
+
+
+def check_round_program(fn: Callable, *args, n_workers: int,
+                        masked: bool = False, **kwargs) -> dict:
+    """Audit a simulator round program (``round_step`` or a jitted wrapper).
+
+    The final pallas launch is the master update; none of its float
+    operands may be stacked over the worker axis (the only float inputs are
+    the dynamically gathered pilot slab and the public history). With
+    ``masked=True``, additionally assert that no int8/uint8 ternary-code
+    tensor materializes anywhere outside kernel bodies — the packed
+    plaintext wire buffer of the unmasked path must not exist.
+    """
+    jaxpr = _jaxpr_of(fn, *args, **kwargs)
+    launches = [e for e in iter_jaxpr_eqns(jaxpr, into_pallas=False)
+                if e.primitive.name == "pallas_call"]
+    if not launches:
+        raise LeakageError("no kernel launch found to audit")
+    master = launches[-1]
+    for v in master.invars:
+        aval = getattr(v, "aval", None)
+        if aval is None or not getattr(aval, "shape", None):
+            continue
+        if _stacked_float_buffer(tuple(aval.shape), aval.dtype, n_workers):
+            raise LeakageError(
+                f"master launch consumes a float operand stacked over the "
+                f"worker axis: shape {tuple(aval.shape)} {aval.dtype} — "
+                f"non-pilot full-precision params crossed the boundary")
+    if masked:
+        for eqn in iter_jaxpr_eqns(jaxpr, into_pallas=False):
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is None:
+                    continue
+                if _is_code_dtype(getattr(aval, "dtype", None)):
+                    raise LeakageError(
+                        f"plaintext code tensor materialized on the masked "
+                        f"wire path: {eqn.primitive.name} -> "
+                        f"{tuple(aval.shape)} {aval.dtype}")
+    return {"boundary": "round-step", "n_launches": len(launches),
+            "masked": masked}

@@ -1,0 +1,62 @@
+"""Local-DP ternary randomized response on the 2-bit wire codes.
+
+The mechanism is the natural 3-ary randomized response over the biased
+field alphabet {0, 1, 2} (code + 1): with probability ``1 - p`` report the
+true field, else report a uniform draw from all three symbols. Per round
+and per coordinate this is pure eps-DP with
+
+    e^eps = P[out = v | in = v] / P[out = v | in = v'] =
+          = (1 - p + p/3) / (p/3)          =>  eps = ln((3 - 2p) / p).
+
+Both the flip decision and the replacement symbol come from ONE uint32 per
+element (stateless: ``bits(fold_in(root, t))``): the flip compares the low
+16 bits against a quantized threshold (so ``p`` lives on a 1/65536 grid —
+``PrivacySpec`` reports the realized values), the replacement is the high
+16 bits mod 3 (bias 1/65536 — negligible and identical in kernel and
+oracle). Low and high halves of a threefry word are independent, so the
+two decisions don't correlate.
+
+Unbiasing: E[RR(field)] = (1 - p) field + p (the uniform mean over
+{0, 1, 2} is 1), so after the master subtracts ``sum_k W_k`` (the de-bias
+that converts fields to codes) the aggregated coefficient carries exactly a
+factor ``1 - p``; dividing by it (folded into ``PrivacySpec.scale_mult``)
+makes the *expected* master update equal the noiseless one.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+def rr_bits(seed: int, t, shape: tuple) -> jax.Array:
+    """The round's randomized-response bit plane: uint32 of ``shape``,
+    keyed by the (possibly traced) round index only — resume-stable."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), t)
+    return jax.random.bits(key, tuple(shape), jnp.uint32)
+
+
+def rr_bits_worker(seed: int, t, worker_idx, shape: tuple,
+                   shard_idx=0) -> jax.Array:
+    """One worker's RR bit plane over its model-shard slab — the
+    distributed form, keyed by (round, worker, model shard). Like the
+    pairwise masks, the stream is per-shard (the flat layout's padding —
+    and so the element indexing — depends on the shard count), which is
+    why cross-mesh bitwise parity is a DP-off property; with DP on the
+    mechanism is still identical in distribution on every mesh."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), t)
+    key = jax.random.fold_in(key, worker_idx)
+    return jax.random.bits(jax.random.fold_in(key, shard_idx),
+                           tuple(shape), jnp.uint32)
+
+
+def rr_fields(fields: jax.Array, bits: jax.Array, threshold) -> jax.Array:
+    """Apply 3-ary RR to uint32 biased fields {0, 1, 2}. ``threshold`` is
+    the uint16 flip threshold (``PrivacySpec.rr_threshold``); 0 = identity.
+    This exact expression is what the masked uplink kernel computes
+    in-register — kernel vs this oracle is a bitwise comparison."""
+    # Constants are built in-trace (not captured module-level arrays) so
+    # this very function is callable inside the Pallas kernel body — the
+    # kernel/oracle bitwise identity is one expression, not two copies.
+    thr = jnp.asarray(threshold, jnp.uint32)
+    flip = (bits & jnp.uint32(0xFFFF)) < thr
+    rep = jax.lax.shift_right_logical(bits, jnp.uint32(16)) % jnp.uint32(3)
+    return jnp.where(flip, rep, fields)

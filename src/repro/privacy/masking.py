@@ -1,0 +1,139 @@
+"""Pairwise additive masks for secure aggregation — stateless, per-round.
+
+Classic pairwise masking (Bonawitz et al., adapted to the FedPC wire): every
+unordered worker pair ``(k, l)``, ``k < l``, shares a seed; each round both
+derive the same uint32 mask tensor ``m_kl = bits(fold_in(seed_kl, t))`` and
+worker ``k`` *adds* it while worker ``l`` *subtracts* it (mod 2**32). The
+net mask of worker ``k`` is
+
+    M_k = sum_{l > k} m_kl - sum_{l < k} m_lk        (mod 2**32)
+
+and ``sum_k M_k = 0`` exactly — integer cancellation, no epsilon of float
+error, independent of summation order or reduction topology (modular
+addition is associative+commutative), which is what lets the distributed
+runtime reduce with ``psum_scatter + all_gather`` and stay bit-identical to
+a replicated sum.
+
+Everything is stateless: seeds chain from one public root via ``fold_in``
+(a real deployment would run a pairwise key agreement; the simulation's
+root-seed derivation stands in for it — see the README threat model), and
+the round index folds in last, so resumed runs regenerate the identical
+mask schedule. Under partial participation the masks of a pair are active
+only when BOTH endpoints are sampled (the participation mask is public), so
+the cancellation holds over exactly the reporting set.
+
+Cost: the simulator materializes all ``N(N-1)/2`` pair masks per round
+(the O(N^2) price of pairwise secure aggregation); each distributed fed
+instance generates ``N`` slab-sized pair streams — its own ``N-1`` plus
+one statically unavoidable self-pair stream whose sign is zero (the worker
+index is a traced mesh index, so the l == idx case cannot be pruned at
+trace time).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def pair_index(i, j, n: int):
+    """Symmetric pair id of the unordered pair {i, j} in [0, n^2): both
+    endpoints derive the same id (min-major), so both fold the same seed."""
+    lo = jnp.minimum(i, j)
+    hi = jnp.maximum(i, j)
+    return lo * n + hi
+
+
+def pair_incidence(n: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Static pair structure for an N-worker cohort.
+
+    Returns ``(C, i_idx, j_idx)`` where pairs are enumerated ``(i, j)`` with
+    ``i < j``; ``C`` is the (n, P) signed incidence matrix (+1 for the lower
+    endpoint, -1 for the upper — ``net = C @ pair_masks`` mod 2**32) and
+    ``i_idx``/``j_idx`` are the (P,) endpoint indices.
+    """
+    pairs = [(i, j) for i in range(n) for j in range(i + 1, n)]
+    p = len(pairs)
+    c = np.zeros((n, p), np.int32)
+    for col, (i, j) in enumerate(pairs):
+        c[i, col] = 1
+        c[j, col] = -1
+    i_idx = np.asarray([i for i, _ in pairs], np.int32)
+    j_idx = np.asarray([j for _, j in pairs], np.int32)
+    return c, i_idx, j_idx
+
+
+def _pair_round_bits(seed: int, pid, t, shape) -> jax.Array:
+    """The uint32 mask tensor of one pair for round ``t`` (both may be
+    traced): ``bits(fold_in(fold_in(root, pid), t))``."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), pid)
+    return jax.random.bits(jax.random.fold_in(key, t), shape, jnp.uint32)
+
+
+def net_masks(seed: int, n: int, t, shape: tuple, *,
+              participation=None) -> jax.Array:
+    """Every worker's net additive mask for round ``t``: uint32
+    ``(n, *shape)`` summing to exactly zero mod 2**32 over the active set.
+
+    ``t`` may be traced (the round index inside ``scan_rounds``).
+    ``participation`` is an optional public (n,) 0/1 mask: a pair's mask is
+    active only when both endpoints are sampled, so the masks of exactly
+    the reporting workers cancel. Non-participants get an all-zero mask
+    (they contribute nothing to the aggregate anyway — their weight is 0).
+    """
+    if n < 2:
+        return jnp.zeros((n,) + tuple(shape), jnp.uint32)
+    c, i_idx, j_idx = pair_incidence(n)
+    pids = i_idx.astype(np.int64) * n + j_idx
+    # jnp.array (not asarray): constants must embed, not device_put — the
+    # round program stays free of host-sync primitives.
+    bits = jax.vmap(
+        lambda pid: _pair_round_bits(seed, pid, t, tuple(shape)))(
+        jnp.array(pids, jnp.int32))                         # (P, *shape)
+    signs = jnp.array(c, jnp.int32)                          # (n, P)
+    if participation is not None:
+        m = (jnp.asarray(participation) > 0).astype(jnp.int32)
+        signs = signs * (m[i_idx] * m[j_idx])[None, :]
+    # Signed modular sum: int32 dot wraps exactly like uint32 addition.
+    net = jnp.tensordot(signs,
+                        jax.lax.bitcast_convert_type(bits, jnp.int32),
+                        axes=1)
+    return jax.lax.bitcast_convert_type(net, jnp.uint32)
+
+
+def net_mask_slab(seed: int, idx, n: int, t, shape: tuple, shard_idx=0, *,
+                  participation=None) -> jax.Array:
+    """One worker's net mask over its model-shard slab — the distributed
+    form of :func:`net_masks` (worker ``idx`` and ``shard_idx`` may be
+    traced mesh indices). Each (pair, round, model shard) gets its own
+    stateless stream; cancellation is elementwise per shard because both
+    endpoints fold the same ``shard_idx``. The loop spans all ``n``
+    workers — the self-pair (and, under participation, inactive pairs)
+    still generate a stream that is then sign-zeroed, because ``idx`` is
+    traced and the case cannot be pruned statically.
+    """
+    if n < 2:
+        return jnp.zeros(tuple(shape), jnp.uint32)
+    total = jnp.zeros(tuple(shape), jnp.int32)
+    for l in range(n):
+        pid = pair_index(idx, l, n)
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), pid)
+        key = jax.random.fold_in(key, t)
+        bits = jax.random.bits(jax.random.fold_in(key, shard_idx),
+                               tuple(shape), jnp.uint32)
+        sign = jnp.where(l == idx, 0,
+                         jnp.where(idx < l, 1, -1)).astype(jnp.int32)
+        if participation is not None:
+            m = (jnp.asarray(participation) > 0).astype(jnp.int32)
+            sign = sign * m[l] * m[idx]
+        total = total + sign * jax.lax.bitcast_convert_type(bits, jnp.int32)
+    return jax.lax.bitcast_convert_type(total, jnp.uint32)
+
+
+def quantize_weights(w: jax.Array, fixpoint_bits: int) -> jax.Array:
+    """Public Eq. (3) weights -> uint32 fixed point:
+    ``W_k = round(w_k 2**bits)``. ``sum_k w_k <= 1`` keeps every product
+    ``W_k * field`` (field <= 2) and the cohort sum well inside 32 bits."""
+    scale = float(1 << fixpoint_bits)
+    return jnp.round(jnp.asarray(w, jnp.float32) * scale).astype(jnp.uint32)

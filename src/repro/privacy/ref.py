@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for the masked wire kernels (bitwise ground truth).
+
+Mirrors ``repro.kernels.ref`` for the privacy subsystem: the same math as
+``repro.kernels.masked_wire`` expressed per-step in jnp, on the kernels'
+flat ``(N, rows/4, 512)`` views. Parity tests compare the Pallas kernels
+against these *under jit* and assert exact byte equality — the masked wire
+is integer end-to-end, so there is no allclose anywhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.privacy.dp import rr_fields
+
+
+def codes_any_ref(q, p1, p2, t, beta, alpha1) -> jax.Array:
+    """Eq. (4) at t <= 1 / Eq. (5) after, float {-1, 0, +1} — the exact
+    expression of the fused kernels' ``_codes_any`` (shared ``q - p1``
+    evolution, branch selected on the traced round index)."""
+    q = q.astype(jnp.float32)
+    p1 = p1.astype(jnp.float32)
+    p2 = p2.astype(jnp.float32)
+    delta = q - p1
+    step = p1 - p2
+    c5 = jnp.where(jnp.abs(delta) >= beta * jnp.abs(step),
+                   jnp.sign(delta * step), 0.0)
+    c4 = ((delta > alpha1).astype(jnp.float32)
+          - (delta < -alpha1).astype(jnp.float32))
+    return jnp.where(jnp.asarray(t, jnp.float32) <= 1.0, c4, c5)
+
+
+def masked_codes_ref(q, p1, p2, t, beta, alpha1, wq, masks, bits,
+                     threshold) -> jax.Array:
+    """Masked uplink oracle: ternarize -> bias -> RR -> fixed-point weight
+    -> add pairwise mask, all in uint32.
+
+    q (N, R, 512) float; p1/p2 (R, 512); beta scalar or (N,); wq (N,)
+    uint32 fixed-point weights; masks/bits (N, R, 512) uint32;
+    ``threshold`` the uint16 RR flip threshold (0 = RR off). Returns
+    uint32 (N, R, 512) — one masked word per parameter.
+    """
+    beta_b = jnp.asarray(beta, jnp.float32).reshape(-1, 1, 1)
+    code = codes_any_ref(q, p1[None], p2[None], t, beta_b, alpha1)
+    field = (code + 1.0).astype(jnp.uint32)
+    field = rr_fields(field, bits, threshold)
+    return wq.reshape(-1, 1, 1) * field + masks
+
+
+def masked_master_ref(q_pilot, masked, sum_wq, p1, p2, t, alpha0,
+                      scale_mult) -> jax.Array:
+    """Sum-then-unmask master oracle: modular sum of the masked worker
+    words (pairwise masks cancel exactly), integer de-bias by the public
+    ``sum_wq = sum_k W_k``, fixed-point descale (+ RR unbias) via
+    ``scale_mult``, then the Eq. (3) combine.
+
+    masked (N, R, 512) uint32; q_pilot/p1/p2 (R, 512) float; ``t`` may be
+    traced. Returns (R, 512) in q_pilot.dtype. Order-independent by
+    construction (modular addition), so this single oracle covers every
+    kernel block plan AND every collective reduction topology.
+
+    For BITWISE comparison against the kernel, jit this oracle with ``t``
+    and ``scale_mult`` passed as traced f32 scalars — the kernel receives
+    them as runtime operands, and baking them as constants instead lets
+    XLA:CPU make a different (1-ulp) FMA-contraction choice in the final
+    ``q - coeff * mult`` when ``scale_mult`` is not a power of two.
+    """
+    s = jnp.sum(masked, axis=0, dtype=jnp.uint32)
+    ci = jax.lax.bitcast_convert_type(s - jnp.asarray(sum_wq, jnp.uint32),
+                                      jnp.int32)
+    coeff = ci.astype(jnp.float32) * jnp.asarray(scale_mult, jnp.float32)
+    step = p1.astype(jnp.float32) - p2.astype(jnp.float32)
+    mult = jnp.where(jnp.asarray(t, jnp.float32) <= 1.0, alpha0, step)
+    q = q_pilot.astype(jnp.float32)
+    return (q - coeff * mult).astype(q_pilot.dtype)

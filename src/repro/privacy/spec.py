@@ -1,0 +1,135 @@
+"""PrivacySpec — the one config object of the privacy-preserving wire.
+
+The spec bundles the three privacy pillars the wire path can switch on:
+
+* **Pairwise-masked secure aggregation** (``secure_agg``): every worker adds
+  a per-round additive mask to its fixed-point-weighted ternary fields
+  before they leave the device. Masks are derived from stateless *pairwise*
+  seeds (``fold_in(seed_kl, round)``) and sum to zero over the cohort, so
+  the master recovers exactly ``sum_k W_k field_k`` mod 2**32 — never an
+  individual worker's ternary directions. ``mask_seed=None`` turns masking
+  off while keeping the integer secure-agg wire format (the debug /
+  bitwise-reference configuration: because cancellation is exact in the
+  integer domain, masked and unmasked runs are bit-identical).
+* **Local-DP ternary randomized response** (``dp_epsilon``): each 2-bit
+  code is independently replaced, with probability ``flip_prob``, by a
+  uniform draw from {-1, 0, +1} — the natural 3-ary randomized-response
+  mechanism. Per round and per coordinate this is pure
+  ``eps_round``-DP; the master's de-bias step divides the aggregated
+  coefficient by ``1 - flip_prob`` so the expected update equals the
+  noiseless one.
+* **Accounting / enforcement**: ``delta`` parameterizes the advanced-
+  composition read-out of :class:`repro.privacy.accountant
+  .PrivacyAccountant`; ``enforce`` makes the runtimes audit their traced
+  round program against the §4.2 leakage policy at setup time
+  (``repro.privacy.audit``).
+
+Fixed-point weighting: Eq. (3) needs ``sum_k w_k T_k`` with *public*
+per-worker weights ``w_k = p_k beta_k``. Exact modular cancellation demands
+integers, so each worker scales its codes by ``W_k = round(w_k 2**fixpoint_
+bits)`` and the master multiplies the integer sum by ``2**-fixpoint_bits``
+(a power of two — the scaling itself is exact). Since ``sum_k w_k <= 1``,
+the true sum is bounded by ``2**(fixpoint_bits+1)`` and never wraps; the
+only approximation vs the float wire is the weight rounding
+(``|W_k/2**bits - w_k| <= 2**-(bits+1)``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+# The RR flip decision is drawn from the low 16 bits of a uint32, so the
+# flip probability is realized on a 1/65536 grid; flip_prob/eps_round report
+# the realized (quantized) values, and the unbias divides by exactly them.
+RR_RESOLUTION = 1 << 16
+
+# Largest per-round epsilon whose flip probability still rounds to a
+# non-zero threshold (p = 3/(e^eps + 2) >= 0.5/65536).
+MAX_DP_EPSILON = math.log(3.0 * RR_RESOLUTION / 0.5 - 2.0)
+
+# Smallest epsilon whose flip probability rounds BELOW 1.0: at p == 1 the
+# output is pure uniform noise (a degenerate eps=0 mechanism) and the
+# 1/(1-p) unbias is undefined — reject it at construction instead of
+# dividing by zero in the master's descale.
+MIN_DP_EPSILON = math.log(3.0 * RR_RESOLUTION / (RR_RESOLUTION - 0.5) - 2.0)
+
+
+@dataclass(frozen=True)
+class PrivacySpec:
+    """Configuration of the secure-aggregation + DP wire path."""
+    secure_agg: bool = True        # pairwise-masked integer aggregation
+    mask_seed: int | None = 0      # pairwise-seed root; None = masking off
+    fixpoint_bits: int = 24        # weight fixed-point scale (2**bits)
+    dp_epsilon: float | None = None  # per-round per-coordinate eps; None=off
+    dp_seed: int = 1               # randomized-response bit stream root
+    delta: float = 1e-5            # advanced-composition delta
+    enforce: bool = True           # audit runtimes' traced round programs
+
+    def __post_init__(self):
+        if not 8 <= self.fixpoint_bits <= 26:
+            raise ValueError(
+                f"fixpoint_bits must be in [8, 26] (weights sum to <= 1 and "
+                f"must stay exact in fp32/uint32), got {self.fixpoint_bits}")
+        if self.dp_epsilon is not None:
+            if not MIN_DP_EPSILON <= self.dp_epsilon <= MAX_DP_EPSILON:
+                raise ValueError(
+                    f"dp_epsilon must be in [{MIN_DP_EPSILON:.2e}, "
+                    f"{MAX_DP_EPSILON:.2f}] (the RR threshold quantizes to "
+                    f"1/{RR_RESOLUTION}; below the floor the flip "
+                    f"probability rounds to 1 and the unbias is undefined), "
+                    f"got {self.dp_epsilon}")
+        if not 0.0 < self.delta < 1.0:
+            raise ValueError(f"delta must be in (0, 1), got {self.delta}")
+
+    # -- derived switches ---------------------------------------------------
+
+    @property
+    def dp_on(self) -> bool:
+        return self.dp_epsilon is not None
+
+    @property
+    def masking_on(self) -> bool:
+        return self.secure_agg and self.mask_seed is not None
+
+    @property
+    def active(self) -> bool:
+        """Whether the round must take the masked integer wire path."""
+        return self.secure_agg or self.dp_on
+
+    # -- randomized response ------------------------------------------------
+
+    @property
+    def rr_threshold(self) -> int:
+        """uint16 flip threshold: flip when ``bits & 0xFFFF < threshold``.
+        Clamped to [1, 2**16 - 1]: a threshold of 2**16 would realize
+        p == 1 (pure noise, undefined unbias)."""
+        if not self.dp_on:
+            return 0
+        p = 3.0 / (math.exp(self.dp_epsilon) + 2.0)
+        return min(RR_RESOLUTION - 1, max(1, round(p * RR_RESOLUTION)))
+
+    @property
+    def flip_prob(self) -> float:
+        """The *realized* flip probability (threshold / 2**16)."""
+        return self.rr_threshold / RR_RESOLUTION
+
+    @property
+    def eps_round(self) -> float:
+        """Realized per-round per-coordinate epsilon of the 3-ary RR:
+        ``ln((3 - 2p) / p)`` for the quantized flip probability ``p``."""
+        if not self.dp_on:
+            return 0.0
+        p = self.flip_prob
+        return math.log((3.0 - 2.0 * p) / p)
+
+    # -- fixed-point weighting ----------------------------------------------
+
+    @property
+    def scale(self) -> float:
+        return float(1 << self.fixpoint_bits)
+
+    @property
+    def scale_mult(self) -> float:
+        """The master's single de-bias multiplier: the fixed-point descale
+        (exact power of two) folded with the RR unbias ``1/(1 - p)``."""
+        return (1.0 / self.scale) / (1.0 - self.flip_prob)

@@ -1,0 +1,348 @@
+"""Secure-aggregation wire kernels: the masked uplink, the sum-then-unmask
+master, and the privacy autotuner kinds.
+
+The contract under test:
+  * both masked kernels are BITWISE equal to the jnp oracles
+    (``repro.privacy.ref``, jitted with traced scalars) for every
+    (block_rows, block_workers) plan, n in {1, 8, 33}, both round
+    branches, RR on and off — the wire is integer end-to-end, so parity
+    is exact, never allclose;
+  * pairwise masks cancel EXACTLY: a masked aggregate is bit-identical to
+    the zero-mask aggregate (mod 2**32 cancellation), and the net masks
+    sum to zero — including under partial participation;
+  * with DP off the masked round differs from the plain float wire only
+    by the fixed-point weight rounding (<= 2**-(bits+1) per weight);
+  * the RR mechanism flips at the configured rate and unbiasing makes the
+    EXPECTED master update equal the noiseless one;
+  * either masked kernel is exactly ONE pallas launch under every plan;
+  * the tuner knows the masked kinds and falls back to the unmasked
+    kind's tuned plan when a masked entry is missing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, tune
+from repro.privacy import (PrivacySpec, masking, net_masks, quantize_weights,
+                           rr_bits, rr_fields)
+from repro.privacy import ref as pref
+from repro.utils import jaxpr_primitive_counts
+
+FIX_BITS = 24
+
+
+def _fixture(n, rows_flat, seed=0):
+    k = jax.random.PRNGKey(seed)
+    bufs_q = jax.random.normal(k, (n, rows_flat, 128))
+    p1 = jax.random.normal(jax.random.fold_in(k, 1), (rows_flat, 128))
+    p2 = jax.random.normal(jax.random.fold_in(k, 2), (rows_flat, 128))
+    w = jnp.linspace(0.01, 0.05, n)
+    if n > 2:
+        w = w.at[n // 2].set(0.0)           # the pilot
+    return bufs_q, p1, p2, w
+
+
+def _plans(r4, n):
+    cands = [(r4, n), (r4, 1), (None, None)]
+    for br in {max(1, r4 // 2), 3 if r4 % 3 == 0 else 1}:
+        if r4 % br == 0:
+            cands.append((br, 1))
+    for bw in (3, 11, 2, 4):
+        if n % bw == 0 and bw < n:
+            cands.append((r4, bw))
+    return cands
+
+
+# ---------------------------------------------------------------------------
+# Bitwise kernel-vs-oracle parity, every plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 8, 33])
+@pytest.mark.parametrize("t", [1, 3])
+@pytest.mark.parametrize("thr", [0, 3277])          # RR off / p = 0.05
+def test_masked_uplink_bitwise_every_plan(n, t, thr):
+    rows_flat = 96
+    r4 = rows_flat // 4
+    bufs_q, p1, p2, w = _fixture(n, rows_flat, seed=10 * n + t)
+    betas = jnp.linspace(0.1, 0.3, n)
+    wq = quantize_weights(w, FIX_BITS)
+    masks = net_masks(0, n, t, (r4, 512))
+    bits = rr_bits(1, t, (n, r4, 512))
+
+    oracle = jax.jit(lambda q, a, b, m, bt, tt: pref.masked_codes_ref(
+        q.reshape(n, r4, 512), a.reshape(r4, 512), b.reshape(r4, 512),
+        tt, betas, 0.01, wq, m, bt, thr))
+    want = np.asarray(oracle(bufs_q, p1, p2, masks, bits, jnp.float32(t)))
+    for br, bw in _plans(r4, n):
+        got = ops.flat_ternary_pack_masked(
+            bufs_q, p1, p2, t=t, beta=betas, alpha1=0.01, wq=wq,
+            masks=masks, rr_bits=bits, rr_threshold=thr, interpret=True,
+            block_rows=br, block_workers=bw)
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=f"plan ({br}, {bw})")
+
+
+@pytest.mark.parametrize("n", [1, 8, 33])
+@pytest.mark.parametrize("t", [1, 3])
+def test_masked_master_bitwise_every_plan(n, t):
+    rows_flat = 96
+    r4 = rows_flat // 4
+    bufs_q, p1, p2, w = _fixture(n, rows_flat, seed=5 * n + t)
+    wq = quantize_weights(w, FIX_BITS)
+    masks = net_masks(0, n, t, (r4, 512))
+    y = ops.flat_ternary_pack_masked(
+        bufs_q, p1, p2, t=t, beta=0.2, alpha1=0.01, wq=wq, masks=masks,
+        rr_bits=masks, rr_threshold=0, interpret=True)
+    q = jax.random.normal(jax.random.PRNGKey(99), (rows_flat, 128))
+    sm = 2.0 ** -FIX_BITS
+
+    # Traced scalars in the jitted oracle — the kernel gets them as runtime
+    # operands, and constant-baking flips XLA:CPU's FMA choice (see
+    # privacy/ref.py docstring).
+    oracle = jax.jit(lambda qq, yy, a, b, tt, ss: pref.masked_master_ref(
+        qq.reshape(r4, 512), yy, jnp.sum(wq), a.reshape(r4, 512),
+        b.reshape(r4, 512), tt, 0.01, ss))
+    want = np.asarray(oracle(q, y, p1, p2, jnp.float32(t),
+                             jnp.float32(sm))).reshape(rows_flat, 128)
+    for br, bw in _plans(r4, n):
+        got = ops.flat_masked_master_update(
+            q, y, jnp.sum(wq), p1, p2, t=t, alpha0=0.01, scale_mult=sm,
+            interpret=True, block_rows=br, block_workers=bw)
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=f"plan ({br}, {bw})")
+
+
+# ---------------------------------------------------------------------------
+# Mask cancellation: exact, in the integer domain
+# ---------------------------------------------------------------------------
+
+def test_net_masks_sum_to_zero():
+    for n in (2, 5, 8):
+        m = net_masks(7, n, 3, (6, 512))
+        total = jnp.sum(m, axis=0, dtype=jnp.uint32)
+        assert int(jnp.count_nonzero(total)) == 0
+    # partial participation: active pairs cancel over the sampled set
+    pm = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0])
+    m = net_masks(7, 5, 3, (6, 512), participation=pm)
+    total = jnp.sum(m * pm[:, None, None].astype(jnp.uint32), axis=0,
+                    dtype=jnp.uint32)
+    assert int(jnp.count_nonzero(total)) == 0
+    # non-participants carry a zero mask
+    assert int(jnp.count_nonzero(m[1])) == 0
+    assert int(jnp.count_nonzero(m[4])) == 0
+
+
+def test_masked_aggregate_bitwise_equals_unmasked():
+    """The whole point: with masks on, the master's output is bit-identical
+    to the zero-mask run — cancellation is exact, any residue would show."""
+    n, rows_flat = 6, 96
+    r4 = rows_flat // 4
+    bufs_q, p1, p2, w = _fixture(n, rows_flat, seed=3)
+    wq = quantize_weights(w, FIX_BITS)
+    masks = net_masks(11, n, 5, (r4, 512))
+    zeros = jnp.zeros_like(masks)
+    q = bufs_q[0]
+    outs = []
+    for m in (masks, zeros):
+        y = ops.flat_ternary_pack_masked(
+            bufs_q, p1, p2, t=5, beta=0.2, alpha1=0.01, wq=wq, masks=m,
+            rr_bits=m, rr_threshold=0, interpret=True)
+        outs.append(ops.flat_masked_master_update(
+            q, y, jnp.sum(wq), p1, p2, t=5, alpha0=0.01,
+            scale_mult=2.0 ** -FIX_BITS, interpret=True))
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+    # and a masked word stream looks nothing like the unmasked one
+    y_m = ops.flat_ternary_pack_masked(
+        bufs_q, p1, p2, t=5, beta=0.2, alpha1=0.01, wq=wq, masks=masks,
+        rr_bits=masks, rr_threshold=0, interpret=True)
+    y_u = ops.flat_ternary_pack_masked(
+        bufs_q, p1, p2, t=5, beta=0.2, alpha1=0.01, wq=wq, masks=zeros,
+        rr_bits=zeros, rr_threshold=0, interpret=True)
+    frac_equal = float(jnp.mean((y_m == y_u).astype(jnp.float32)))
+    assert frac_equal < 0.01, frac_equal
+
+
+def test_masked_vs_plain_float_wire_quantization_bound():
+    """DP off: the only masked-vs-plain difference is the fixed-point
+    weight rounding — bounded by sum_k |W_k/2^bits - w_k| * max|mult|."""
+    n, rows_flat = 8, 256
+    bufs_q, p1, p2, w = _fixture(n, rows_flat, seed=4)
+    wq = quantize_weights(w, FIX_BITS)
+    masks = net_masks(0, n, 3, (rows_flat // 4, 512))
+    y = ops.flat_ternary_pack_masked(
+        bufs_q, p1, p2, t=3, beta=0.2, alpha1=0.01, wq=wq, masks=masks,
+        rr_bits=masks, rr_threshold=0, interpret=True)
+    got = ops.flat_masked_master_update(
+        bufs_q[0], y, jnp.sum(wq), p1, p2, t=3, alpha0=0.01,
+        scale_mult=2.0 ** -FIX_BITS, interpret=True)
+    packed = ops.flat_ternary_pack_stacked(
+        bufs_q, p1, p2, t=3, beta=0.2, alpha1=0.01, interpret=True)
+    want = ops.flat_master_update(bufs_q[0], packed, w, p1, p2, t=3,
+                                  alpha0=0.01, interpret=True)
+    step_max = float(jnp.max(jnp.abs(p1 - p2)))
+    bound = n * 2.0 ** -(FIX_BITS + 1) * 2 * step_max + 1e-6
+    assert float(jnp.max(jnp.abs(got - want))) <= bound
+
+
+# ---------------------------------------------------------------------------
+# Randomized response: rate and unbiasedness
+# ---------------------------------------------------------------------------
+
+def test_rr_flip_rate_matches_epsilon():
+    spec = PrivacySpec(dp_epsilon=2.0)
+    p = spec.flip_prob
+    fields = jnp.ones((1 << 16,), jnp.uint32)          # all codes = 0
+    bits = jax.random.bits(jax.random.PRNGKey(0), fields.shape, jnp.uint32)
+    out = rr_fields(fields, bits, spec.rr_threshold)
+    changed = float(jnp.mean((out != fields).astype(jnp.float32)))
+    # P(output != input) = p * 2/3
+    assert abs(changed - p * 2.0 / 3.0) < 0.01
+    # epsilon bookkeeping is self-consistent
+    assert abs(spec.eps_round - np.log((3 - 2 * p) / p)) < 1e-9
+    # identity at threshold 0
+    np.testing.assert_array_equal(np.asarray(rr_fields(fields, bits, 0)),
+                                  np.asarray(fields))
+
+
+def test_rr_unbiasing_recovers_noiseless_update():
+    """E[masked master update] over the RR randomness == the noiseless
+    masked update (statistical, fixed seeds)."""
+    n, rows_flat, draws = 6, 32, 192
+    r4 = rows_flat // 4
+    bufs_q, p1, p2, w = _fixture(n, rows_flat, seed=6)
+    spec = PrivacySpec(dp_epsilon=2.0)     # flip_prob ~ 0.318
+    wq = quantize_weights(w, FIX_BITS)
+    zeros = jnp.zeros((n, r4, 512), jnp.uint32)
+    sm_dp = spec.scale_mult
+    q = bufs_q[0].reshape(r4, 512)
+    p1r, p2r = p1.reshape(r4, 512), p2.reshape(r4, 512)
+
+    def one(seed):
+        bits = jax.random.bits(jax.random.PRNGKey(seed),
+                               (n, r4, 512), jnp.uint32)
+        y = pref.masked_codes_ref(bufs_q.reshape(n, r4, 512), p1r, p2r, 3,
+                                  0.2, 0.01, wq, zeros, bits,
+                                  spec.rr_threshold)
+        return pref.masked_master_ref(q, y, jnp.sum(wq), p1r, p2r, 3,
+                                      0.01, sm_dp)
+
+    outs = jax.vmap(one)(jnp.arange(draws))
+    noiseless = pref.masked_master_ref(
+        q, pref.masked_codes_ref(bufs_q.reshape(n, r4, 512), p1r, p2r, 3,
+                                 0.2, 0.01, wq, zeros, zeros, 0),
+        jnp.sum(wq), p1r, p2r, 3, 0.01, 2.0 ** -FIX_BITS)
+    # Mean |error| of the AVERAGED update concentrates as 1/sqrt(draws) of
+    # a single draw's mean |error| iff the mechanism is unbiased; a
+    # residual bias (e.g. a wrong 1/(1-p) factor) would not shrink.
+    mean_err = float(jnp.mean(jnp.abs(jnp.mean(outs, axis=0) - noiseless)))
+    single_err = float(jnp.mean(jnp.abs(outs[0] - noiseless)))
+    assert single_err > 10 * mean_err      # noise is real ...
+    assert mean_err < 3.0 * single_err / np.sqrt(draws) + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Launch structure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("plan", [(None, None), (8, 1), (24, 4)])
+def test_masked_kernels_single_launch_every_plan(plan):
+    n, rows_flat = 8, 96
+    r4 = rows_flat // 4
+    br, bw = plan
+    bufs_q, p1, p2, w = _fixture(n, rows_flat)
+    wq = quantize_weights(w, FIX_BITS)
+    masks = jnp.zeros((n, r4, 512), jnp.uint32)
+    counts = jaxpr_primitive_counts(
+        lambda a, b, c, m: ops.flat_ternary_pack_masked(
+            a, b, c, t=3, beta=0.2, alpha1=0.01, wq=wq, masks=m,
+            rr_bits=m, rr_threshold=0, interpret=True, block_rows=br,
+            block_workers=bw),
+        bufs_q, p1, p2, masks)
+    assert counts.get("pallas_call") == 1, counts
+    y = jnp.zeros((n, r4, 512), jnp.uint32)
+    counts = jaxpr_primitive_counts(
+        lambda q, yy: ops.flat_masked_master_update(
+            q, yy, jnp.sum(wq), q, q, t=3, alpha0=0.01,
+            scale_mult=2.0 ** -FIX_BITS, interpret=True, block_rows=br,
+            block_workers=bw),
+        bufs_q[0], y)
+    assert counts.get("pallas_call") == 1, counts
+
+
+# ---------------------------------------------------------------------------
+# Tuner: masked kinds + fallback
+# ---------------------------------------------------------------------------
+
+def test_masked_kinds_registered():
+    assert "uplink_masked" in tune.KINDS
+    assert "master_masked" in tune.KINDS
+    assert tune.MASKED_FALLBACK == {"uplink_masked": "uplink_stacked",
+                                    "master_masked": "master"}
+
+
+def test_lookup_falls_back_to_unmasked_plan():
+    r4, n = 48, 6
+    keys = [(k, r4, n, "cpu-interpret")
+            for k in ("uplink_stacked", "master", "uplink_masked",
+                      "master_masked")]
+    try:
+        tune.set_plan("uplink_stacked", r4, n,
+                      {"block_rows": 24, "block_workers": 2},
+                      backend="cpu-interpret")
+        tune.set_plan("master", r4, n,
+                      {"block_rows": 16, "block_workers": 3},
+                      backend="cpu-interpret")
+        # untuned masked kinds borrow the unmasked plans ...
+        assert tune.lookup("uplink_masked", r4, n, interpret=True) == (24, 2)
+        assert tune.lookup("master_masked", r4, n, interpret=True) == (16, 3)
+        # ... until a masked entry exists, which then wins
+        tune.set_plan("uplink_masked", r4, n,
+                      {"block_rows": 48, "block_workers": 1},
+                      backend="cpu-interpret")
+        assert tune.lookup("uplink_masked", r4, n, interpret=True) == (48, 1)
+    finally:
+        for key in keys:
+            tune._TABLE.pop(key, None)
+
+
+def test_autotune_masked_sweeps_store_winners():
+    r4, n = 16, 4
+    keys = [("uplink_masked", r4, n, "cpu-interpret"),
+            ("master_masked", r4, n, "cpu-interpret")]
+    try:
+        rec = tune.autotune_masked_uplink(r4, n, interpret=True, reps=1)
+        assert rec["timings"] and all(r["us"] > 0 for r in rec["timings"])
+        assert keys[0] in tune._TABLE
+        rec_m = tune.autotune_masked_master(r4, n, interpret=True, reps=1)
+        assert keys[1] in tune._TABLE
+        assert rec_m["best"]["block_rows"] <= r4
+    finally:
+        for key in keys:
+            tune._TABLE.pop(key, None)
+
+
+def test_privacy_spec_validation():
+    from repro.privacy.spec import MAX_DP_EPSILON, MIN_DP_EPSILON
+    with pytest.raises(ValueError, match="dp_epsilon"):
+        PrivacySpec(dp_epsilon=1e-5)      # p rounds to 1: unbias undefined
+    with pytest.raises(ValueError, match="dp_epsilon"):
+        PrivacySpec(dp_epsilon=99.0)      # threshold rounds to 0: no-op RR
+    with pytest.raises(ValueError, match="fixpoint_bits"):
+        PrivacySpec(fixpoint_bits=30)
+    for eps in (MIN_DP_EPSILON, MAX_DP_EPSILON):   # boundaries construct
+        spec = PrivacySpec(dp_epsilon=eps)
+        assert 1 <= spec.rr_threshold <= (1 << 16) - 1
+        assert np.isfinite(spec.scale_mult)
+
+
+def test_quantize_weights_bounds():
+    w = jnp.asarray([0.0, 0.25, 1.0 / 3.0, 0.5])
+    wq = quantize_weights(w, FIX_BITS)
+    back = np.asarray(wq, np.float64) / (1 << FIX_BITS)
+    assert np.max(np.abs(back - np.asarray(w, np.float64))) \
+        <= 2.0 ** -(FIX_BITS + 1)
+    # pair structure sanity
+    c, i_idx, j_idx = masking.pair_incidence(5)
+    assert c.shape == (5, 10)
+    np.testing.assert_array_equal(c.sum(axis=0), 0)
