@@ -60,7 +60,8 @@ def iter_entries(node, path=""):
             # so reordering does not misalign the comparison.
             if isinstance(item, dict):
                 tag = "/".join(
-                    str(item[k]) for k in ("params", "n_workers", "rounds",
+                    str(item[k]) for k in ("params", "n_workers",
+                                           "modulus_bits", "rounds",
                                            "fed", "model") if k in item)
                 yield from iter_entries(item, f"{path}[{tag}]")
             else:

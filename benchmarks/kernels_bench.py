@@ -229,15 +229,21 @@ def _worker_scaling(m: int, n_list: tuple, reps: int) -> list:
     return out
 
 
-def _masked_wire(m: int, n_workers: int, reps: int) -> dict:
-    """Secure-aggregation wire overhead at m params x N workers: the
-    masked uplink (ternarize -> RR -> fixed-point weight -> pairwise mask,
-    uint32 words out) vs the plaintext 2-bit stacked uplink, and the
+def _masked_wire(m: int, n_workers: int, reps: int) -> list:
+    """Secure-aggregation wire overhead at m params x N workers, at BOTH
+    wire moduli (2**16 default / 2**32 conservative): the masked uplink
+    (ternarize -> RR -> fixed-point weight -> pairwise mask, one modular
+    word out per parameter) vs the plaintext 2-bit stacked uplink, and the
     sum-then-unmask master vs the accumulating plaintext master — both at
-    their autotuned plans, plus the wire-byte price (uint32 words = 16x
-    the 2-bit codes = fp32-FedAvg-sized uplinks; that is the secure-agg
-    modulus cost, recorded here so the trade is a number, not a vibe)."""
-    from repro.privacy import net_masks, quantize_weights
+    their autotuned plans. Mask and RR streams are generated IN-KERNEL
+    from per-pair/per-worker counter keys, so no (N, rows, 128) mask
+    tensor exists in HBM and no host-side incidence matmul runs per round
+    — asserted structurally on the uplink jaxpr before timing. The
+    wire-byte price per modulus is recorded so the trade is a number, not
+    a vibe: 16-bit words are 8x the 2-bit codes (half the 32-bit path's
+    fp32-FedAvg-sized uplinks)."""
+    from repro.privacy import (pair_signs, pair_stream_keys,
+                               quantize_weights, rr_stream_keys)
     rows = m // 128
     r4 = rows // 4
     k = jax.random.PRNGKey(23)
@@ -245,58 +251,89 @@ def _masked_wire(m: int, n_workers: int, reps: int) -> dict:
     p1 = jax.random.normal(jax.random.fold_in(k, 1), (rows, 128))
     p2 = jax.random.normal(jax.random.fold_in(k, 2), (rows, 128))
     w = jnp.full((n_workers,), 1.0 / max(n_workers - 1, 1)).at[0].set(0.0)
-    wq = quantize_weights(w, 24)
-    masks = net_masks(0, n_workers, 3, (r4, 512))
+    keys = pair_stream_keys(0, n_workers, 3)
+    signs = pair_signs(n_workers)
+    rrk = rr_stream_keys(1, 3, n_workers)
     tune.autotune_stacked(r4, n_workers, interpret=True, reps=1)
     tune.autotune_master(r4, n_workers, interpret=True, reps=1)
-    tune.autotune_masked_uplink(r4, n_workers, interpret=True, reps=1)
-    tune.autotune_masked_master(r4, n_workers, interpret=True, reps=1)
-    plan = tune.lookup("uplink_masked", r4, n_workers, interpret=True)
 
     def uplink_plain():
         return ops.flat_ternary_pack_stacked(
             bufs_q, p1, p2, t=3, beta=0.2, alpha1=0.01, interpret=True)
 
-    def uplink_masked():
-        return ops.flat_ternary_pack_masked(
-            bufs_q, p1, p2, t=3, beta=0.2, alpha1=0.01, wq=wq, masks=masks,
-            rr_bits=masks, rr_threshold=0, interpret=True)
-
     packed = uplink_plain()
-    y = uplink_masked()
 
     def master_plain():
         return ops.flat_master_update(bufs_q[0], packed, w, p1, p2, t=3,
                                       alpha0=0.01, interpret=True)
 
-    def master_masked():
-        return ops.flat_masked_master_update(
-            bufs_q[0], y, jnp.sum(wq), p1, p2, t=3, alpha0=0.01,
-            scale_mult=2.0 ** -24, interpret=True)
-
-    # correctness rides along: masked == plain up to weight quantization
-    np.testing.assert_allclose(np.asarray(master_masked()),
-                               np.asarray(master_plain()),
-                               rtol=1e-5, atol=1e-5)
     us_up_plain = _bench(uplink_plain, reps=reps)
-    us_up_masked = _bench(uplink_masked, reps=reps)
     us_ms_plain = _bench(master_plain, reps=reps)
-    us_ms_masked = _bench(master_masked, reps=reps)
-    return {
-        "params": m,
-        "n_workers": n_workers,
-        "uplink_plain_us": us_up_plain,
-        "uplink_masked_us": us_up_masked,
-        "masked_uplink_overhead": us_up_masked / us_up_plain,
-        "master_plain_us": us_ms_plain,
-        "master_masked_us": us_ms_masked,
-        "masked_master_overhead": us_ms_masked / us_ms_plain,
-        "wire_bytes_plain": n_workers * r4 * 128,        # 2-bit codes
-        "wire_bytes_masked": n_workers * r4 * 512 * 4,   # uint32 words
-        "plan": {"block_rows": plan[0], "block_workers": plan[1]},
-        "launches": {"uplink": 1, "master": 1},
-        "mode": "cpu-interpret",
-    }
+
+    out = []
+    for wb in (16, 32):
+        fb = 14 if wb == 16 else 24
+        wq = quantize_weights(w, fb)
+        tune.autotune_masked_uplink(r4, n_workers, interpret=True, reps=1,
+                                    word_bits=wb)
+        tune.autotune_masked_master(r4, n_workers, interpret=True, reps=1,
+                                    word_bits=wb)
+        kind = "uplink_masked16" if wb == 16 else "uplink_masked"
+        plan = tune.lookup(kind, r4, n_workers, interpret=True)
+
+        def uplink_masked():
+            return ops.flat_ternary_pack_masked(
+                bufs_q, p1, p2, t=3, beta=0.2, alpha1=0.01, wq=wq,
+                pair_keys=keys, pair_signs=signs, rr_keys=rrk,
+                rr_threshold=0, word_bits=wb, interpret=True)
+
+        # structural guarantee before timing: ONE launch whose only
+        # unsigned operands are the tiny O(N^2) counter keys — the mask
+        # streams never round-trip through HBM and no threefry PRNG runs
+        counts = jaxpr_primitive_counts(uplink_masked)
+        assert counts.get("pallas_call") == 1, counts
+        assert not any("threefry" in p for p in counts), counts
+        from repro.utils import iter_jaxpr_eqns
+        jaxpr = jax.make_jaxpr(uplink_masked)()
+        [eqn] = [e for e in iter_jaxpr_eqns(jaxpr.jaxpr, into_pallas=False)
+                 if e.primitive.name == "pallas_call"]
+        for v in eqn.invars:
+            if np.issubdtype(v.aval.dtype, np.unsignedinteger):
+                assert int(np.prod(v.aval.shape)) <= n_workers * n_workers, (
+                    v.aval, "mask tensor operand leaked into the uplink")
+
+        y = uplink_masked()
+
+        def master_masked():
+            return ops.flat_masked_master_update(
+                bufs_q[0], y, jnp.sum(wq), p1, p2, t=3, alpha0=0.01,
+                scale_mult=2.0 ** -fb, interpret=True)
+
+        # correctness rides along: masked == plain up to weight
+        # quantization (coarser at fb=14, hence the looser 16-bit bound)
+        np.testing.assert_allclose(
+            np.asarray(master_masked()), np.asarray(master_plain()),
+            rtol=1e-5 if wb == 32 else 1e-3,
+            atol=1e-5 if wb == 32 else 2e-3)
+        us_up_masked = _bench(uplink_masked, reps=reps)
+        us_ms_masked = _bench(master_masked, reps=reps)
+        out.append({
+            "params": m,
+            "n_workers": n_workers,
+            "modulus_bits": wb,
+            "uplink_plain_us": us_up_plain,
+            "uplink_masked_us": us_up_masked,
+            "masked_uplink_overhead": us_up_masked / us_up_plain,
+            "master_plain_us": us_ms_plain,
+            "master_masked_us": us_ms_masked,
+            "masked_master_overhead": us_ms_masked / us_ms_plain,
+            "wire_bytes_plain": n_workers * r4 * 128,           # 2-bit codes
+            "wire_bytes_masked": n_workers * r4 * 512 * (wb // 8),
+            "plan": {"block_rows": plan[0], "block_workers": plan[1]},
+            "launches": {"uplink": 1, "master": 1},
+            "mode": "cpu-interpret",
+        })
+    return out
 
 
 def _scan_rounds_bench(m: int, n_workers: int, rounds: int,
@@ -523,16 +560,16 @@ def run(smoke: bool = False) -> dict:
     mk_m = (1 << 14) if smoke else (1 << 20)
     mk_tag = (f"{mk_m // (1 << 20)}M" if mk_m >= (1 << 20)
               else f"{mk_m // 1024}K")
-    masked_results = [_masked_wire(mk_m, N_WORKERS,
-                                   max(r for _, r in sizes))]
+    masked_results = _masked_wire(mk_m, N_WORKERS, max(r for _, r in sizes))
     for s in masked_results:
-        emit(f"masked_uplink_{mk_tag}_{s['n_workers']}w",
+        mb = s["modulus_bits"]
+        emit(f"masked_uplink_{mk_tag}_{s['n_workers']}w_m{mb}",
              s["uplink_masked_us"],
              f"plain={s['uplink_plain_us']:.0f}us "
              f"overhead={s['masked_uplink_overhead']:.2f}x "
              f"wire={s['wire_bytes_masked']}B "
              f"(plain {s['wire_bytes_plain']}B)")
-        emit(f"masked_master_{mk_tag}_{s['n_workers']}w",
+        emit(f"masked_master_{mk_tag}_{s['n_workers']}w_m{mb}",
              s["master_masked_us"],
              f"plain={s['master_plain_us']:.0f}us "
              f"overhead={s['masked_master_overhead']:.2f}x")

@@ -100,11 +100,12 @@ def fedpc_bytes_per_round(model_bytes: float, n_workers: int,
 
 def fedpc_masked_bytes_per_round(model_bytes: float, n_workers: int,
                                  word_bits: int = 32) -> float:
-    """Secure-aggregation wire: non-pilot uplinks carry one masked uint32
-    word per parameter (the modulus must hold the cohort sum of fixed-
-    point-weighted fields), so the 2-bit code term of Eq. (8) grows to
-    ``word_bits`` per parameter — the classic secure-agg price. Download
-    and pilot upload are unchanged."""
+    """Secure-aggregation wire: non-pilot uplinks carry one masked word of
+    ``word_bits`` (``PrivacySpec.modulus_bits``) per parameter — the
+    modulus must hold the cohort sum of fixed-point-weighted fields — so
+    the 2-bit code term of Eq. (8) grows to ``word_bits``: 8x plaintext at
+    the 16-bit default, 16x at 32. Download and pilot upload are
+    unchanged."""
     return _fedpc_wire_bytes(model_bytes, n_workers, float(word_bits))
 
 

@@ -95,41 +95,42 @@ def _sync_body(q_buf, p_prev, p_prev2, *, wire: rd.WirePath, k_star, w,
 
     if mode == "masked":
         # Secure-aggregation wire: this instance masks its own fixed-point
-        # weighted fields (pairwise net mask derived from stateless
-        # fold_in chains — only this worker's own pair streams, not the
-        # full F(F-1)/2 set the simulator materializes),
-        # the fed collective sums mod 2**32 (masks cancel EXACTLY, and
-        # modular addition is order-free, so psum_scatter+all_gather is
-        # bit-identical to a plain psum and to the replicated path), and
-        # every instance unmasks the identical public sum.
+        # weighted fields in-kernel (the uplink kernel regenerates only
+        # this worker's row of pair streams from the (F,) key row — no
+        # mask tensor exists in HBM, unlike the full F(F-1)/2 set the
+        # simulator's oracle materializes), the fed collective sums mod
+        # 2**modulus_bits (masks cancel EXACTLY, and modular addition is
+        # order-free, so psum_scatter+all_gather is bit-identical to a
+        # plain psum and to the replicated path), and every instance
+        # unmasks the identical public sum. At the 16-bit modulus the
+        # collective moves native uint16 words — HALF the bytes of the
+        # uint32 wire for the same topology.
         spec = wire.privacy
         sr = q.shape[0]
-        r4 = sr // fl.PACK
-        wide = fl.LANES * fl.PACK
         m_idx = (jax.lax.axis_index(model_axis) if model_axis is not None
                  else jnp.int32(0))
         wq = pvm.quantize_weights(wf, spec.fixpoint_bits)
-        if spec.masking_on:
-            net = pvm.net_mask_slab(spec.mask_seed, idx, n_fed, t,
-                                    (r4, wide), m_idx,
-                                    participation=pmask)
-        else:
-            net = jnp.zeros((r4, wide), jnp.uint32)
-        if spec.dp_on:
-            rr = pdp.rr_bits_worker(spec.dp_seed, t, idx, (r4, wide),
-                                    m_idx)
-        else:
-            rr = net
+        seed = spec.mask_seed if spec.masking_on else 0
+        keys_row = pvm.pair_stream_keys_row(seed, idx, n_fed, t, m_idx)
+        signs_row = pvm.pair_signs_row(idx, n_fed, participation=pmask)
+        rr_key = pdp.rr_stream_key(spec.dp_seed, t, idx, m_idx)
         y = wire.uplink_masked_slab(q, p_prev, p_prev2, t=t,
-                                    wq_own=jnp.take(wq, idx), net=net,
-                                    rr=rr, beta=beta_k)
+                                    wq_own=jnp.take(wq, idx),
+                                    keys_row=keys_row,
+                                    signs_row=signs_row, rr_key=rr_key,
+                                    beta=beta_k)
         if y.shape[0] % n_fed == 0:
             part = jax.lax.psum_scatter(y, fed_axis, scatter_dimension=0,
                                         tiled=True)
             s = jax.lax.all_gather(part, fed_axis, axis=0, tiled=True)
         else:                       # slab rows not divisible by F
             s = jax.lax.psum(y, fed_axis)
-        ci = jax.lax.bitcast_convert_type(s - jnp.sum(wq), jnp.int32)
+        sw = jnp.sum(wq)
+        if spec.modulus_bits == 16:
+            sw = (sw & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+            ci = jax.lax.bitcast_convert_type(s - sw, jnp.int16)
+        else:
+            ci = jax.lax.bitcast_convert_type(s - sw, jnp.int32)
         coeff = ci.astype(jnp.float32) * jnp.float32(spec.scale_mult)
         return wire.combine(q_pilot, coeff.reshape(sr, fl.LANES), p_prev,
                             p_prev2, t)
@@ -202,9 +203,11 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
     tiling never changes bits.
 
     An active ``privacy`` spec puts the fedpc strategies on the masked
-    secure-aggregation wire: each instance uploads mod-2**32 masked
-    fixed-point words, the fed collective is the bandwidth-optimal
-    psum_scatter+all_gather over uint32 (modular addition is order-free,
+    secure-aggregation wire: each instance uploads masked fixed-point
+    words mod ``2**privacy.modulus_bits`` (uint16 by default — half the
+    collective bytes of the uint32 wire), the fed collective is the
+    bandwidth-optimal psum_scatter+all_gather over the native wire word
+    (modular addition is order-free,
     so mask cancellation — and bitwise parity with the replicated path —
     survives ANY reduction topology), and the master never sees a worker's
     plaintext codes. With ``privacy.enforce`` the traced sync program is

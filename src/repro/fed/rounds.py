@@ -299,52 +299,59 @@ class WirePath:
                       pmask=None) -> tuple[jax.Array, jax.Array]:
         """All N workers' masked secure-agg wire words in ONE launch.
 
-        Derives the round's pairwise net masks (stateless ``fold_in``
-        chains keyed by the — possibly traced — absolute round ``t``) and
-        the randomized-response bit plane, quantizes the public Eq. (3)
-        weights ``w`` to fixed point, and runs the fused masked uplink:
-        codes exist only in kernel registers, HBM sees masked uint32 words.
-        ``pmask`` is the public participation mask (pairs are active only
-        between sampled workers). Returns ``(masked_words, wq)``.
+        Derives the round's (N, N) pairwise stream-key and sign matrices
+        (counter chains keyed by the — possibly traced — absolute round
+        ``t``, participation folded into the signs) and the (N,) RR key
+        vector, quantizes the public Eq. (3) weights ``w`` to fixed point,
+        and runs the fused masked uplink: the mask/RR planes are generated
+        INSIDE the kernel from those keys — codes exist only in kernel
+        registers, no mask tensor ever exists in HBM, and what HBM sees is
+        masked ``spec.word_dtype`` words. ``pmask`` is the public
+        participation mask (pairs are active only between sampled
+        workers). Returns ``(masked_words, wq)``.
         """
         spec = self.privacy
-        n, rows, _ = bufs_q.shape
-        shape = (rows // fl.PACK, fl.LANES * fl.PACK)
+        n = bufs_q.shape[0]
         wq = pvm.quantize_weights(w, spec.fixpoint_bits)
-        if spec.masking_on:
-            masks = pvm.net_masks(spec.mask_seed, n, t, shape,
-                                  participation=pmask)
-        else:
-            masks = jnp.zeros((n,) + shape, jnp.uint32)
-        if spec.dp_on:
-            rr = pdp.rr_bits(spec.dp_seed, t, (n,) + shape)
-        else:
-            rr = masks          # threshold 0 never reads it
+        keys = pvm.pair_stream_keys(
+            spec.mask_seed if spec.masking_on else 0, n, t)
+        signs = pvm.pair_signs(n, participation=pmask)
+        rrk = pdp.rr_stream_keys(spec.dp_seed, t, n)
         beta = self.cfg.beta if betas is None else betas
         y = ops.flat_ternary_pack_masked(
             bufs_q, buf_p1, buf_p2, t=t, beta=beta,
-            alpha1=self.cfg.alpha1, wq=wq, masks=masks, rr_bits=rr,
-            rr_threshold=spec.rr_threshold, interpret=self.interpret,
-            block_rows=self.block_rows, block_workers=self.block_workers)
+            alpha1=self.cfg.alpha1, wq=wq, pair_keys=keys,
+            pair_signs=signs, rr_keys=rrk,
+            rr_threshold=spec.rr_threshold,
+            word_bits=spec.modulus_bits, use_masks=spec.masking_on,
+            interpret=self.interpret, block_rows=self.block_rows,
+            block_workers=self.block_workers)
         return y, wq
 
     def uplink_masked_slab(self, buf_q: jax.Array, buf_p1: jax.Array,
-                           buf_p2: jax.Array, *, t, wq_own, net, rr,
-                           beta=None) -> jax.Array:
+                           buf_p2: jax.Array, *, t, wq_own, keys_row,
+                           signs_row, rr_key, beta=None) -> jax.Array:
         """One worker's masked wire words over a single (sr, 128) slab —
         the distributed per-instance form (the stacked kernel at N = 1).
         ``wq_own`` is this worker's fixed-point weight (traced scalar);
-        ``net``/``rr`` its (sr//4, 512) net mask / RR bit plane. Returns
-        (sr//4, 512) uint32.
+        ``keys_row``/``signs_row`` its (n_fed,) row of the pairwise
+        key/sign matrices (``masking.pair_stream_keys_row`` at a traced
+        worker index); ``rr_key`` its uint32 RR stream key. The mask/RR
+        streams are generated inside the kernel. Returns (sr//4, 512) in
+        ``spec.word_dtype``.
         """
         spec = self.privacy
         beta = self.cfg.beta if beta is None else beta
         y = ops.flat_ternary_pack_masked(
             buf_q[None], buf_p1, buf_p2, t=t, beta=beta,
             alpha1=self.cfg.alpha1, wq=jnp.reshape(wq_own, (1,)),
-            masks=net[None], rr_bits=rr[None],
-            rr_threshold=spec.rr_threshold, interpret=self.interpret,
-            block_rows=self.block_rows, block_workers=self.block_workers)
+            pair_keys=jnp.reshape(keys_row, (1, -1)),
+            pair_signs=jnp.reshape(signs_row, (1, -1)),
+            rr_keys=jnp.reshape(rr_key, (1,)),
+            rr_threshold=spec.rr_threshold,
+            word_bits=spec.modulus_bits, use_masks=spec.masking_on,
+            interpret=self.interpret, block_rows=self.block_rows,
+            block_workers=self.block_workers)
         return y[0]
 
     def master_masked(self, buf_pilot: jax.Array, masked: jax.Array,

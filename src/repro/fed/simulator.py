@@ -167,8 +167,8 @@ class FedSimulator:
         """Record each round's uplink events after the fact — the ledger is
         host metadata, so it is reconstructed from the single post-run fetch
         of the on-device pilot history (§4.2 invariants unchanged). On the
-        masked wire the master receives mod-2^32 masked words, never the
-        per-worker 2-bit codes — the ledger records what actually crossed."""
+        masked wire the master receives mod-2^modulus masked words, never
+        the per-worker 2-bit codes — the ledger records what crossed."""
         spec = self.fed_cfg.privacy
         code_kind = ("masked_words" if spec is not None and spec.active
                      else "packed_ternary")
@@ -202,10 +202,13 @@ class FedSimulator:
             res.costs.append(float(np.average(vals,
                                               weights=self.sizes * row)))
             res.pilot_history.append(int(pilots[i]))
-            bytes_fn = (proto.fedpc_masked_bytes_per_round if masked_wire
-                        else proto.fedpc_bytes_per_round)
-            res.bytes_per_round.append(bytes_fn(
-                model_bytes, int(np.sum(row > 0))))
+            if masked_wire:
+                res.bytes_per_round.append(proto.fedpc_masked_bytes_per_round(
+                    model_bytes, int(np.sum(row > 0)),
+                    word_bits=spec.modulus_bits))
+            else:
+                res.bytes_per_round.append(proto.fedpc_bytes_per_round(
+                    model_bytes, int(np.sum(row > 0))))
         res.params = fl.unflatten_tree(state.buf_p1, layout)
         res.round_state = state
         return res

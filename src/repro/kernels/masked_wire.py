@@ -7,31 +7,42 @@ at exactly two launches when privacy is on:
 ternarization -> bias to fields {0, 1, 2} -> 3-ary randomized response
 (local DP, threshold 0 = off) -> fixed-point weighting by the public
 per-worker ``W_k`` -> pairwise-mask addition, all in-register: float
-history views in, uint32 masked words out. The plaintext code NEVER exists
-outside VMEM registers — what reaches HBM (and then the wire) is already
-masked. Grid layout is identical to ``ternary_pack_stacked_2d``:
-rows-major with the worker axis minor (shared history fetched once per row
-block), a vectorized (block_workers, block_rows) block, and a grid-less
-one-shot path when the plan collapses to one step.
+history views in, uint16/uint32 masked words out. The plaintext code NEVER
+exists outside VMEM registers — what reaches HBM (and then the wire) is
+already masked.
+
+The pairwise mask and RR streams are generated INSIDE the kernel from the
+counter PRNG of ``repro.privacy.masking``: the launch consumes only the
+tiny per-pair key matrix ``(N, L)``, the antisymmetric sign matrix (with
+participation folded in) and the ``(N,)`` RR key vector — never an
+``(N, rows, 512)`` mask tensor. Each tile hashes its absolute element
+counters once (``mix32(base + local index)``) and reuses that hash across
+every pair stream of the tile (only the ``+ key`` finalizer differs per
+stream — the worker-minor batching that hides PRNG cost). At the 16-bit
+modulus one 32-bit stream word feeds two adjacent lanes, halving the
+hashing work, with the two 16-bit halves accumulated in separate planes
+and re-paired by a single shift|or + bitcast (never a per-stream lane
+shuffle). Whenever the whole cohort is resident, each unordered pair's
+stream is evaluated ONCE and ±accumulated into both endpoints —
+n(n-1)/2 stream expansions instead of n^2 — and large tiles run the
+whole pipeline as a cache-resident sweep over row chunks.
 
 ``masked_master_update_2d`` — the sum-then-unmask master. Walks the same
 2-D (rows, workers) grid as ``packed_master_update_2d``, accumulating the
-masked uint32 words into a revisited uint32 accumulator block (a second
-output whose block index ignores the worker axis; the caller discards it).
-Because the accumulation is modular (mod 2**32), the pairwise masks cancel
-EXACTLY once all workers are folded — the master never observes an
-individual worker's ternary directions, only the sum — and the result is
-bitwise invariant under every block plan *and* every reduction order (no
-sequential-order discipline needed, unlike the float master). The last
-worker step de-biases in the integer domain (subtract the public
-``sum_k W_k``), reinterprets the residue as int32 (|coeff| < 2**31 by the
-``sum w_k <= 1`` weight bound), descales by the fixed-point multiplier
-(with the RR unbias folded in), and applies the Eq. (3) combine.
+masked words into a revisited accumulator block in the WIRE dtype (native
+modular wrap — mod 2**16 or 2**32). Because the accumulation is modular,
+the pairwise masks cancel EXACTLY once all workers are folded — the master
+never observes an individual worker's ternary directions, only the sum —
+and the result is bitwise invariant under every block plan *and* every
+reduction order. The last worker step de-biases in the integer domain
+(subtract the public ``sum_k W_k`` mod the modulus), reinterprets the
+residue as the same-width SIGNED int (exact by the ``sum w_k <= 1`` +
+fixpoint-headroom bound), descales by the fixed-point multiplier (with the
+RR unbias folded in), and applies the Eq. (3) combine.
 
-Wire cost: one uint32 word per parameter — 16x the 2-bit plaintext wire,
-equal to fp32 FedAvg traffic. That is the classic secure-aggregation
-price: the modulus must hold the cohort sum of fixed-point-weighted
-fields. The overhead is benchmarked in ``benchmarks/kernels_bench.py``.
+Wire cost: one word per parameter — 8x the 2-bit plaintext wire at the
+16-bit modulus (16x at 32). The overhead is benchmarked per modulus in
+``benchmarks/kernels_bench.py``.
 """
 from __future__ import annotations
 
@@ -42,48 +53,202 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.fused_wire import _codes_any
+from repro.privacy import masking as pvm
 from repro.privacy.dp import rr_fields
 
 LANES = 128
 PACK = 4
 BLOCK_ROWS = 64
 BLOCK_WORKERS = 1
-
-def _masked_fields(q, p1, p2, beta, t, alpha1, wq, mask, rr, thr):
-    """In-register masked-word math shared by both uplink launch paths.
-
-    q (bw, br, 512) f32; p1/p2 (br, 512) f32 broadcast over workers; beta
-    (bw, 1, 1); wq (bw, 1, 1) uint32; mask/rr (bw, br, 512) uint32; thr
-    uint32 scalar. Returns uint32 (bw, br, 512).
-    """
-    code = _codes_any(q, p1[None], p2[None], t, beta, alpha1)
-    field = (code + 1.0).astype(jnp.uint32)          # exact for {0, 1, 2}
-    field = rr_fields(field, rr, thr)                # THE oracle expression
-    return wq * field + mask                          # mod 2**32
+# Rows per mask-net accumulation chunk inside one uplink tile (keeps the
+# full pair-stream working set cache-resident on CPU; a no-op for tiles
+# at or under this size).
+_NET_CHUNK_ROWS = 256
 
 
-def _masked_pack_kernel(q_ref, p1_ref, p2_ref, beta_ref, wq_ref, mask_ref,
-                        rr_ref, scal_ref, thr_ref, out_ref):
+def _tile_hash(base_u32, rows: int, width: int, word_bits: int):
+    """The shared counter hash of one (rows, width) tile whose first
+    element sits at absolute flat index ``base_u32`` (tiles always span
+    full rows, so the flat index is ``base + r*width + c``). At the
+    16-bit modulus the hash covers element PAIRS — half the entries,
+    expanded by ``halves16`` per stream."""
+    if word_bits == 16:
+        w2 = width // 2
+        r = jax.lax.broadcasted_iota(jnp.uint32, (rows, w2), 0)
+        c = jax.lax.broadcasted_iota(jnp.uint32, (rows, w2), 1)
+        return pvm.mix32(base_u32 // jnp.uint32(2)
+                         + r * jnp.uint32(w2) + c)
+    r = jax.lax.broadcasted_iota(jnp.uint32, (rows, width), 0)
+    c = jax.lax.broadcasted_iota(jnp.uint32, (rows, width), 1)
+    return pvm.mix32(base_u32 + r * jnp.uint32(width) + c)
+
+
+def _stream_i32(key, hashed, word_bits: int):
+    """One pair stream over a tile as SIGNED values for the ± net
+    accumulation: int32 words at 32 bits (bit pattern preserved), or
+    zero-extended 16-bit values at 16 (mod-2**16 congruent either way)."""
+    vals = pvm.stream_values(key, hashed, word_bits)
+    if word_bits == 16:
+        return vals.astype(jnp.int32)
+    return jax.lax.bitcast_convert_type(vals, jnp.int32)
+
+
+def _masked_pack_kernel(q_ref, p1_ref, p2_ref, beta_ref, wq_ref, keys_ref,
+                        signs_ref, rrk_ref, scal_ref, out_ref, *,
+                        cohort: int, word_bits: int, use_masks: bool,
+                        rr_threshold: int, gridded: bool):
+    """Masked-uplink tile: ternarize -> RR -> weight -> in-register mask
+    streams -> truncate to the wire word. ``cohort`` is the total worker
+    count L of the key matrix (== N in the simulator's stacked call, the
+    fed size in the distributed N=1 slab call)."""
+    bw, br, wide = q_ref.shape
     t, alpha1 = scal_ref[0], scal_ref[1]
     q = q_ref[...].astype(jnp.float32)
     p1 = p1_ref[...].astype(jnp.float32)
     p2 = p2_ref[...].astype(jnp.float32)
     beta = beta_ref[...].astype(jnp.float32)[:, :, None]
-    wq = wq_ref[...][:, :, None]
-    out_ref[...] = _masked_fields(q, p1, p2, beta, t, alpha1, wq,
-                                  mask_ref[...], rr_ref[...], thr_ref[0])
+    wq = wq_ref[...][:, :, None]                       # (bw, 1, 1) uint32
+    if gridded:
+        base = (jnp.asarray(pl.program_id(0), jnp.uint32)
+                * jnp.uint32(br * wide))
+        w0 = pl.program_id(1) * bw
+    else:
+        base = jnp.uint32(0)
+        w0 = 0
+    keys = keys_ref[...]                               # (N, L) uint32
+    signs = signs_ref[...]                             # (N, L) int32
+    rrk = rrk_ref[...]                                 # (N,) uint32
+
+    def slab(base_c, qc, p1c, p2c):
+        """The full uplink pipeline over one row slab starting at absolute
+        flat element ``base_c``: ternarize -> RR -> weight -> mask ->
+        wire words (bw, rows_c, wide)."""
+        rows_c = qc.shape[1]
+        code = _codes_any(qc, p1c[None], p2c[None], t, beta, alpha1)
+        field = (code + 1.0).astype(jnp.uint32)        # exact for {0, 1, 2}
+        if rr_threshold:
+            h_rr = _tile_hash(base_c, rows_c, wide, 32)   # RR: full words
+            rr = jnp.stack([pvm.mask_stream(rrk[w0 + j], h_rr)
+                            for j in range(bw)])
+            field = rr_fields(field, rr, jnp.uint32(rr_threshold))
+        if word_bits == 16:
+            # 16-bit lane arithmetic throughout: wq < 2**fb <= 2**14 and
+            # field <= 2 keep the product exact in uint16 (and mod-2**16
+            # congruent regardless) — half-width SIMD lanes for free.
+            accc = wq.astype(jnp.uint16) * field.astype(jnp.uint16)
+        else:
+            accc = wq * field                          # mod 2**32
+        if use_masks:
+            accc = accc + net_words(base_c, rows_c)
+        return accc
+
+    def net_words(base_c, rows_c):
+        """All resident workers' net mask words over a ``rows_c``-row
+        slab starting at absolute flat element ``base_c``, in the wire
+        dtype: (bw, rows_c, wide)."""
+        h_m = _tile_hash(base_c, rows_c, wide, word_bits)
+        if word_bits == 16:
+            # Half-width path: one 32-bit stream word covers two
+            # adjacent 16-bit lanes, but the lanes are NEVER
+            # interleaved per pair (a stride-2 shuffle per stream
+            # kills vectorization — measured 10x on XLA:CPU). The
+            # low/high halves accumulate in separate half-width
+            # planes instead.
+            nplanes, pw = 2, wide // 2
+
+            def expand(key):
+                u = pvm.mask_stream(key, h_m)
+                return ((u & jnp.uint32(0xFFFF)).astype(jnp.int32),
+                        (u >> jnp.uint32(16)).astype(jnp.int32))
+        else:
+            nplanes, pw = 1, wide
+
+            def expand(key):
+                v = pvm.mask_stream(key, h_m)
+                return (jax.lax.bitcast_convert_type(v, jnp.int32),)
+        zeros = functools.partial(jnp.zeros, (rows_c, pw), jnp.int32)
+        if bw == cohort:
+            # Whole cohort resident (any row blocking): each
+            # unordered pair expands ONCE and ±folds into both
+            # endpoints — n(n-1)/2 stream expansions instead of n^2.
+            nets = [[zeros() for _ in range(bw)]
+                    for _ in range(nplanes)]
+            for i in range(bw):
+                for j in range(i + 1, bw):
+                    s = signs[i, j]
+                    for plane, v in zip(nets, expand(keys[i, j])):
+                        sv = s * v
+                        plane[i] = plane[i] + sv
+                        plane[j] = plane[j] - sv
+        else:
+            # Grid / slab path: each resident worker folds its row
+            # of the key matrix (self/inactive pairs sign-zeroed —
+            # w0 + j is traced, the cases cannot be pruned
+            # statically).
+            nets = [[] for _ in range(nplanes)]
+            for j in range(bw):
+                w_abs = w0 + j
+                accs = [zeros() for _ in range(nplanes)]
+                for l in range(cohort):
+                    s = signs[w_abs, l]
+                    accs = [p + s * v for p, v in
+                            zip(accs, expand(keys[w_abs, l]))]
+                for plane, a in zip(nets, accs):
+                    plane.append(a)
+        if word_bits == 32:
+            return jax.lax.bitcast_convert_type(
+                jnp.stack(nets[0]), jnp.uint32)
+        # Pack the half-planes back into words with shift|or and
+        # let bitcast split uint32 -> two uint16 lanes, least-
+        # significant first — the interleaved lane order as a pure
+        # reinterpret (a stride-2 stack/reshape shuffle here
+        # measures ~5x slower on XLA:CPU). Low 16 bits of the int32
+        # accumulators are exactly the mod-2**16 residues.
+        los, his = nets
+        words = []
+        for k in range(bw):
+            lo_u = (jax.lax.bitcast_convert_type(los[k], jnp.uint32)
+                    & jnp.uint32(0xFFFF))
+            hi_u = (jax.lax.bitcast_convert_type(his[k], jnp.uint32)
+                    << jnp.uint32(16))
+            words.append(jax.lax.bitcast_convert_type(
+                lo_u | hi_u, jnp.uint16).reshape(rows_c, wide))
+        return jnp.stack(words)
+
+    # Row-chunked execution: XLA:CPU otherwise materializes every pair
+    # stream (and the codes/fields) tile-size, ~2x the masked latency in
+    # pure memory traffic at 1M params; a fori_loop over row chunks runs
+    # the whole pipeline cache-resident in one sweep. Bitwise invariant —
+    # each chunk hashes its own absolute counter range.
+    if use_masks and br > _NET_CHUNK_ROWS and br % _NET_CHUNK_ROWS == 0:
+        chunk = _NET_CHUNK_ROWS
+        wdtype = jnp.uint16 if word_bits == 16 else jnp.uint32
+
+        def fold(c, out):
+            r0 = c * chunk
+            base_c = base + (c * (chunk * wide)).astype(jnp.uint32)
+            qc = jax.lax.dynamic_slice(q, (0, r0, 0), (bw, chunk, wide))
+            p1c = jax.lax.dynamic_slice(p1, (r0, 0), (chunk, wide))
+            p2c = jax.lax.dynamic_slice(p2, (r0, 0), (chunk, wide))
+            return jax.lax.dynamic_update_slice(
+                out, slab(base_c, qc, p1c, p2c), (0, r0, 0))
+
+        out_ref[...] = jax.lax.fori_loop(
+            0, br // chunk, fold, jnp.zeros((bw, br, wide), wdtype))
+    else:
+        out_ref[...] = slab(base, q, p1, p2)
 
 
 def _masked_master_kernel(q_ref, y_ref, p1_ref, p2_ref, scal_ref, sumw_ref,
                           out_ref, acc_ref, *, block_workers: int,
-                          last_k: int):
+                          last_k: int, word_bits: int):
     """One (row block, worker block) step of the sum-then-unmask master.
 
-    ``acc_ref`` is the revisited uint32 accumulator output (its block index
-    ignores the worker axis; the wrapper discards it): step k == 0 zeroes
-    it, every step folds its workers mod 2**32, the last step unmasks —
-    integer de-bias, fixed-point descale — and writes the Eq. (3) combine
-    into ``out_ref``.
+    ``acc_ref`` is the revisited accumulator output in the wire dtype (its
+    block index ignores the worker axis; the wrapper discards it): step
+    k == 0 zeroes it, every step folds its workers mod 2**word_bits, the
+    last step unmasks — integer de-bias, signed reinterpretation,
+    fixed-point descale — and writes the Eq. (3) combine into ``out_ref``.
     """
     k = pl.program_id(1)
 
@@ -99,8 +264,9 @@ def _masked_master_kernel(q_ref, y_ref, p1_ref, p2_ref, scal_ref, sumw_ref,
     @pl.when(k == last_k)
     def _combine():
         t, alpha0, smult = scal_ref[0], scal_ref[1], scal_ref[2]
+        signed = jnp.int16 if word_bits == 16 else jnp.int32
         ci = jax.lax.bitcast_convert_type(acc_ref[...] - sumw_ref[0],
-                                          jnp.int32)
+                                          signed)
         coeff = ci.astype(jnp.float32) * smult
         step = (p1_ref[...].astype(jnp.float32)
                 - p2_ref[...].astype(jnp.float32))
@@ -110,13 +276,15 @@ def _masked_master_kernel(q_ref, y_ref, p1_ref, p2_ref, scal_ref, sumw_ref,
 
 
 def _masked_master_oneshot_kernel(q_ref, y_ref, p1_ref, p2_ref, scal_ref,
-                                  sumw_ref, out_ref, *, n_workers: int):
+                                  sumw_ref, out_ref, *, n_workers: int,
+                                  word_bits: int):
     """Single-step plan (the cpu-interpret optimum): same modular math."""
-    acc = jnp.zeros((q_ref.shape[0], LANES * PACK), jnp.uint32)
+    acc = jnp.zeros((q_ref.shape[0], LANES * PACK), y_ref.dtype)
     for j in range(n_workers):
         acc = acc + y_ref[j]
     t, alpha0, smult = scal_ref[0], scal_ref[1], scal_ref[2]
-    ci = jax.lax.bitcast_convert_type(acc - sumw_ref[0], jnp.int32)
+    signed = jnp.int16 if word_bits == 16 else jnp.int32
+    ci = jax.lax.bitcast_convert_type(acc - sumw_ref[0], signed)
     coeff = ci.astype(jnp.float32) * smult
     step = p1_ref[...].astype(jnp.float32) - p2_ref[...].astype(jnp.float32)
     mult = jnp.where(t <= 1.0, alpha0, step)
@@ -124,61 +292,79 @@ def _masked_master_oneshot_kernel(q_ref, y_ref, p1_ref, p2_ref, scal_ref,
     out_ref[...] = (q - coeff * mult).astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "block_rows",
-                                             "block_workers"))
-def ternary_pack_masked_2d(q, p1, p2, t, beta, alpha1, wq, masks, rr_bits,
-                           rr_threshold, *, interpret: bool = True,
+@functools.partial(jax.jit, static_argnames=("rr_threshold", "word_bits",
+                                             "use_masks", "interpret",
+                                             "block_rows", "block_workers"))
+def ternary_pack_masked_2d(q, p1, p2, t, beta, alpha1, wq, pair_keys,
+                           pair_signs, rr_keys, *, rr_threshold: int = 0,
+                           word_bits: int = 32, use_masks: bool = True,
+                           interpret: bool = True,
                            block_rows: int = BLOCK_ROWS,
                            block_workers: int = BLOCK_WORKERS):
     """Masked uplink: all N workers' secure-agg wire words from ONE launch.
 
     q (N, R, 512) float history views; p1/p2 (R, 512) shared public
     history; ``beta`` a scalar or (N,) per-worker Eq. (5) threshold; wq
-    (N,) uint32 fixed-point Eq. (3) weights (public); masks/rr_bits
-    (N, R, 512) uint32 (pass the mask buffer for ``rr_bits`` when DP is
-    off — threshold 0 ignores it, and no zero tensor is streamed twice);
-    ``rr_threshold`` the uint16 flip threshold. ``t`` may be traced.
-    Returns uint32 (N, R, 512) — already masked when it first touches HBM.
+    (N,) uint32 fixed-point Eq. (3) weights (public); ``pair_keys``
+    (N, L) uint32 pair stream keys (``masking.pair_stream_keys`` rows —
+    L = cohort size, == N here or the fed size for a 1-row slab call);
+    ``pair_signs`` (N, L) int32 antisymmetric signs with participation
+    folded in; ``rr_keys`` (N,) uint32 per-worker RR stream keys;
+    ``rr_threshold`` the STATIC uint16 flip threshold (0 = DP off — the
+    RR stream is never generated); ``use_masks`` static (False skips mask
+    generation entirely — the unmasked debug wire). ``t`` may be traced.
+    Returns (N, R, 512) in the wire dtype (uint16 at ``word_bits=16``,
+    else uint32) — already masked when it first touches HBM.
     """
     n, rows, _ = q.shape
+    cohort = pair_keys.shape[1]
+    out_dtype = jnp.uint16 if word_bits == 16 else jnp.uint32
     betas = jnp.broadcast_to(
         jnp.asarray(beta, jnp.float32).reshape(-1, 1), (n, 1))
     wq2 = jnp.asarray(wq, jnp.uint32).reshape(n, 1)
     scal = jnp.stack([jnp.asarray(t, jnp.float32),
                       jnp.asarray(alpha1, jnp.float32)])
-    thr = jnp.asarray([rr_threshold], jnp.uint32)
+    keys = jnp.asarray(pair_keys, jnp.uint32)
+    signs = jnp.asarray(pair_signs, jnp.int32)
+    rrk = jnp.asarray(rr_keys, jnp.uint32).reshape(n)
     wide = LANES * PACK
     if block_rows >= rows and block_workers >= n:
         return pl.pallas_call(
-            _masked_pack_kernel,
+            functools.partial(_masked_pack_kernel, cohort=cohort,
+                              word_bits=word_bits, use_masks=use_masks,
+                              rr_threshold=rr_threshold, gridded=False),
             in_specs=[pl.BlockSpec(q.shape, None),
                       pl.BlockSpec(p1.shape, None),
                       pl.BlockSpec(p2.shape, None),
                       pl.BlockSpec(betas.shape, None),
                       pl.BlockSpec(wq2.shape, None),
-                      pl.BlockSpec(masks.shape, None),
-                      pl.BlockSpec(rr_bits.shape, None),
+                      pl.BlockSpec(memory_space=pl.ANY),
+                      pl.BlockSpec(memory_space=pl.ANY),
                       pl.BlockSpec(memory_space=pl.ANY),
                       pl.BlockSpec(memory_space=pl.ANY)],
             out_specs=pl.BlockSpec((n, rows, wide), None),
-            out_shape=jax.ShapeDtypeStruct((n, rows, wide), jnp.uint32),
+            out_shape=jax.ShapeDtypeStruct((n, rows, wide), out_dtype),
             interpret=interpret,
-        )(q, p1, p2, betas, wq2, masks, rr_bits, scal, thr)
+        )(q, p1, p2, betas, wq2, keys, signs, rrk, scal)
     grid = (rows // block_rows, n // block_workers)
     q_spec = pl.BlockSpec((block_workers, block_rows, wide),
                           lambda i, k: (k, i, 0))
     h_spec = pl.BlockSpec((block_rows, wide), lambda i, k: (i, 0))
     w_spec = pl.BlockSpec((block_workers, 1), lambda i, k: (k, 0))
     return pl.pallas_call(
-        _masked_pack_kernel,
+        functools.partial(_masked_pack_kernel, cohort=cohort,
+                          word_bits=word_bits, use_masks=use_masks,
+                          rr_threshold=rr_threshold, gridded=True),
         grid=grid,
-        in_specs=[q_spec, h_spec, h_spec, w_spec, w_spec, q_spec, q_spec,
+        in_specs=[q_spec, h_spec, h_spec, w_spec, w_spec,
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY),
                   pl.BlockSpec(memory_space=pl.ANY),
                   pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=q_spec,
-        out_shape=jax.ShapeDtypeStruct((n, rows, wide), jnp.uint32),
+        out_shape=jax.ShapeDtypeStruct((n, rows, wide), out_dtype),
         interpret=interpret,
-    )(q, p1, p2, betas, wq2, masks, rr_bits, scal, thr)
+    )(q, p1, p2, betas, wq2, keys, signs, rrk, scal)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "block_rows",
@@ -187,22 +373,29 @@ def masked_master_update_2d(q_pilot, masked, sum_wq, p1, p2, t, alpha0,
                             scale_mult, *, interpret: bool = True,
                             block_rows: int = BLOCK_ROWS,
                             block_workers: int = BLOCK_WORKERS):
-    """Sum-then-unmask Eq. (3) over masked uint32 wire words.
+    """Sum-then-unmask Eq. (3) over masked wire words.
 
-    q_pilot/p1/p2 (R, 512) float; masked (N, R, 512) uint32; ``sum_wq``
-    the public scalar ``sum_k W_k`` (uint32); ``scale_mult`` the fixed-
-    point descale with the RR unbias folded in; ``t`` may be traced.
-    Returns (R, 512) in q_pilot.dtype. Bitwise invariant under every
-    (block_rows, block_workers) plan — modular accumulation is order-free.
+    q_pilot/p1/p2 (R, 512) float; masked (N, R, 512) uint16 or uint32 (the
+    wire dtype picks the modulus); ``sum_wq`` the public scalar
+    ``sum_k W_k`` (uint32 — truncated to the modulus here); ``scale_mult``
+    the fixed-point descale with the RR unbias folded in; ``t`` may be
+    traced. Returns (R, 512) in q_pilot.dtype. Bitwise invariant under
+    every (block_rows, block_workers) plan — modular accumulation is
+    order-free.
     """
     n, rows, _ = masked.shape
+    word_bits = 16 if masked.dtype == jnp.uint16 else 32
     scal = jnp.stack([jnp.asarray(t, jnp.float32),
                       jnp.asarray(alpha0, jnp.float32),
                       jnp.asarray(scale_mult, jnp.float32)])
-    sumw = jnp.asarray(sum_wq, jnp.uint32).reshape(1)
+    sumw = jnp.asarray(sum_wq, jnp.uint32)
+    if word_bits == 16:
+        sumw = (sumw & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+    sumw = sumw.reshape(1)
     if block_rows >= rows and block_workers >= n:
         return pl.pallas_call(
-            functools.partial(_masked_master_oneshot_kernel, n_workers=n),
+            functools.partial(_masked_master_oneshot_kernel, n_workers=n,
+                              word_bits=word_bits),
             in_specs=[pl.BlockSpec(q_pilot.shape, None),
                       pl.BlockSpec(masked.shape, None),
                       pl.BlockSpec(p1.shape, None),
@@ -220,14 +413,15 @@ def masked_master_update_2d(q_pilot, masked, sum_wq, p1, p2, t, alpha0,
     out, _acc = pl.pallas_call(
         functools.partial(_masked_master_kernel,
                           block_workers=block_workers,
-                          last_k=n // block_workers - 1),
+                          last_k=n // block_workers - 1,
+                          word_bits=word_bits),
         grid=grid,
         in_specs=[spec_f, spec_y, spec_f, spec_f,
                   pl.BlockSpec(memory_space=pl.ANY),
                   pl.BlockSpec(memory_space=pl.ANY)],
         out_specs=[spec_f, spec_f],
         out_shape=[jax.ShapeDtypeStruct(q_pilot.shape, q_pilot.dtype),
-                   jax.ShapeDtypeStruct(q_pilot.shape, jnp.uint32)],
+                   jax.ShapeDtypeStruct(q_pilot.shape, masked.dtype)],
         interpret=interpret,
     )(q_pilot, masked, p1, p2, scal, sumw)
     return out

@@ -236,31 +236,42 @@ def flat_master_update(buf_q_pilot, packed_stacked, w, buf_p1, buf_p2, *,
 
 
 def flat_ternary_pack_masked(bufs_q, buf_p1, buf_p2, *, t, beta,
-                             alpha1: float, wq, masks, rr_bits, rr_threshold,
+                             alpha1: float, wq, pair_keys, pair_signs,
+                             rr_keys, rr_threshold: int = 0,
+                             word_bits: int = 32, use_masks: bool = True,
                              interpret: bool | None = None,
                              block_rows: int | None = None,
                              block_workers: int | None = None):
     """Masked (secure-agg) uplink over FlatParams buffers: (N, rows, 128)
-    float -> (N, rows//4, 512) uint32 masked wire words in ONE launch.
+    float -> (N, rows//4, 512) wire words (uint16 at ``word_bits=16``,
+    else uint32) in ONE launch.
 
-    ``wq`` (N,) uint32 fixed-point Eq. (3) weights; ``masks``/``rr_bits``
-    (N, rows//4, 512) uint32 (pass ``masks`` again for ``rr_bits`` when DP
-    is off); ``rr_threshold`` the uint16 flip threshold. ``t`` may be
-    traced; ``beta`` a scalar or per-worker (N,) vector. Block plans
-    resolve through the ``kernels.tune`` table (kind ``uplink_masked``,
-    falling back to the ``uplink_stacked`` plan when untuned) — every plan
-    produces identical bits.
+    ``wq`` (N,) uint32 fixed-point Eq. (3) weights; ``pair_keys`` (N, L)
+    uint32 / ``pair_signs`` (N, L) int32 the per-pair counter keys and
+    participation-folded signs (``privacy.masking.pair_stream_keys`` /
+    ``pair_signs``); ``rr_keys`` (N,) uint32 per-worker RR keys;
+    ``rr_threshold`` the STATIC uint16 flip threshold (0 = DP off);
+    ``use_masks`` static (False = unmasked debug wire — no streams are
+    generated at all). The mask/RR planes are generated INSIDE the kernel
+    from these keys; no (N, rows, 512) tensor ever reaches HBM. ``t`` may
+    be traced; ``beta`` a scalar or per-worker (N,) vector. Block plans
+    resolve through the ``kernels.tune`` table (kind ``uplink_masked16`` /
+    ``uplink_masked`` by modulus, chaining down to the ``uplink_stacked``
+    plan when untuned) — every plan produces identical bits.
     """
     interpret = _default_interpret() if interpret is None else interpret
     n, rows, _ = bufs_q.shape
     r4 = rows // fw.PACK
     wide = LANES * fw.PACK
-    br, bw = _stacked_plan("uplink_masked", r4, n, block_rows,
-                           block_workers, interpret)
+    kind = "uplink_masked16" if word_bits == 16 else "uplink_masked"
+    br, bw = _stacked_plan(kind, r4, n, block_rows, block_workers,
+                           interpret)
     return mw.ternary_pack_masked_2d(
         bufs_q.reshape(n, r4, wide), buf_p1.reshape(r4, wide),
-        buf_p2.reshape(r4, wide), t, beta, alpha1, wq, masks, rr_bits,
-        rr_threshold, interpret=interpret, block_rows=br, block_workers=bw)
+        buf_p2.reshape(r4, wide), t, beta, alpha1, wq, pair_keys,
+        pair_signs, rr_keys, rr_threshold=int(rr_threshold),
+        word_bits=word_bits, use_masks=use_masks, interpret=interpret,
+        block_rows=br, block_workers=bw)
 
 
 def flat_masked_master_update(buf_q_pilot, masked, sum_wq, buf_p1, buf_p2,
@@ -268,22 +279,25 @@ def flat_masked_master_update(buf_q_pilot, masked, sum_wq, buf_p1, buf_p2,
                               interpret: bool | None = None,
                               block_rows: int | None = None,
                               block_workers: int | None = None):
-    """Sum-then-unmask Eq. (3) over the masked uint32 wire words.
+    """Sum-then-unmask Eq. (3) over the masked wire words.
 
-    buf_* (rows, 128) float; masked (N, rows//4, 512) uint32; ``sum_wq``
-    the public scalar sum of the fixed-point weights; ``scale_mult`` the
-    fixed-point descale with the RR unbias folded in. ``t`` may be traced.
-    Returns the new global buffer, (rows, 128) in buf_q_pilot.dtype —
-    bitwise invariant under every block plan (modular accumulation is
-    order-free; the oracle is ``repro.privacy.ref.masked_master_ref``).
+    buf_* (rows, 128) float; masked (N, rows//4, 512) uint16 or uint32
+    (the dtype picks the modulus); ``sum_wq`` the public scalar sum of the
+    fixed-point weights; ``scale_mult`` the fixed-point descale with the
+    RR unbias folded in. ``t`` may be traced. Returns the new global
+    buffer, (rows, 128) in buf_q_pilot.dtype — bitwise invariant under
+    every block plan (modular accumulation is order-free; the oracle is
+    ``repro.privacy.ref.masked_master_ref``).
     """
     interpret = _default_interpret() if interpret is None else interpret
     rows = buf_q_pilot.shape[0]
     n = masked.shape[0]
     r4 = rows // fw.PACK
     wide = LANES * fw.PACK
-    br, bw = _stacked_plan("master_masked", r4, n, block_rows,
-                           block_workers, interpret)
+    kind = ("master_masked16" if masked.dtype == jnp.uint16
+            else "master_masked")
+    br, bw = _stacked_plan(kind, r4, n, block_rows, block_workers,
+                           interpret)
     out = mw.masked_master_update_2d(
         buf_q_pilot.reshape(r4, wide), masked, sum_wq,
         buf_p1.reshape(r4, wide), buf_p2.reshape(r4, wide), t, alpha0,

@@ -2,6 +2,11 @@
 
 These share semantics with repro.core.{ternary,packing,update} but operate
 on the flat, padded layouts the kernels use, so tests compare exactly.
+The masked (secure-aggregation) wire's oracles live in
+``repro.privacy.ref`` — they consume host-expanded mask/RR streams
+(``privacy.masking.net_masks`` / ``privacy.dp.rr_bits``), which the
+kernels of ``kernels.masked_wire`` must reproduce bit-for-bit from their
+in-kernel counter PRNG at either modulus.
 """
 from __future__ import annotations
 

@@ -40,13 +40,16 @@ BLOCK_ROWS = 64
 BLOCK_WORKERS = 1
 
 KINDS = ("uplink", "uplink_stacked", "master", "uplink_masked",
-         "master_masked")
+         "master_masked", "uplink_masked16", "master_masked16")
 
 # Masked kernels share the grid geometry of their plaintext counterparts
 # (same block shapes over the same (rows, N) iteration space), so an
-# untuned masked kind borrows the unmasked kind's tuned plan before
-# falling back to the backend heuristic.
-MASKED_FALLBACK = {"uplink_masked": "uplink_stacked",
+# untuned masked kind borrows down a chain of geometry twins: the 16-bit
+# modulus kinds fall back to the 32-bit masked plans, which fall back to
+# the unmasked kinds, which fall back to the backend heuristic.
+MASKED_FALLBACK = {"uplink_masked16": "uplink_masked",
+                   "master_masked16": "master_masked",
+                   "uplink_masked": "uplink_stacked",
                    "master_masked": "master"}
 
 # (kind, rows, n_workers, backend) -> {"block_rows": int, "block_workers": int}
@@ -112,10 +115,11 @@ def lookup(kind: str, rows: int, n_workers: int = 1, *,
     make when the caller leaves the block sizes unspecified.
     """
     backend = backend_tag(interpret)
-    plan = _TABLE.get((kind, rows, max(1, n_workers), backend))
-    if plan is None and kind in MASKED_FALLBACK:
-        plan = _TABLE.get((MASKED_FALLBACK[kind], rows, max(1, n_workers),
-                           backend))
+    probe = kind
+    plan = _TABLE.get((probe, rows, max(1, n_workers), backend))
+    while plan is None and probe in MASKED_FALLBACK:
+        probe = MASKED_FALLBACK[probe]
+        plan = _TABLE.get((probe, rows, max(1, n_workers), backend))
     if plan is None:
         plan = default_plan(kind, rows, n_workers, backend)
     return plan["block_rows"], plan["block_workers"]
@@ -252,54 +256,71 @@ def autotune_master(rows: int, n_workers: int, *,
                   interpret=itp, reps=reps)
 
 
-def _masked_inputs(rows: int, n_workers: int, seed: int):
-    """Shared random operands of the masked-kernel sweeps."""
+def _masked_inputs(rows: int, n_workers: int, seed: int, word_bits: int):
+    """Shared operands of the masked-kernel sweeps: random history views
+    plus the tiny per-pair key/sign matrices the in-kernel PRNG consumes
+    (sweep timings therefore include the real mask-generation cost)."""
     from repro.kernels import fused_wire as fw
+    from repro.privacy import dp as pdp
+    from repro.privacy import masking as pvm
     k = jax.random.PRNGKey(seed)
     wide = fw.LANES * fw.PACK
     q = jax.random.normal(k, (n_workers, rows, wide))
     p1 = jax.random.normal(jax.random.fold_in(k, 1), (rows, wide))
     p2 = jax.random.normal(jax.random.fold_in(k, 2), (rows, wide))
-    masks = jax.random.bits(jax.random.fold_in(k, 3),
-                            (n_workers, rows, wide), jnp.uint32)
-    wq = jnp.full((n_workers,), (1 << 24) // max(n_workers, 1), jnp.uint32)
-    return q, p1, p2, masks, wq
+    keys = pvm.pair_stream_keys(seed, n_workers, 3)
+    signs = pvm.pair_signs(n_workers)
+    rrk = pdp.rr_stream_keys(seed + 1, 3, n_workers)
+    fb = 14 if word_bits == 16 else 24
+    wq = jnp.full((n_workers,), (1 << fb) // max(n_workers, 1), jnp.uint32)
+    return q, p1, p2, keys, signs, rrk, wq
 
 
 def autotune_masked_uplink(rows: int, n_workers: int, *,
                            interpret: bool | None = None, reps: int = 2,
-                           seed: int = 0) -> dict:
-    """Timed sweep of the masked-uplink (secure-agg) plans for (rows, N)."""
+                           seed: int = 0, word_bits: int = 32) -> dict:
+    """Timed sweep of the masked-uplink (secure-agg) plans for (rows, N) at
+    one wire modulus; fills the ``uplink_masked16``/``uplink_masked`` kind
+    by ``word_bits``."""
     from repro.kernels import masked_wire as mw
     itp = (jax.default_backend() != "tpu") if interpret is None else interpret
-    q, p1, p2, masks, wq = _masked_inputs(rows, n_workers, seed)
+    q, p1, p2, keys, signs, rrk, wq = _masked_inputs(rows, n_workers, seed,
+                                                     word_bits)
 
     def run_plan(plan):
         return mw.ternary_pack_masked_2d(
-            q, p1, p2, 3, 0.2, 0.01, wq, masks, masks, 0, interpret=itp,
+            q, p1, p2, 3, 0.2, 0.01, wq, keys, signs, rrk,
+            rr_threshold=0, word_bits=word_bits, interpret=itp,
             block_rows=plan["block_rows"],
             block_workers=plan["block_workers"])
 
-    return _sweep("uplink_masked", rows, n_workers, run_plan,
-                  interpret=itp, reps=reps)
+    kind = "uplink_masked16" if word_bits == 16 else "uplink_masked"
+    return _sweep(kind, rows, n_workers, run_plan, interpret=itp, reps=reps)
 
 
 def autotune_masked_master(rows: int, n_workers: int, *,
                            interpret: bool | None = None, reps: int = 2,
-                           seed: int = 0) -> dict:
-    """Timed sweep of the sum-then-unmask master plans for (rows, N)."""
+                           seed: int = 0, word_bits: int = 32) -> dict:
+    """Timed sweep of the sum-then-unmask master plans for (rows, N) at one
+    wire modulus."""
     from repro.kernels import masked_wire as mw
     itp = (jax.default_backend() != "tpu") if interpret is None else interpret
-    q, p1, p2, masks, wq = _masked_inputs(rows, n_workers, seed)
+    q, p1, p2, keys, signs, rrk, wq = _masked_inputs(rows, n_workers, seed,
+                                                     word_bits)
+    word = jnp.uint16 if word_bits == 16 else jnp.uint32
+    masked = jax.random.bits(jax.random.PRNGKey(seed + 3),
+                             (n_workers, rows, q.shape[-1]),
+                             jnp.uint32).astype(word)
+    fb = 14 if word_bits == 16 else 24
 
     def run_plan(plan):
         return mw.masked_master_update_2d(
-            q[0], masks, jnp.sum(wq), p1, p2, 3, 0.01, 2.0 ** -24,
+            q[0], masked, jnp.sum(wq), p1, p2, 3, 0.01, 2.0 ** -fb,
             interpret=itp, block_rows=plan["block_rows"],
             block_workers=plan["block_workers"])
 
-    return _sweep("master_masked", rows, n_workers, run_plan,
-                  interpret=itp, reps=reps)
+    kind = "master_masked16" if word_bits == 16 else "master_masked"
+    return _sweep(kind, rows, n_workers, run_plan, interpret=itp, reps=reps)
 
 
 def save_table(path: str) -> None:

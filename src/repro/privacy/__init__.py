@@ -2,23 +2,33 @@
 
 Makes the packed ternary wire of PRs 1-4 itself privacy-preserving:
 pairwise-masked secure aggregation (the master only ever sees the modular
-SUM of the workers' fixed-point-weighted ternary fields), local-DP 3-ary
-randomized response on the codes with exact unbiasing, an (eps, delta)
-accountant that rides the round carry, and traced-program leakage audits
-that enforce the §4.2 information-flow policy in both runtimes. See the
-README "Privacy architecture" section for the threat model and math.
+SUM of the workers' fixed-point-weighted ternary fields — mod 2**16 by
+default, 2**32 on the conservative path), local-DP 3-ary randomized
+response on the codes with exact unbiasing, an (eps, delta) accountant
+that rides the round carry, and traced-program leakage audits that enforce
+the §4.2 information-flow policy in both runtimes. The mask and RR streams
+are COUNTER-based (``masking.mix32`` chains): kernels regenerate them
+in-register from tiny per-pair/per-worker keys, and the host-side
+expansions here are the order-exact reference oracles. See the README
+"Privacy architecture" section for the threat model and math.
 """
 from repro.privacy.accountant import PrivacyAccountant
 from repro.privacy.audit import (check_fed_collectives, check_round_program,
                                  collective_payloads)
-from repro.privacy.dp import rr_bits, rr_bits_worker, rr_fields
-from repro.privacy.masking import (net_mask_slab, net_masks, pair_incidence,
-                                   quantize_weights)
+from repro.privacy.dp import (rr_bits, rr_bits_worker, rr_fields,
+                              rr_stream_key, rr_stream_keys)
+from repro.privacy.masking import (mix32, net_mask_slab, net_masks,
+                                   pair_incidence, pair_signs,
+                                   pair_signs_row, pair_stream_keys,
+                                   pair_stream_keys_row, quantize_weights,
+                                   stream_key)
 from repro.privacy.spec import PrivacySpec
 
 __all__ = [
     "PrivacyAccountant", "PrivacySpec", "check_fed_collectives",
-    "check_round_program", "collective_payloads", "net_mask_slab",
-    "net_masks", "pair_incidence", "quantize_weights", "rr_bits",
-    "rr_bits_worker", "rr_fields",
+    "check_round_program", "collective_payloads", "mix32", "net_mask_slab",
+    "net_masks", "pair_incidence", "pair_signs", "pair_signs_row",
+    "pair_stream_keys", "pair_stream_keys_row", "quantize_weights",
+    "rr_bits", "rr_bits_worker", "rr_fields", "rr_stream_key",
+    "rr_stream_keys", "stream_key",
 ]

@@ -16,12 +16,19 @@ Two boundaries are audited:
   full-precision parameters never enter master-side compute. On the masked
   wire path, additionally no plaintext ternary-code tensor (int8/uint8) may
   materialize anywhere in the program outside kernel bodies — codes exist
-  only in VMEM registers and leave the worker already masked.
+  only in VMEM registers and leave the worker already masked — and no
+  worker launch may consume a mask-shaped unsigned-int tensor: the pairwise
+  mask and RR streams are generated INSIDE the kernels from per-pair /
+  per-worker counter keys, so a materialized (N, rows, 512) mask operand in
+  the uplink is a leak-shaped smell (an HBM copy of per-worker secrets the
+  policy says must stay in registers) as well as the exact perf regression
+  the in-kernel PRNG removed.
 * **Distributed** (:func:`check_fed_collectives`): what crosses between
   fed instances is exactly the collective payloads. No float payload
   stacked over the fed axis may cross (the pilot travels as a masked psum
   of a single slab), and on the masked wire no int8/uint8 code payload may
-  cross — only mod-2**32 masked words.
+  cross — only masked words in a ``MASKED_WORD_DTYPES`` integer dtype
+  (uint16 at the default modulus, uint32 at 32).
 """
 from __future__ import annotations
 
@@ -42,9 +49,20 @@ COLLECTIVE_PRIMITIVES = frozenset({
 
 _CODE_DTYPE_NAMES = ("int8", "uint8")
 
+#: The wire words the masked path is allowed to move across the fed axis —
+#: one word per parameter at either supported modulus.
+MASKED_WORD_DTYPES = ("uint16", "uint32")
+
 
 def _is_code_dtype(dtype) -> bool:
     return str(dtype) in _CODE_DTYPE_NAMES
+
+
+def _is_unsigned_dtype(dtype) -> bool:
+    try:
+        return jnp.issubdtype(dtype, jnp.unsignedinteger)
+    except TypeError:
+        return False
 
 
 def _is_float_dtype(dtype) -> bool:
@@ -71,6 +89,22 @@ def _stacked_float_buffer(shape, dtype, n: int) -> bool:
     for d in shape[1:]:
         per_worker *= d
     return per_worker > _SCALAR_PAYLOAD_MAX
+
+
+def _stacked_mask_buffer(shape, dtype, n: int) -> bool:
+    """True when (shape, dtype) looks like a materialized per-worker mask /
+    RR tensor: unsigned words stacked over the worker axis with more than
+    key-matrix volume per worker. The in-kernel-PRNG uplink consumes only
+    the (N, N) pair-key/sign matrices, the (N,) RR keys and the (N, 1)
+    fixed-point weights — all at most N words per worker — so anything
+    bigger (an (N, rows, 512) mask plane) is a mask tensor round-tripping
+    through HBM."""
+    if not _is_unsigned_dtype(dtype) or len(shape) < 1 or shape[0] != n:
+        return False
+    per_worker = 1
+    for d in shape[1:]:
+        per_worker *= d
+    return per_worker > max(_SCALAR_PAYLOAD_MAX, n)
 
 
 def as_specs(tree: Any) -> Any:
@@ -121,6 +155,12 @@ def check_fed_collectives(fn: Callable, *args, n_fed: int,
             raise LeakageError(
                 f"plaintext ternary codes cross a {p['primitive']} on the "
                 f"masked wire: shape {p['shape']} {p['dtype']}")
+        if (masked and _is_unsigned_dtype(p["dtype"])
+                and p["dtype"] not in MASKED_WORD_DTYPES):
+            raise LeakageError(
+                f"unexpected unsigned payload crosses a {p['primitive']} "
+                f"on the masked wire: shape {p['shape']} {p['dtype']} — "
+                f"masked words must be one of {MASKED_WORD_DTYPES}")
     return {"boundary": "fed-collectives", "n_payloads": len(payloads),
             "masked": masked}
 
@@ -132,9 +172,13 @@ def check_round_program(fn: Callable, *args, n_workers: int,
     The final pallas launch is the master update; none of its float
     operands may be stacked over the worker axis (the only float inputs are
     the dynamically gathered pilot slab and the public history). With
-    ``masked=True``, additionally assert that no int8/uint8 ternary-code
-    tensor materializes anywhere outside kernel bodies — the packed
-    plaintext wire buffer of the unmasked path must not exist.
+    ``masked=True``, additionally assert that (a) no int8/uint8
+    ternary-code tensor materializes anywhere outside kernel bodies — the
+    packed plaintext wire buffer of the unmasked path must not exist — and
+    (b) no worker-side (non-master) launch consumes a mask-shaped
+    unsigned-int operand stacked over the worker axis: mask and RR streams
+    must be generated in-kernel from counter keys, never materialized in
+    HBM and fed to the uplink (the pre-in-kernel-PRNG signature).
     """
     jaxpr = _jaxpr_of(fn, *args, **kwargs)
     launches = [e for e in iter_jaxpr_eqns(jaxpr, into_pallas=False)
@@ -162,5 +206,17 @@ def check_round_program(fn: Callable, *args, n_workers: int,
                         f"plaintext code tensor materialized on the masked "
                         f"wire path: {eqn.primitive.name} -> "
                         f"{tuple(aval.shape)} {aval.dtype}")
+        for launch in launches[:-1]:
+            for v in launch.invars:
+                aval = getattr(v, "aval", None)
+                if aval is None or not getattr(aval, "shape", None):
+                    continue
+                if _stacked_mask_buffer(tuple(aval.shape), aval.dtype,
+                                        n_workers):
+                    raise LeakageError(
+                        f"uplink launch consumes a materialized mask "
+                        f"tensor: shape {tuple(aval.shape)} {aval.dtype} — "
+                        f"mask/RR streams must be generated in-kernel from "
+                        f"counter keys, not round-tripped through HBM")
     return {"boundary": "round-step", "n_launches": len(launches),
             "masked": masked}

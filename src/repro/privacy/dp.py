@@ -9,12 +9,18 @@ and per coordinate this is pure eps-DP with
           = (1 - p + p/3) / (p/3)          =>  eps = ln((3 - 2p) / p).
 
 Both the flip decision and the replacement symbol come from ONE uint32 per
-element (stateless: ``bits(fold_in(root, t))``): the flip compares the low
-16 bits against a quantized threshold (so ``p`` lives on a 1/65536 grid —
-``PrivacySpec`` reports the realized values), the replacement is the high
-16 bits mod 3 (bias 1/65536 — negligible and identical in kernel and
-oracle). Low and high halves of a threefry word are independent, so the
-two decisions don't correlate.
+element: the flip compares the low 16 bits against a quantized threshold
+(so ``p`` lives on a 1/65536 grid — ``PrivacySpec`` reports the realized
+values), the replacement is the high 16 bits mod 3 (bias 1/65536 —
+negligible and identical in kernel and oracle). The word is a COUNTER
+stream like the pairwise masks (``repro.privacy.masking``): worker ``k``'s
+RR word at flat element ``e`` is ``mix32(mix32(e) + rr_key_k)`` with
+``rr_key_k = stream_key(dp_seed, k, t, shard, domain=RR_DOMAIN)`` — a
+per-worker uint32 key in its own salt domain, so the Pallas kernels
+regenerate the plane in-register from an (n,) key vector and no RR bit
+tensor exists in HBM either. RR always draws FULL 32-bit words per
+element, independent of the wire modulus (the 16-bit masked path still
+needs 16 flip + 16 replacement bits per element).
 
 Unbiasing: E[RR(field)] = (1 - p) field + p (the uniform mean over
 {0, 1, 2} is 1), so after the master subtracts ``sum_k W_k`` (the de-bias
@@ -27,25 +33,44 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-def rr_bits(seed: int, t, shape: tuple) -> jax.Array:
-    """The round's randomized-response bit plane: uint32 of ``shape``,
-    keyed by the (possibly traced) round index only — resume-stable."""
-    key = jax.random.fold_in(jax.random.PRNGKey(seed), t)
-    return jax.random.bits(key, tuple(shape), jnp.uint32)
+from repro.privacy.masking import (RR_DOMAIN, index_hash, mask_stream,
+                                   stream_key)
 
 
-def rr_bits_worker(seed: int, t, worker_idx, shape: tuple,
+def rr_stream_key(seed, t, worker_idx, shard_idx=0) -> jax.Array:
+    """One worker's uint32 RR stream key for (round, shard) — the only RR
+    state a kernel launch consumes. All inputs may be traced."""
+    return stream_key(seed, worker_idx, t, shard_idx, domain=RR_DOMAIN)
+
+
+def rr_stream_keys(seed, t, n: int, shard_idx=0) -> jax.Array:
+    """The (n,) per-worker RR key vector of one round."""
+    return rr_stream_key(seed, t, jnp.arange(n), shard_idx)
+
+
+def rr_bits(seed, t, n: int, shape: tuple) -> jax.Array:
+    """The cohort's randomized-response word planes: uint32 ``(n, *shape)``
+    — the reference oracle of the in-kernel RR stream (keyed by the
+    possibly-traced round index; resume-stable)."""
+    import numpy as np
+    size = int(np.prod(shape))
+    keys = rr_stream_keys(seed, t, n)
+    h = index_hash(size, 32)
+    return mask_stream(keys[:, None], h[None, :]).reshape((n,) + tuple(shape))
+
+
+def rr_bits_worker(seed, t, worker_idx, shape: tuple,
                    shard_idx=0) -> jax.Array:
-    """One worker's RR bit plane over its model-shard slab — the
+    """One worker's RR word plane over its model-shard slab — the
     distributed form, keyed by (round, worker, model shard). Like the
     pairwise masks, the stream is per-shard (the flat layout's padding —
     and so the element indexing — depends on the shard count), which is
     why cross-mesh bitwise parity is a DP-off property; with DP on the
     mechanism is still identical in distribution on every mesh."""
-    key = jax.random.fold_in(jax.random.PRNGKey(seed), t)
-    key = jax.random.fold_in(key, worker_idx)
-    return jax.random.bits(jax.random.fold_in(key, shard_idx),
-                           tuple(shape), jnp.uint32)
+    import numpy as np
+    size = int(np.prod(shape))
+    key = rr_stream_key(seed, t, worker_idx, shard_idx)
+    return mask_stream(key, index_hash(size, 32)).reshape(tuple(shape))
 
 
 def rr_fields(fields: jax.Array, bits: jax.Array, threshold) -> jax.Array:

@@ -1,12 +1,11 @@
 """Pairwise additive masks for secure aggregation — stateless, per-round.
 
 Classic pairwise masking (Bonawitz et al., adapted to the FedPC wire): every
-unordered worker pair ``(k, l)``, ``k < l``, shares a seed; each round both
-derive the same uint32 mask tensor ``m_kl = bits(fold_in(seed_kl, t))`` and
-worker ``k`` *adds* it while worker ``l`` *subtracts* it (mod 2**32). The
-net mask of worker ``k`` is
+unordered worker pair ``(k, l)``, ``k < l``, shares a key; each round both
+derive the same mask stream and worker ``k`` *adds* it while worker ``l``
+*subtracts* it (mod 2**modulus_bits). The net mask of worker ``k`` is
 
-    M_k = sum_{l > k} m_kl - sum_{l < k} m_lk        (mod 2**32)
+    M_k = sum_{l > k} m_kl - sum_{l < k} m_lk        (mod 2**modulus_bits)
 
 and ``sum_k M_k = 0`` exactly — integer cancellation, no epsilon of float
 error, independent of summation order or reduction topology (modular
@@ -14,20 +13,32 @@ addition is associative+commutative), which is what lets the distributed
 runtime reduce with ``psum_scatter + all_gather`` and stay bit-identical to
 a replicated sum.
 
-Everything is stateless: seeds chain from one public root via ``fold_in``
-(a real deployment would run a pairwise key agreement; the simulation's
-root-seed derivation stands in for it — see the README threat model), and
-the round index folds in last, so resumed runs regenerate the identical
-mask schedule. Under partial participation the masks of a pair are active
-only when BOTH endpoints are sampled (the participation mask is public), so
-the cancellation holds over exactly the reporting set.
+The streams are COUNTER-BASED: the mask word of pair ``(k, l)`` at absolute
+flat element index ``e`` is
 
-Cost: the simulator materializes all ``N(N-1)/2`` pair masks per round
-(the O(N^2) price of pairwise secure aggregation); each distributed fed
-instance generates ``N`` slab-sized pair streams — its own ``N-1`` plus
-one statically unavoidable self-pair stream whose sign is zero (the worker
-index is a traced mesh index, so the l == idx case cannot be pruned at
-trace time).
+    word(e) = mix32(mix32(e') + key_kl),   key_kl = stream_key(seed, pid,
+                                                              t, shard)
+
+where ``mix32`` is the lowbias32 integer finalizer, ``pid = min*n + max``
+the symmetric pair id, and ``e' = e`` for the 32-bit modulus or ``e >> 1``
+for the 16-bit one (one 32-bit stream word feeds TWO consecutive uint16
+lanes — low half at even ``e``, high at odd — halving mask-generation
+cost). Because the stream is a pure function of (key, element index), the
+Pallas kernels regenerate it IN-REGISTER per tile from the tiny ``(n, n)``
+key matrix — no ``(N, rows, 512)`` mask tensor ever exists in HBM — while
+this module's :func:`net_masks` / :func:`net_mask_slab` compute the same
+words in plain jnp as the order-exact reference oracle for parity tests.
+``mix32(e')`` is shared across every pair stream of a tile, so consecutive
+pairs reuse the counter hash and only pay the ``+ key`` finalizer.
+
+Everything is stateless: keys chain from one public root via ``mix32``
+salting (a real deployment would run a pairwise key agreement; the
+simulation's root-seed derivation stands in for it — see the README threat
+model), and the round index salts last, so resumed runs regenerate the
+identical mask schedule. Under partial participation the masks of a pair
+are active only when BOTH endpoints are sampled (the participation mask is
+public — it zeroes the pair's sign), so the cancellation holds over
+exactly the reporting set.
 """
 from __future__ import annotations
 
@@ -36,10 +47,91 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+# Domain-separation salts (mask vs randomized-response key derivation) and
+# the per-level mixing constants of the key chain.
+MASK_DOMAIN = 0x9E3779B9
+RR_DOMAIN = 0x3C6EF372
+_SALT_STREAM = 0x85EBCA6B
+_SALT_ROUND = 0xC2B2AE35
+_SALT_SHARD = 0x27D4EB2F
+
+
+def mix32(x) -> jax.Array:
+    """The lowbias32 finalizer — a full-avalanche uint32 -> uint32 hash.
+
+    Pure shifts/multiplies, so it runs identically in plain jnp and inside
+    Pallas kernel bodies (the kernel/oracle bitwise identity is this one
+    expression, not two copies)."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def stream_key(seed, stream_id, t, shard_idx=0, *,
+               domain: int = MASK_DOMAIN) -> jax.Array:
+    """Per-(stream, round, shard) uint32 key of a counter stream.
+
+    ``stream_id`` is the symmetric pair id for masks (``pair_index``) or
+    the worker index for RR; ``t`` the (possibly traced) round;
+    ``shard_idx`` the model-shard index (the flat layout's padding — and
+    so the element indexing — depends on the shard count, which is why
+    streams are per-shard). ``domain`` separates mask keys from RR keys.
+    All inputs may be traced; vectorized inputs broadcast."""
+    k = mix32(jnp.asarray(seed, jnp.uint32) ^ jnp.uint32(domain))
+    k = mix32(k + jnp.asarray(stream_id, jnp.uint32)
+              * jnp.uint32(_SALT_STREAM))
+    k = mix32(k + jnp.asarray(t, jnp.uint32) * jnp.uint32(_SALT_ROUND))
+    k = mix32(k + jnp.asarray(shard_idx, jnp.uint32)
+              * jnp.uint32(_SALT_SHARD))
+    return k
+
+
+def mask_stream(key, hashed_idx) -> jax.Array:
+    """Stream word(s) at pre-hashed counter(s): ``mix32(mix32(e) + key)``.
+
+    Split from the counter hash so one ``mix32(e)`` tile serves every pair
+    stream (keys differ, the counter hash does not)."""
+    return mix32(jnp.asarray(hashed_idx, jnp.uint32)
+                 + jnp.asarray(key, jnp.uint32))
+
+
+def halves16(u: jax.Array) -> jax.Array:
+    """Interleave the 16-bit halves of uint32 stream words along the last
+    axis: (..., w) -> (..., 2w) of values in [0, 2**16), low half first —
+    the 16-bit modulus' two-lanes-per-word layout."""
+    lo = u & jnp.uint32(0xFFFF)
+    hi = u >> jnp.uint32(16)
+    return jnp.stack([lo, hi], axis=-1).reshape(
+        u.shape[:-1] + (2 * u.shape[-1],))
+
+
+def stream_values(key, hashed_idx, word_bits: int) -> jax.Array:
+    """Mask values for one stream as uint32: full words at 32, interleaved
+    16-bit halves at 16 (``hashed_idx`` then holds ``mix32(e >> 1)`` over
+    HALF the elements; output doubles the last axis)."""
+    u = mask_stream(key, hashed_idx)
+    return halves16(u) if word_bits == 16 else u
+
+
+def index_hash(size: int, word_bits: int, base=0) -> jax.Array:
+    """The shared counter-hash vector of a contiguous element range
+    ``[base, base + size)``: ``mix32(e)`` per element at 32-bit, or
+    ``mix32(e >> 1)`` per element PAIR at 16-bit (``base`` must then be
+    even; returns ``size // 2`` entries — pair with :func:`halves16`)."""
+    if word_bits == 16:
+        return mix32(jnp.asarray(base, jnp.uint32) // jnp.uint32(2)
+                     + jnp.arange(size // 2, dtype=jnp.uint32))
+    return mix32(jnp.asarray(base, jnp.uint32)
+                 + jnp.arange(size, dtype=jnp.uint32))
+
 
 def pair_index(i, j, n: int):
     """Symmetric pair id of the unordered pair {i, j} in [0, n^2): both
-    endpoints derive the same id (min-major), so both fold the same seed."""
+    endpoints derive the same id (min-major), so both mix the same key."""
     lo = jnp.minimum(i, j)
     hi = jnp.maximum(i, j)
     return lo * n + hi
@@ -50,7 +142,7 @@ def pair_incidence(n: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
 
     Returns ``(C, i_idx, j_idx)`` where pairs are enumerated ``(i, j)`` with
     ``i < j``; ``C`` is the (n, P) signed incidence matrix (+1 for the lower
-    endpoint, -1 for the upper — ``net = C @ pair_masks`` mod 2**32) and
+    endpoint, -1 for the upper — ``net = C @ pair_masks`` mod 2**wb) and
     ``i_idx``/``j_idx`` are the (P,) endpoint indices.
     """
     pairs = [(i, j) for i in range(n) for j in range(i + 1, n)]
@@ -64,17 +156,66 @@ def pair_incidence(n: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     return c, i_idx, j_idx
 
 
-def _pair_round_bits(seed: int, pid, t, shape) -> jax.Array:
-    """The uint32 mask tensor of one pair for round ``t`` (both may be
-    traced): ``bits(fold_in(fold_in(root, pid), t))``."""
-    key = jax.random.fold_in(jax.random.PRNGKey(seed), pid)
-    return jax.random.bits(jax.random.fold_in(key, t), shape, jnp.uint32)
+def pair_stream_keys(seed, n: int, t, shard_idx=0) -> jax.Array:
+    """The (n, n) symmetric matrix of pair stream keys for round ``t`` —
+    the ONLY mask state a kernel launch consumes (n^2 words, not
+    n x rows x 512). The diagonal (self-pairs) is derived but its sign is
+    always zero. ``t``/``shard_idx`` may be traced."""
+    idx = jnp.arange(n)
+    pid = pair_index(idx[:, None], idx[None, :], n)
+    return stream_key(seed, pid, t, shard_idx)
 
 
-def net_masks(seed: int, n: int, t, shape: tuple, *,
-              participation=None) -> jax.Array:
-    """Every worker's net additive mask for round ``t``: uint32
-    ``(n, *shape)`` summing to exactly zero mod 2**32 over the active set.
+def pair_signs(n: int, *, participation=None) -> jax.Array:
+    """The (n, n) antisymmetric sign matrix: ``signs[i, j]`` is the factor
+    worker ``i`` applies to pair stream ``{i, j}`` (+1 below the diagonal
+    pair order, -1 above, 0 on it), with participation folded in — a
+    pair's masks are active only when BOTH endpoints are sampled."""
+    idx = jnp.arange(n)
+    i = idx[:, None]
+    j = idx[None, :]
+    signs = jnp.where(i == j, 0, jnp.where(i < j, 1, -1)).astype(jnp.int32)
+    if participation is not None:
+        m = (jnp.asarray(participation) > 0).astype(jnp.int32)
+        signs = signs * (m[:, None] * m[None, :])
+    return signs
+
+
+def pair_stream_keys_row(seed, idx, n: int, t, shard_idx=0) -> jax.Array:
+    """One worker's (n,) row of :func:`pair_stream_keys` — the distributed
+    form (``idx`` is a traced mesh index)."""
+    others = jnp.arange(n)
+    return stream_key(seed, pair_index(idx, others, n), t, shard_idx)
+
+
+def pair_signs_row(idx, n: int, *, participation=None) -> jax.Array:
+    """One worker's (n,) row of :func:`pair_signs` (``idx`` traced)."""
+    others = jnp.arange(n)
+    signs = jnp.where(others == idx, 0,
+                      jnp.where(idx < others, 1, -1)).astype(jnp.int32)
+    if participation is not None:
+        m = (jnp.asarray(participation) > 0).astype(jnp.int32)
+        signs = signs * m * m[idx]
+    return signs
+
+
+def _pair_values(seed, pids, t, size: int, word_bits: int,
+                 shard_idx=0) -> jax.Array:
+    """(P, size) uint32 mask VALUES (< 2**word_bits) of the given pair
+    ids — the oracle-side stream expansion."""
+    h = index_hash(size if word_bits == 32 else 2 * ((size + 1) // 2),
+                   word_bits)
+    keys = stream_key(seed, pids, t, shard_idx)
+    vals = stream_values(keys[:, None], h[None, :], word_bits)
+    return vals[:, :size]
+
+
+def net_masks(seed, n: int, t, shape: tuple, *, word_bits: int = 32,
+              participation=None, shard_idx=0) -> jax.Array:
+    """Every worker's net additive mask for round ``t``: ``(n, *shape)`` of
+    ``word_dtype`` summing to exactly zero mod 2**word_bits over the
+    active set — the ORDER-EXACT REFERENCE ORACLE of the in-kernel stream
+    generation (the kernels never consume this tensor; parity tests do).
 
     ``t`` may be traced (the round index inside ``scan_rounds``).
     ``participation`` is an optional public (n,) 0/1 mask: a pair's mask is
@@ -82,58 +223,65 @@ def net_masks(seed: int, n: int, t, shape: tuple, *,
     the reporting workers cancel. Non-participants get an all-zero mask
     (they contribute nothing to the aggregate anyway — their weight is 0).
     """
+    out_dtype = jnp.uint16 if word_bits == 16 else jnp.uint32
+    size = int(np.prod(shape))
     if n < 2:
-        return jnp.zeros((n,) + tuple(shape), jnp.uint32)
+        return jnp.zeros((n,) + tuple(shape), out_dtype)
     c, i_idx, j_idx = pair_incidence(n)
     pids = i_idx.astype(np.int64) * n + j_idx
     # jnp.array (not asarray): constants must embed, not device_put — the
     # round program stays free of host-sync primitives.
-    bits = jax.vmap(
-        lambda pid: _pair_round_bits(seed, pid, t, tuple(shape)))(
-        jnp.array(pids, jnp.int32))                         # (P, *shape)
-    signs = jnp.array(c, jnp.int32)                          # (n, P)
+    vals = _pair_values(seed, jnp.array(pids, jnp.int32), t, size,
+                        word_bits, shard_idx)                 # (P, size)
+    signs = jnp.array(c, jnp.int32)                           # (n, P)
     if participation is not None:
         m = (jnp.asarray(participation) > 0).astype(jnp.int32)
         signs = signs * (m[i_idx] * m[j_idx])[None, :]
-    # Signed modular sum: int32 dot wraps exactly like uint32 addition.
-    net = jnp.tensordot(signs,
-                        jax.lax.bitcast_convert_type(bits, jnp.int32),
-                        axes=1)
-    return jax.lax.bitcast_convert_type(net, jnp.uint32)
+    # Signed modular sum: int32 dot wraps exactly like uint32 addition
+    # (and mod 2**16 of mod 2**32 arithmetic is exact).
+    net = jnp.tensordot(signs, vals.astype(jnp.int32), axes=1)
+    if word_bits == 16:
+        net = (net & jnp.int32(0xFFFF)).astype(out_dtype)
+    else:
+        net = jax.lax.bitcast_convert_type(net, jnp.uint32)
+    return net.reshape((n,) + tuple(shape))
 
 
-def net_mask_slab(seed: int, idx, n: int, t, shape: tuple, shard_idx=0, *,
-                  participation=None) -> jax.Array:
+def net_mask_slab(seed, idx, n: int, t, shape: tuple, shard_idx=0, *,
+                  word_bits: int = 32, participation=None) -> jax.Array:
     """One worker's net mask over its model-shard slab — the distributed
     form of :func:`net_masks` (worker ``idx`` and ``shard_idx`` may be
     traced mesh indices). Each (pair, round, model shard) gets its own
     stateless stream; cancellation is elementwise per shard because both
-    endpoints fold the same ``shard_idx``. The loop spans all ``n``
+    endpoints mix the same ``shard_idx``. The loop spans all ``n``
     workers — the self-pair (and, under participation, inactive pairs)
     still generate a stream that is then sign-zeroed, because ``idx`` is
     traced and the case cannot be pruned statically.
     """
+    out_dtype = jnp.uint16 if word_bits == 16 else jnp.uint32
+    size = int(np.prod(shape))
     if n < 2:
-        return jnp.zeros(tuple(shape), jnp.uint32)
-    total = jnp.zeros(tuple(shape), jnp.int32)
+        return jnp.zeros(tuple(shape), out_dtype)
+    keys = pair_stream_keys_row(seed, idx, n, t, shard_idx)
+    signs = pair_signs_row(idx, n, participation=participation)
+    h = index_hash(size if word_bits == 32 else 2 * ((size + 1) // 2),
+                   word_bits)
+    total = jnp.zeros((size,), jnp.int32)
     for l in range(n):
-        pid = pair_index(idx, l, n)
-        key = jax.random.fold_in(jax.random.PRNGKey(seed), pid)
-        key = jax.random.fold_in(key, t)
-        bits = jax.random.bits(jax.random.fold_in(key, shard_idx),
-                               tuple(shape), jnp.uint32)
-        sign = jnp.where(l == idx, 0,
-                         jnp.where(idx < l, 1, -1)).astype(jnp.int32)
-        if participation is not None:
-            m = (jnp.asarray(participation) > 0).astype(jnp.int32)
-            sign = sign * m[l] * m[idx]
-        total = total + sign * jax.lax.bitcast_convert_type(bits, jnp.int32)
-    return jax.lax.bitcast_convert_type(total, jnp.uint32)
+        vals = stream_values(keys[l], h, word_bits)[:size]
+        total = total + signs[l] * vals.astype(jnp.int32)
+    if word_bits == 16:
+        total = (total & jnp.int32(0xFFFF)).astype(out_dtype)
+    else:
+        total = jax.lax.bitcast_convert_type(total, jnp.uint32)
+    return total.reshape(tuple(shape))
 
 
 def quantize_weights(w: jax.Array, fixpoint_bits: int) -> jax.Array:
     """Public Eq. (3) weights -> uint32 fixed point:
     ``W_k = round(w_k 2**bits)``. ``sum_k w_k <= 1`` keeps every product
-    ``W_k * field`` (field <= 2) and the cohort sum well inside 32 bits."""
+    ``W_k * field`` (field <= 2) and the cohort sum well inside the
+    modulus (see ``PrivacySpec.wrap_headroom_workers`` for the exact
+    N bound at each ``modulus_bits``)."""
     scale = float(1 << fixpoint_bits)
     return jnp.round(jnp.asarray(w, jnp.float32) * scale).astype(jnp.uint32)

@@ -5,6 +5,15 @@ Mirrors ``repro.kernels.ref`` for the privacy subsystem: the same math as
 flat ``(N, rows/4, 512)`` views. Parity tests compare the Pallas kernels
 against these *under jit* and assert exact byte equality — the masked wire
 is integer end-to-end, so there is no allclose anywhere.
+
+The kernels generate their mask and RR streams IN-REGISTER from per-pair /
+per-worker counter keys; the oracles instead consume explicitly
+materialized mask and RR tensors. Feeding them
+``masking.net_masks(..., word_bits=...)`` and ``dp.rr_bits(...)`` — the
+order-exact host-side expansions of the very same counter streams — makes
+kernel-vs-oracle a test of BOTH the fused arithmetic and the in-kernel
+PRNG at once. The word dtype of ``masks`` picks the modulus: uint16
+tensors make the oracle truncate exactly like the 16-bit wire.
 """
 from __future__ import annotations
 
@@ -33,31 +42,41 @@ def codes_any_ref(q, p1, p2, t, beta, alpha1) -> jax.Array:
 def masked_codes_ref(q, p1, p2, t, beta, alpha1, wq, masks, bits,
                      threshold) -> jax.Array:
     """Masked uplink oracle: ternarize -> bias -> RR -> fixed-point weight
-    -> add pairwise mask, all in uint32.
+    -> add net pairwise mask -> truncate to the wire modulus.
 
     q (N, R, 512) float; p1/p2 (R, 512); beta scalar or (N,); wq (N,)
-    uint32 fixed-point weights; masks/bits (N, R, 512) uint32;
-    ``threshold`` the uint16 RR flip threshold (0 = RR off). Returns
-    uint32 (N, R, 512) — one masked word per parameter.
+    uint32 fixed-point weights; ``masks`` (N, R, 512) in the WIRE dtype
+    (uint16 => 16-bit modulus, uint32 => 32-bit) — typically
+    ``masking.net_masks(..., word_bits=...)`` or zeros; ``bits``
+    (N, R, 512) uint32 full RR words (``dp.rr_bits``); ``threshold`` the
+    uint16 RR flip threshold (0 = RR off). Returns (N, R, 512) in the
+    wire dtype — one masked word per parameter.
     """
     beta_b = jnp.asarray(beta, jnp.float32).reshape(-1, 1, 1)
     code = codes_any_ref(q, p1[None], p2[None], t, beta_b, alpha1)
     field = (code + 1.0).astype(jnp.uint32)
     field = rr_fields(field, bits, threshold)
-    return wq.reshape(-1, 1, 1) * field + masks
+    # mod-2**32 accumulate, then truncate: congruence mod 2**16 survives
+    # the wider intermediate, so this matches the kernel bit-for-bit.
+    acc = wq.reshape(-1, 1, 1) * field + masks.astype(jnp.uint32)
+    if masks.dtype == jnp.uint16:
+        return (acc & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+    return acc
 
 
 def masked_master_ref(q_pilot, masked, sum_wq, p1, p2, t, alpha0,
                       scale_mult) -> jax.Array:
     """Sum-then-unmask master oracle: modular sum of the masked worker
     words (pairwise masks cancel exactly), integer de-bias by the public
-    ``sum_wq = sum_k W_k``, fixed-point descale (+ RR unbias) via
-    ``scale_mult``, then the Eq. (3) combine.
+    ``sum_wq = sum_k W_k`` (truncated to the modulus), signed
+    reinterpretation at the wire width, fixed-point descale (+ RR unbias)
+    via ``scale_mult``, then the Eq. (3) combine.
 
-    masked (N, R, 512) uint32; q_pilot/p1/p2 (R, 512) float; ``t`` may be
-    traced. Returns (R, 512) in q_pilot.dtype. Order-independent by
-    construction (modular addition), so this single oracle covers every
-    kernel block plan AND every collective reduction topology.
+    masked (N, R, 512) uint16 or uint32 (the dtype picks the modulus);
+    q_pilot/p1/p2 (R, 512) float; ``t`` may be traced. Returns (R, 512)
+    in q_pilot.dtype. Order-independent by construction (modular
+    addition), so this single oracle covers every kernel block plan AND
+    every collective reduction topology.
 
     For BITWISE comparison against the kernel, jit this oracle with ``t``
     and ``scale_mult`` passed as traced f32 scalars — the kernel receives
@@ -65,9 +84,14 @@ def masked_master_ref(q_pilot, masked, sum_wq, p1, p2, t, alpha0,
     XLA:CPU make a different (1-ulp) FMA-contraction choice in the final
     ``q - coeff * mult`` when ``scale_mult`` is not a power of two.
     """
-    s = jnp.sum(masked, axis=0, dtype=jnp.uint32)
-    ci = jax.lax.bitcast_convert_type(s - jnp.asarray(sum_wq, jnp.uint32),
-                                      jnp.int32)
+    s = jnp.sum(masked, axis=0, dtype=masked.dtype)
+    sumw = jnp.asarray(sum_wq, jnp.uint32)
+    if masked.dtype == jnp.uint16:
+        sumw = (sumw & jnp.uint32(0xFFFF)).astype(jnp.uint16)
+        signed = jnp.int16
+    else:
+        signed = jnp.int32
+    ci = jax.lax.bitcast_convert_type(s - sumw, signed)
     coeff = ci.astype(jnp.float32) * jnp.asarray(scale_mult, jnp.float32)
     step = p1.astype(jnp.float32) - p2.astype(jnp.float32)
     mult = jnp.where(jnp.asarray(t, jnp.float32) <= 1.0, alpha0, step)

@@ -32,6 +32,15 @@ bits)`` and the master multiplies the integer sum by ``2**-fixpoint_bits``
 the true sum is bounded by ``2**(fixpoint_bits+1)`` and never wraps; the
 only approximation vs the float wire is the weight rounding
 (``|W_k/2**bits - w_k| <= 2**-(bits+1)``).
+
+Modulus: ``modulus_bits`` picks the wire word — 16 (the default: half the
+bytes of the original secure-agg wire, 8x the 2-bit plaintext codes) or 32
+(the conservative path). The de-bias residue ``sum_k W_k (field_k - 1)``
+must stay inside the SIGNED half of the modulus, so ``fixpoint_bits`` is
+coupled to it: the per-modulus default (14 for 16-bit, 24 for 32-bit)
+leaves ``2**(modulus_bits-1) - 2**fixpoint_bits`` words of wrap headroom
+— see :meth:`PrivacySpec.wrap_headroom_workers`. Everything else (mask
+cancellation, RR, the descale) is modulus-generic.
 """
 from __future__ import annotations
 
@@ -54,22 +63,40 @@ MAX_DP_EPSILON = math.log(3.0 * RR_RESOLUTION / 0.5 - 2.0)
 MIN_DP_EPSILON = math.log(3.0 * RR_RESOLUTION / (RR_RESOLUTION - 0.5) - 2.0)
 
 
+# Per-modulus fixed-point defaults and upper bounds: the de-bias residue
+# |sum_k W_k code_k| <= sum_k W_k <= 2**fb + N/2 must stay under
+# 2**(modulus_bits - 1) for the signed reinterpretation to be exact.
+_FIXPOINT_DEFAULT = {16: 14, 32: 24}
+_FIXPOINT_MAX = {16: 14, 32: 26}
+
+
 @dataclass(frozen=True)
 class PrivacySpec:
     """Configuration of the secure-aggregation + DP wire path."""
     secure_agg: bool = True        # pairwise-masked integer aggregation
     mask_seed: int | None = 0      # pairwise-seed root; None = masking off
-    fixpoint_bits: int = 24        # weight fixed-point scale (2**bits)
+    modulus_bits: int = 16         # wire word width: 16 (default) or 32
+    fixpoint_bits: int | None = None  # weight scale 2**bits; None = default
     dp_epsilon: float | None = None  # per-round per-coordinate eps; None=off
     dp_seed: int = 1               # randomized-response bit stream root
     delta: float = 1e-5            # advanced-composition delta
     enforce: bool = True           # audit runtimes' traced round programs
 
     def __post_init__(self):
-        if not 8 <= self.fixpoint_bits <= 26:
+        if self.modulus_bits not in (16, 32):
             raise ValueError(
-                f"fixpoint_bits must be in [8, 26] (weights sum to <= 1 and "
-                f"must stay exact in fp32/uint32), got {self.fixpoint_bits}")
+                f"modulus_bits must be 16 or 32 (the wire word is one "
+                f"uint16/uint32 per parameter), got {self.modulus_bits}")
+        if self.fixpoint_bits is None:
+            object.__setattr__(self, "fixpoint_bits",
+                               _FIXPOINT_DEFAULT[self.modulus_bits])
+        hi = _FIXPOINT_MAX[self.modulus_bits]
+        if not 8 <= self.fixpoint_bits <= hi:
+            raise ValueError(
+                f"fixpoint_bits must be in [8, {hi}] for modulus_bits="
+                f"{self.modulus_bits} (the signed de-bias residue "
+                f"sum_k W_k code_k must stay under 2**{self.modulus_bits - 1}"
+                f"), got {self.fixpoint_bits}")
         if self.dp_epsilon is not None:
             if not MIN_DP_EPSILON <= self.dp_epsilon <= MAX_DP_EPSILON:
                 raise ValueError(
@@ -123,6 +150,21 @@ class PrivacySpec:
         return math.log((3.0 - 2.0 * p) / p)
 
     # -- fixed-point weighting ----------------------------------------------
+
+    @property
+    def word_dtype(self):
+        """The wire word dtype of this modulus (jnp.uint16 / jnp.uint32)."""
+        import jax.numpy as jnp
+        return jnp.uint16 if self.modulus_bits == 16 else jnp.uint32
+
+    def wrap_headroom_workers(self) -> int:
+        """How large a cohort provably cannot wrap the signed de-bias
+        residue: ``|sum_k W_k code_k| <= sum_k W_k <= 2**fb + N/2`` (the
+        N/2 is worst-case per-worker weight rounding under
+        ``sum_k w_k <= 1``), which must stay under ``2**(mb-1)``. Returns
+        the largest N satisfying the bound."""
+        return 2 * ((1 << (self.modulus_bits - 1))
+                    - (1 << self.fixpoint_bits)) - 1
 
     @property
     def scale(self) -> float:

@@ -5,18 +5,25 @@ The contract under test:
   * both masked kernels are BITWISE equal to the jnp oracles
     (``repro.privacy.ref``, jitted with traced scalars) for every
     (block_rows, block_workers) plan, n in {1, 8, 33}, both round
-    branches, RR on and off — the wire is integer end-to-end, so parity
-    is exact, never allclose;
+    branches, RR on and off, and BOTH wire moduli — the wire is integer
+    end-to-end, so parity is exact, never allclose. The kernels generate
+    their mask/RR streams in-register from counter keys while the oracles
+    consume the host-materialized ``net_masks``/``rr_bits`` expansions, so
+    parity also proves the in-kernel PRNG reproduces the reference
+    streams bit-for-bit;
   * pairwise masks cancel EXACTLY: a masked aggregate is bit-identical to
-    the zero-mask aggregate (mod 2**32 cancellation), and the net masks
-    sum to zero — including under partial participation;
+    the unmasked (``use_masks=False``) aggregate — mod 2**modulus_bits
+    cancellation — and the net masks sum to zero, including under partial
+    participation;
   * with DP off the masked round differs from the plain float wire only
     by the fixed-point weight rounding (<= 2**-(bits+1) per weight);
   * the RR mechanism flips at the configured rate and unbiasing makes the
     EXPECTED master update equal the noiseless one;
-  * either masked kernel is exactly ONE pallas launch under every plan;
-  * the tuner knows the masked kinds and falls back to the unmasked
-    kind's tuned plan when a masked entry is missing.
+  * either masked kernel is exactly ONE pallas launch under every plan,
+    and the uplink launch consumes NO mask-shaped tensor operand (the
+    in-kernel PRNG removed the HBM mask planes) and no threefry PRNG;
+  * the tuner knows the masked kinds and chains fallbacks
+    ``*_masked16`` -> ``*_masked`` -> unmasked down to the heuristic.
 """
 import jax
 import jax.numpy as jnp
@@ -24,12 +31,13 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, tune
-from repro.privacy import (PrivacySpec, masking, net_masks, quantize_weights,
-                           rr_bits, rr_fields)
+from repro.privacy import (PrivacySpec, masking, net_masks, pair_signs,
+                           pair_stream_keys, quantize_weights, rr_bits,
+                           rr_fields, rr_stream_keys)
 from repro.privacy import ref as pref
 from repro.utils import jaxpr_primitive_counts
 
-FIX_BITS = 24
+FIX_BITS = {16: 14, 32: 24}
 
 
 def _fixture(n, rows_flat, seed=0):
@@ -41,6 +49,11 @@ def _fixture(n, rows_flat, seed=0):
     if n > 2:
         w = w.at[n // 2].set(0.0)           # the pilot
     return bufs_q, p1, p2, w
+
+
+def _keys(n, t, mask_seed=0, dp_seed=1):
+    return (pair_stream_keys(mask_seed, n, t), pair_signs(n),
+            rr_stream_keys(dp_seed, t, n))
 
 
 def _plans(r4, n):
@@ -55,20 +68,22 @@ def _plans(r4, n):
 
 
 # ---------------------------------------------------------------------------
-# Bitwise kernel-vs-oracle parity, every plan
+# Bitwise kernel-vs-oracle parity, every plan, both moduli
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("wb", [16, 32])
 @pytest.mark.parametrize("n", [1, 8, 33])
 @pytest.mark.parametrize("t", [1, 3])
 @pytest.mark.parametrize("thr", [0, 3277])          # RR off / p = 0.05
-def test_masked_uplink_bitwise_every_plan(n, t, thr):
+def test_masked_uplink_bitwise_every_plan(wb, n, t, thr):
     rows_flat = 96
     r4 = rows_flat // 4
     bufs_q, p1, p2, w = _fixture(n, rows_flat, seed=10 * n + t)
     betas = jnp.linspace(0.1, 0.3, n)
-    wq = quantize_weights(w, FIX_BITS)
-    masks = net_masks(0, n, t, (r4, 512))
-    bits = rr_bits(1, t, (n, r4, 512))
+    wq = quantize_weights(w, FIX_BITS[wb])
+    keys, signs, rrk = _keys(n, t)
+    masks = net_masks(0, n, t, (r4, 512), word_bits=wb)
+    bits = rr_bits(1, t, n, (r4, 512))
 
     oracle = jax.jit(lambda q, a, b, m, bt, tt: pref.masked_codes_ref(
         q.reshape(n, r4, 512), a.reshape(r4, 512), b.reshape(r4, 512),
@@ -77,25 +92,29 @@ def test_masked_uplink_bitwise_every_plan(n, t, thr):
     for br, bw in _plans(r4, n):
         got = ops.flat_ternary_pack_masked(
             bufs_q, p1, p2, t=t, beta=betas, alpha1=0.01, wq=wq,
-            masks=masks, rr_bits=bits, rr_threshold=thr, interpret=True,
+            pair_keys=keys, pair_signs=signs, rr_keys=rrk,
+            rr_threshold=thr, word_bits=wb, interpret=True,
             block_rows=br, block_workers=bw)
+        assert got.dtype == (jnp.uint16 if wb == 16 else jnp.uint32)
         np.testing.assert_array_equal(np.asarray(got), want,
                                       err_msg=f"plan ({br}, {bw})")
 
 
+@pytest.mark.parametrize("wb", [16, 32])
 @pytest.mark.parametrize("n", [1, 8, 33])
 @pytest.mark.parametrize("t", [1, 3])
-def test_masked_master_bitwise_every_plan(n, t):
+def test_masked_master_bitwise_every_plan(wb, n, t):
     rows_flat = 96
     r4 = rows_flat // 4
     bufs_q, p1, p2, w = _fixture(n, rows_flat, seed=5 * n + t)
-    wq = quantize_weights(w, FIX_BITS)
-    masks = net_masks(0, n, t, (r4, 512))
+    wq = quantize_weights(w, FIX_BITS[wb])
+    keys, signs, rrk = _keys(n, t)
     y = ops.flat_ternary_pack_masked(
-        bufs_q, p1, p2, t=t, beta=0.2, alpha1=0.01, wq=wq, masks=masks,
-        rr_bits=masks, rr_threshold=0, interpret=True)
+        bufs_q, p1, p2, t=t, beta=0.2, alpha1=0.01, wq=wq, pair_keys=keys,
+        pair_signs=signs, rr_keys=rrk, rr_threshold=0, word_bits=wb,
+        interpret=True)
     q = jax.random.normal(jax.random.PRNGKey(99), (rows_flat, 128))
-    sm = 2.0 ** -FIX_BITS
+    sm = 2.0 ** -FIX_BITS[wb]
 
     # Traced scalars in the jitted oracle — the kernel gets them as runtime
     # operands, and constant-baking flips XLA:CPU's FMA choice (see
@@ -117,72 +136,87 @@ def test_masked_master_bitwise_every_plan(n, t):
 # Mask cancellation: exact, in the integer domain
 # ---------------------------------------------------------------------------
 
-def test_net_masks_sum_to_zero():
+@pytest.mark.parametrize("wb", [16, 32])
+def test_net_masks_sum_to_zero(wb):
     for n in (2, 5, 8):
-        m = net_masks(7, n, 3, (6, 512))
-        total = jnp.sum(m, axis=0, dtype=jnp.uint32)
+        m = net_masks(7, n, 3, (6, 512), word_bits=wb)
+        total = jnp.sum(m, axis=0, dtype=m.dtype)
         assert int(jnp.count_nonzero(total)) == 0
     # partial participation: active pairs cancel over the sampled set
     pm = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0])
-    m = net_masks(7, 5, 3, (6, 512), participation=pm)
-    total = jnp.sum(m * pm[:, None, None].astype(jnp.uint32), axis=0,
-                    dtype=jnp.uint32)
+    m = net_masks(7, 5, 3, (6, 512), word_bits=wb, participation=pm)
+    total = jnp.sum(m * pm[:, None, None].astype(m.dtype), axis=0,
+                    dtype=m.dtype)
     assert int(jnp.count_nonzero(total)) == 0
     # non-participants carry a zero mask
     assert int(jnp.count_nonzero(m[1])) == 0
     assert int(jnp.count_nonzero(m[4])) == 0
 
 
-def test_masked_aggregate_bitwise_equals_unmasked():
+@pytest.mark.parametrize("wb", [16, 32])
+def test_masked_aggregate_bitwise_equals_unmasked(wb):
     """The whole point: with masks on, the master's output is bit-identical
-    to the zero-mask run — cancellation is exact, any residue would show."""
+    to the unmasked run — cancellation is exact, any residue would show."""
     n, rows_flat = 6, 96
-    r4 = rows_flat // 4
     bufs_q, p1, p2, w = _fixture(n, rows_flat, seed=3)
-    wq = quantize_weights(w, FIX_BITS)
-    masks = net_masks(11, n, 5, (r4, 512))
-    zeros = jnp.zeros_like(masks)
+    wq = quantize_weights(w, FIX_BITS[wb])
+    keys, signs, rrk = _keys(n, 5, mask_seed=11)
     q = bufs_q[0]
     outs = []
-    for m in (masks, zeros):
+    for use_masks in (True, False):
         y = ops.flat_ternary_pack_masked(
-            bufs_q, p1, p2, t=5, beta=0.2, alpha1=0.01, wq=wq, masks=m,
-            rr_bits=m, rr_threshold=0, interpret=True)
+            bufs_q, p1, p2, t=5, beta=0.2, alpha1=0.01, wq=wq,
+            pair_keys=keys, pair_signs=signs, rr_keys=rrk,
+            rr_threshold=0, word_bits=wb, use_masks=use_masks,
+            interpret=True)
         outs.append(ops.flat_masked_master_update(
             q, y, jnp.sum(wq), p1, p2, t=5, alpha0=0.01,
-            scale_mult=2.0 ** -FIX_BITS, interpret=True))
+            scale_mult=2.0 ** -FIX_BITS[wb], interpret=True))
     np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
     # and a masked word stream looks nothing like the unmasked one
-    y_m = ops.flat_ternary_pack_masked(
-        bufs_q, p1, p2, t=5, beta=0.2, alpha1=0.01, wq=wq, masks=masks,
-        rr_bits=masks, rr_threshold=0, interpret=True)
-    y_u = ops.flat_ternary_pack_masked(
-        bufs_q, p1, p2, t=5, beta=0.2, alpha1=0.01, wq=wq, masks=zeros,
-        rr_bits=zeros, rr_threshold=0, interpret=True)
-    frac_equal = float(jnp.mean((y_m == y_u).astype(jnp.float32)))
+    y_pair = [ops.flat_ternary_pack_masked(
+        bufs_q, p1, p2, t=5, beta=0.2, alpha1=0.01, wq=wq, pair_keys=keys,
+        pair_signs=signs, rr_keys=rrk, rr_threshold=0, word_bits=wb,
+        use_masks=um, interpret=True) for um in (True, False)]
+    frac_equal = float(jnp.mean((y_pair[0] == y_pair[1]).astype(jnp.float32)))
     assert frac_equal < 0.01, frac_equal
 
 
-def test_masked_vs_plain_float_wire_quantization_bound():
+@pytest.mark.parametrize("wb", [16, 32])
+def test_masked_vs_plain_float_wire_quantization_bound(wb):
     """DP off: the only masked-vs-plain difference is the fixed-point
     weight rounding — bounded by sum_k |W_k/2^bits - w_k| * max|mult|."""
     n, rows_flat = 8, 256
+    fb = FIX_BITS[wb]
     bufs_q, p1, p2, w = _fixture(n, rows_flat, seed=4)
-    wq = quantize_weights(w, FIX_BITS)
-    masks = net_masks(0, n, 3, (rows_flat // 4, 512))
+    wq = quantize_weights(w, fb)
+    keys, signs, rrk = _keys(n, 3)
     y = ops.flat_ternary_pack_masked(
-        bufs_q, p1, p2, t=3, beta=0.2, alpha1=0.01, wq=wq, masks=masks,
-        rr_bits=masks, rr_threshold=0, interpret=True)
+        bufs_q, p1, p2, t=3, beta=0.2, alpha1=0.01, wq=wq, pair_keys=keys,
+        pair_signs=signs, rr_keys=rrk, rr_threshold=0, word_bits=wb,
+        interpret=True)
     got = ops.flat_masked_master_update(
         bufs_q[0], y, jnp.sum(wq), p1, p2, t=3, alpha0=0.01,
-        scale_mult=2.0 ** -FIX_BITS, interpret=True)
+        scale_mult=2.0 ** -fb, interpret=True)
     packed = ops.flat_ternary_pack_stacked(
         bufs_q, p1, p2, t=3, beta=0.2, alpha1=0.01, interpret=True)
     want = ops.flat_master_update(bufs_q[0], packed, w, p1, p2, t=3,
                                   alpha0=0.01, interpret=True)
     step_max = float(jnp.max(jnp.abs(p1 - p2)))
-    bound = n * 2.0 ** -(FIX_BITS + 1) * 2 * step_max + 1e-6
+    bound = n * 2.0 ** -(fb + 1) * 2 * step_max + 1e-6
     assert float(jnp.max(jnp.abs(got - want))) <= bound
+
+
+def test_fixpoint_sum_never_wraps_headroom():
+    """The documented bound: sum_k W_k <= 2**fb + N/2 stays inside the
+    signed half of the modulus for any cohort up to
+    ``wrap_headroom_workers()``."""
+    for mb in (16, 32):
+        spec = PrivacySpec(modulus_bits=mb)
+        n_max = spec.wrap_headroom_workers()
+        assert (1 << spec.fixpoint_bits) + n_max // 2 < 1 << (mb - 1)
+        # and the default headroom admits any realistic cohort
+        assert n_max >= 1000
 
 
 # ---------------------------------------------------------------------------
@@ -207,12 +241,13 @@ def test_rr_flip_rate_matches_epsilon():
 
 def test_rr_unbiasing_recovers_noiseless_update():
     """E[masked master update] over the RR randomness == the noiseless
-    masked update (statistical, fixed seeds)."""
+    masked update (statistical, fixed seeds; 32-bit oracle modulus)."""
     n, rows_flat, draws = 6, 32, 192
     r4 = rows_flat // 4
+    fb = FIX_BITS[32]
     bufs_q, p1, p2, w = _fixture(n, rows_flat, seed=6)
-    spec = PrivacySpec(dp_epsilon=2.0)     # flip_prob ~ 0.318
-    wq = quantize_weights(w, FIX_BITS)
+    spec = PrivacySpec(dp_epsilon=2.0, modulus_bits=32)
+    wq = quantize_weights(w, fb)
     zeros = jnp.zeros((n, r4, 512), jnp.uint32)
     sm_dp = spec.scale_mult
     q = bufs_q[0].reshape(r4, 512)
@@ -231,7 +266,7 @@ def test_rr_unbiasing_recovers_noiseless_update():
     noiseless = pref.masked_master_ref(
         q, pref.masked_codes_ref(bufs_q.reshape(n, r4, 512), p1r, p2r, 3,
                                  0.2, 0.01, wq, zeros, zeros, 0),
-        jnp.sum(wq), p1r, p2r, 3, 0.01, 2.0 ** -FIX_BITS)
+        jnp.sum(wq), p1r, p2r, 3, 0.01, 2.0 ** -fb)
     # Mean |error| of the AVERAGED update concentrates as 1/sqrt(draws) of
     # a single draw's mean |error| iff the mechanism is unbiased; a
     # residual bias (e.g. a wrong 1/(1-p) factor) would not shrink.
@@ -245,39 +280,71 @@ def test_rr_unbiasing_recovers_noiseless_update():
 # Launch structure
 # ---------------------------------------------------------------------------
 
+@pytest.mark.parametrize("wb", [16, 32])
 @pytest.mark.parametrize("plan", [(None, None), (8, 1), (24, 4)])
-def test_masked_kernels_single_launch_every_plan(plan):
+def test_masked_kernels_single_launch_every_plan(wb, plan):
     n, rows_flat = 8, 96
     r4 = rows_flat // 4
     br, bw = plan
     bufs_q, p1, p2, w = _fixture(n, rows_flat)
-    wq = quantize_weights(w, FIX_BITS)
-    masks = jnp.zeros((n, r4, 512), jnp.uint32)
+    wq = quantize_weights(w, FIX_BITS[wb])
+    keys, signs, rrk = _keys(n, 3)
     counts = jaxpr_primitive_counts(
-        lambda a, b, c, m: ops.flat_ternary_pack_masked(
-            a, b, c, t=3, beta=0.2, alpha1=0.01, wq=wq, masks=m,
-            rr_bits=m, rr_threshold=0, interpret=True, block_rows=br,
-            block_workers=bw),
-        bufs_q, p1, p2, masks)
+        lambda a, b, c, kk, ss, rr: ops.flat_ternary_pack_masked(
+            a, b, c, t=3, beta=0.2, alpha1=0.01, wq=wq, pair_keys=kk,
+            pair_signs=ss, rr_keys=rr, rr_threshold=0, word_bits=wb,
+            interpret=True, block_rows=br, block_workers=bw),
+        bufs_q, p1, p2, keys, signs, rrk)
     assert counts.get("pallas_call") == 1, counts
-    y = jnp.zeros((n, r4, 512), jnp.uint32)
+    # the in-kernel counter PRNG is pure integer arithmetic: the launch
+    # needs no threefry (jax.random) primitives anywhere in its program
+    assert not any("threefry" in k for k in counts), counts
+    word = jnp.uint16 if wb == 16 else jnp.uint32
+    y = jnp.zeros((n, r4, 512), word)
     counts = jaxpr_primitive_counts(
         lambda q, yy: ops.flat_masked_master_update(
             q, yy, jnp.sum(wq), q, q, t=3, alpha0=0.01,
-            scale_mult=2.0 ** -FIX_BITS, interpret=True, block_rows=br,
+            scale_mult=2.0 ** -FIX_BITS[wb], interpret=True, block_rows=br,
             block_workers=bw),
         bufs_q[0], y)
     assert counts.get("pallas_call") == 1, counts
 
 
+def test_masked_uplink_consumes_no_mask_tensor():
+    """The in-kernel PRNG contract, stated on the jaxpr: the uplink
+    launch's operands contain nothing mask-shaped — the largest unsigned
+    operand is the (N, N) key matrix."""
+    n, rows_flat = 8, 96
+    bufs_q, p1, p2, w = _fixture(n, rows_flat)
+    wq = quantize_weights(w, FIX_BITS[16])
+    keys, signs, rrk = _keys(n, 3)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b, c, kk, ss, rr: ops.flat_ternary_pack_masked(
+            a, b, c, t=3, beta=0.2, alpha1=0.01, wq=wq, pair_keys=kk,
+            pair_signs=ss, rr_keys=rr, rr_threshold=3277, word_bits=16,
+            interpret=True))(bufs_q, p1, p2, keys, signs, rrk)
+    from repro.utils import iter_jaxpr_eqns
+    launches = [e for e in iter_jaxpr_eqns(jaxpr.jaxpr, into_pallas=False)
+                if e.primitive.name == "pallas_call"]
+    assert len(launches) == 1
+    for v in launches[0].invars:
+        aval = v.aval
+        if jnp.issubdtype(aval.dtype, jnp.unsignedinteger):
+            assert int(np.prod(aval.shape)) <= n * n, (
+                f"mask-sized unsigned operand {aval.shape} {aval.dtype}")
+
+
 # ---------------------------------------------------------------------------
-# Tuner: masked kinds + fallback
+# Tuner: masked kinds + fallback chain
 # ---------------------------------------------------------------------------
 
 def test_masked_kinds_registered():
-    assert "uplink_masked" in tune.KINDS
-    assert "master_masked" in tune.KINDS
-    assert tune.MASKED_FALLBACK == {"uplink_masked": "uplink_stacked",
+    for kind in ("uplink_masked", "master_masked", "uplink_masked16",
+                 "master_masked16"):
+        assert kind in tune.KINDS
+    assert tune.MASKED_FALLBACK == {"uplink_masked16": "uplink_masked",
+                                    "master_masked16": "master_masked",
+                                    "uplink_masked": "uplink_stacked",
                                     "master_masked": "master"}
 
 
@@ -285,7 +352,8 @@ def test_lookup_falls_back_to_unmasked_plan():
     r4, n = 48, 6
     keys = [(k, r4, n, "cpu-interpret")
             for k in ("uplink_stacked", "master", "uplink_masked",
-                      "master_masked")]
+                      "master_masked", "uplink_masked16",
+                      "master_masked16")]
     try:
         tune.set_plan("uplink_stacked", r4, n,
                       {"block_rows": 24, "block_workers": 2},
@@ -293,28 +361,50 @@ def test_lookup_falls_back_to_unmasked_plan():
         tune.set_plan("master", r4, n,
                       {"block_rows": 16, "block_workers": 3},
                       backend="cpu-interpret")
-        # untuned masked kinds borrow the unmasked plans ...
-        assert tune.lookup("uplink_masked", r4, n, interpret=True) == (24, 2)
-        assert tune.lookup("master_masked", r4, n, interpret=True) == (16, 3)
-        # ... until a masked entry exists, which then wins
+        # a table with ONLY unmasked entries resolves every masked kind
+        # through the chain *_masked16 -> *_masked -> unmasked
+        for kind in ("uplink_masked", "uplink_masked16"):
+            assert tune.lookup(kind, r4, n, interpret=True) == (24, 2)
+        for kind in ("master_masked", "master_masked16"):
+            assert tune.lookup(kind, r4, n, interpret=True) == (16, 3)
+        # a mid-chain entry wins over the chain tail ...
         tune.set_plan("uplink_masked", r4, n,
                       {"block_rows": 48, "block_workers": 1},
                       backend="cpu-interpret")
-        assert tune.lookup("uplink_masked", r4, n, interpret=True) == (48, 1)
+        assert tune.lookup("uplink_masked16", r4, n, interpret=True) == (48, 1)
+        # ... and an exact 16-bit entry beats everything
+        tune.set_plan("uplink_masked16", r4, n,
+                      {"block_rows": 12, "block_workers": 6},
+                      backend="cpu-interpret")
+        assert tune.lookup("uplink_masked16", r4, n, interpret=True) == (12, 6)
     finally:
         for key in keys:
             tune._TABLE.pop(key, None)
 
 
-def test_autotune_masked_sweeps_store_winners():
+def test_lookup_resolves_every_kind_on_empty_table():
+    """Regression: with NO tuned entries at all, every registered kind
+    still resolves (heuristic tail of the fallback chain)."""
+    r4, n = 32, 4
+    for kind in tune.KINDS:
+        br, bw = tune.lookup(kind, r4, n, interpret=True)
+        assert r4 % br == 0 and n % bw == 0, (kind, br, bw)
+
+
+@pytest.mark.parametrize("wb", [16, 32])
+def test_autotune_masked_sweeps_store_winners(wb):
     r4, n = 16, 4
-    keys = [("uplink_masked", r4, n, "cpu-interpret"),
-            ("master_masked", r4, n, "cpu-interpret")]
+    suffix = "16" if wb == 16 else ""
+    keys = [(f"uplink_masked{suffix}", r4, n, "cpu-interpret"),
+            (f"master_masked{suffix}", r4, n, "cpu-interpret")]
     try:
-        rec = tune.autotune_masked_uplink(r4, n, interpret=True, reps=1)
+        rec = tune.autotune_masked_uplink(r4, n, interpret=True, reps=1,
+                                          word_bits=wb)
+        assert rec["kind"] == keys[0][0]
         assert rec["timings"] and all(r["us"] > 0 for r in rec["timings"])
         assert keys[0] in tune._TABLE
-        rec_m = tune.autotune_masked_master(r4, n, interpret=True, reps=1)
+        rec_m = tune.autotune_masked_master(r4, n, interpret=True, reps=1,
+                                            word_bits=wb)
         assert keys[1] in tune._TABLE
         assert rec_m["best"]["block_rows"] <= r4
     finally:
@@ -329,20 +419,34 @@ def test_privacy_spec_validation():
     with pytest.raises(ValueError, match="dp_epsilon"):
         PrivacySpec(dp_epsilon=99.0)      # threshold rounds to 0: no-op RR
     with pytest.raises(ValueError, match="fixpoint_bits"):
-        PrivacySpec(fixpoint_bits=30)
+        PrivacySpec(fixpoint_bits=30, modulus_bits=32)
+    with pytest.raises(ValueError, match="fixpoint_bits"):
+        PrivacySpec(fixpoint_bits=24)     # 16-bit default can't hold 2**24
+    with pytest.raises(ValueError, match="modulus_bits"):
+        PrivacySpec(modulus_bits=8)
     for eps in (MIN_DP_EPSILON, MAX_DP_EPSILON):   # boundaries construct
         spec = PrivacySpec(dp_epsilon=eps)
         assert 1 <= spec.rr_threshold <= (1 << 16) - 1
         assert np.isfinite(spec.scale_mult)
+    # the modulus picks the coupled defaults and the wire dtype
+    assert PrivacySpec().fixpoint_bits == 14
+    assert PrivacySpec().word_dtype == jnp.uint16
+    assert PrivacySpec(modulus_bits=32).fixpoint_bits == 24
+    assert PrivacySpec(modulus_bits=32).word_dtype == jnp.uint32
 
 
 def test_quantize_weights_bounds():
+    fb = FIX_BITS[32]
     w = jnp.asarray([0.0, 0.25, 1.0 / 3.0, 0.5])
-    wq = quantize_weights(w, FIX_BITS)
-    back = np.asarray(wq, np.float64) / (1 << FIX_BITS)
+    wq = quantize_weights(w, fb)
+    back = np.asarray(wq, np.float64) / (1 << fb)
     assert np.max(np.abs(back - np.asarray(w, np.float64))) \
-        <= 2.0 ** -(FIX_BITS + 1)
+        <= 2.0 ** -(fb + 1)
     # pair structure sanity
     c, i_idx, j_idx = masking.pair_incidence(5)
     assert c.shape == (5, 10)
     np.testing.assert_array_equal(c.sum(axis=0), 0)
+    # signs are antisymmetric with a zero diagonal
+    s = np.asarray(pair_signs(5))
+    np.testing.assert_array_equal(s, -s.T)
+    np.testing.assert_array_equal(np.diag(s), 0)

@@ -1,0 +1,73 @@
+"""Property tests for the fixed-point / modulus contract of the masked wire.
+
+The secure-aggregation wire carries ``W_k * field`` words mod
+``2**modulus_bits`` with ``W_k = round(w_k * 2**fixpoint_bits)`` and
+``field = code + 1 in {0, 1, 2}``. The whole scheme rests on one
+arithmetic contract, which these tests check for RANDOM weight vectors
+(``sum_k w_k <= 1`` — the Eq. (3) convexity invariant), RANDOM
+participation subsets and BOTH moduli:
+
+* the unmasked cohort sum never wraps the modulus, and the signed
+  de-bias value ``sum_k W_k * code_k`` fits the signed range — so the
+  master's ``bitcast(sum - sum_wq)`` is EXACT integer arithmetic;
+* descaling by ``2**-fixpoint_bits`` round-trips to the real-weighted
+  ternary sum within the documented ``n * 2**-(fixpoint_bits+1)``
+  per-word rounding bound (each weight rounds by at most half an lsb,
+  and ``|code| <= 1``);
+* the analytic ``PrivacySpec.wrap_headroom_workers`` bound covers every
+  cohort size these examples draw.
+
+Runs under real hypothesis when installed, else the deterministic
+``tests/_hypothesis_fallback`` shim.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.privacy import PrivacySpec, quantize_weights
+
+WORDS = 64
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=1, max_value=12),
+       st.integers(min_value=0, max_value=2**32 - 1),
+       st.sampled_from([16, 32]))
+def test_cohort_sum_never_wraps_and_descale_roundtrips(n, seed, mb):
+    rng = np.random.default_rng(seed)
+    w = rng.random(n)
+    if w.sum() > 1.0:
+        w = w / w.sum()                      # sum_k w_k <= 1
+    part = rng.random(n) < 0.7               # random participation subset
+    if not part.any():
+        part[int(rng.integers(n))] = True
+    w = np.where(part, w, 0.0).astype(np.float32)
+
+    spec = PrivacySpec(modulus_bits=mb)
+    fb = spec.fixpoint_bits
+    assert n <= spec.wrap_headroom_workers()
+    wq = np.asarray(quantize_weights(jnp.asarray(w), fb), np.uint64)
+
+    # analytic no-wrap: max field sum (every code +1) inside the modulus,
+    # max |de-bias| inside the signed half
+    total = int(wq.sum())
+    assert 2 * total < 2 ** mb
+    assert total < 2 ** (mb - 1)
+
+    # empirical exactness over random ternary codes
+    codes = rng.integers(-1, 2, size=(n, WORDS))
+    fields = (codes + 1).astype(np.uint64)
+    mask = np.uint64(2 ** mb - 1)
+    s = (wq[:, None] * fields).sum(axis=0) & mask
+    sumw = np.uint64(total) & mask
+    ci = (s - sumw) & mask                   # the master's modular de-bias
+    ci = ci.astype(np.int64)
+    ci = np.where(ci >= 2 ** (mb - 1), ci - 2 ** mb, ci)
+    exact = (wq.astype(np.int64)[:, None] * codes).sum(axis=0)
+    np.testing.assert_array_equal(ci, exact)
+
+    # descale round-trip within the documented rounding bound
+    descale = ci.astype(np.float64) * 2.0 ** -fb
+    true = (w.astype(np.float64)[:, None] * codes).sum(axis=0)
+    bound = n * 2.0 ** -(fb + 1) + 1e-9
+    assert np.max(np.abs(descale - true)) <= bound

@@ -101,10 +101,16 @@ def test_scan_bitwise_invariant_to_masking():
     np.testing.assert_array_equal(outs["other"], outs["off"])
 
 
-def test_masked_scan_close_to_plain_wire():
+@pytest.mark.parametrize("mb,rtol,atol", [(32, 1e-5, 1e-6),
+                                          (16, 1e-3, 2e-3)])
+def test_masked_scan_close_to_plain_wire(mb, rtol, atol):
+    """DP off: masked differs from the plain float wire only by the
+    fixed-point weight rounding — 2**-25 per weight at the 32-bit modulus
+    (fixpoint 24), 2**-15 at 16-bit (fixpoint 14), compounding over the
+    5-round scan; the tolerances scale accordingly."""
     tree, layout, state, deltas, sizes = _fixture(2)
     worker = _worker_fn(deltas)
-    spec = PrivacySpec()                      # secure agg, DP off
+    spec = PrivacySpec(modulus_bits=mb)       # secure agg, DP off
     st_m = rd.init_round_state(tree, N, layout, privacy=spec)
     wire_m = rd.WirePath(rd.WireConfig(), interpret=True, privacy=spec)
     st_m, _, _ = jax.jit(lambda s: rd.scan_rounds(
@@ -114,7 +120,7 @@ def test_masked_scan_close_to_plain_wire():
         wire_p, s, worker, 0, 5, sizes))(state)
     np.testing.assert_allclose(np.asarray(st_m.buf_p1),
                                np.asarray(st_p.buf_p1),
-                               rtol=1e-5, atol=1e-6)
+                               rtol=rtol, atol=atol)
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +211,44 @@ def test_audit_rejects_plaintext_wire_under_masked_policy():
         lambda s, b, c: wire.round_step(s, b, c, sizes),
         *(_audit_args(state, sizes)[:3]),
         n_workers=N, masked=False)
+    assert report["n_launches"] == 2
+
+
+def test_audit_rejects_materialized_mask_tensor_in_uplink():
+    """Deliberate regression to the pre-in-kernel-PRNG wire: an 'uplink'
+    launch that consumes an HBM-materialized (N, rows, 512) mask tensor
+    must be flagged by the masked policy — mask streams belong in
+    registers, generated from counter keys."""
+    from jax.experimental import pallas as pl
+
+    def leaky_masked_round(bufs_q, masks, p1):
+        def uplink(q_ref, m_ref, o_ref):
+            o_ref[...] = q_ref[...].astype(jnp.uint32) + m_ref[...]
+
+        y = pl.pallas_call(
+            uplink,
+            out_shape=jax.ShapeDtypeStruct(masks.shape, jnp.uint32),
+            interpret=True)(bufs_q, masks)
+
+        def master(y_ref, p_ref, o_ref):
+            s = jnp.sum(y_ref[...], axis=0)
+            o_ref[...] = p_ref[...] - s.astype(jnp.float32)
+
+        return pl.pallas_call(
+            master,
+            out_shape=jax.ShapeDtypeStruct(p1.shape, jnp.float32),
+            interpret=True)(y, p1)
+
+    _, _, state, _, sizes = _fixture(0)
+    buf = jax.ShapeDtypeStruct(state.buf_p1.shape, jnp.float32)
+    bufs = jax.ShapeDtypeStruct((N,) + state.buf_p1.shape, jnp.float32)
+    masks = jax.ShapeDtypeStruct((N,) + state.buf_p1.shape, jnp.uint32)
+    with pytest.raises(LeakageError, match="materialized mask"):
+        check_round_program(leaky_masked_round, bufs, masks, buf,
+                            n_workers=N, masked=True)
+    # the unmasked policy has no opinion about integer operands
+    report = check_round_program(leaky_masked_round, bufs, masks, buf,
+                                 n_workers=N, masked=False)
     assert report["n_launches"] == 2
 
 
@@ -416,13 +460,21 @@ def test_fed_sync_rejects_privacy_with_fedavg():
 def test_simulator_masked_byte_accounting():
     from repro.core import protocol as proto
     from repro.utils import tree_size
-    spec = PrivacySpec()
+    spec = PrivacySpec()                       # 16-bit modulus default
     sim, params = _make_sim(privacy=spec)
     res = sim.run_fedpc(rounds=2)
     v = tree_size(params) * 4
-    want = proto.fedpc_masked_bytes_per_round(v, 3)
+    want = proto.fedpc_masked_bytes_per_round(v, 3,
+                                              word_bits=spec.modulus_bits)
     assert res.bytes_per_round[0] == want
-    assert want > proto.fedpc_bytes_per_round(v, 3)   # secure agg costs
+    assert want > proto.fedpc_bytes_per_round(v, 3)   # secure agg costs ...
+
+    spec32 = PrivacySpec(modulus_bits=32)
+    sim32, _ = _make_sim(privacy=spec32)
+    res32 = sim32.run_fedpc(rounds=2)
+    want32 = proto.fedpc_masked_bytes_per_round(v, 3, word_bits=32)
+    assert res32.bytes_per_round[0] == want32
+    assert want < want32                       # ... half as much at 16-bit
 
     sim_p, _ = _make_sim()
     res_p = sim_p.run_fedpc(rounds=2)
