@@ -6,7 +6,7 @@ than ``--threshold`` slower. Used by CI: the baseline is the file as
 committed on the branch, the candidate is what ``kernels_bench --smoke``
 just wrote on the runner.
 
-Two comparison classes, both keyed by JSON path:
+Three comparison classes, all keyed by JSON path:
 
 * ``*_speedup`` ratios (fused-vs-unfused, stacked-vs-loop, ...). Both
   sides of a speedup are measured in the SAME bench run on the SAME
@@ -23,6 +23,10 @@ Two comparison classes, both keyed by JSON path:
   trip it; an interpret-mode structural regression of the class this
   repo has actually had (the 0.20x worker-major stacked uplink — ~23ms
   at smoke sizes) lands past floor×threshold and fails.
+* ``*_bytes`` entries — deterministic wire/VMEM accounting models (Eq. (8)
+  flat/tree/FedAvg bytes per round, master tile footprints). These carry
+  no measurement noise, so they are compared exactly with no floor: a
+  >threshold growth means the byte accounting itself regressed.
 
 Entries new in the candidate pass (no baseline to regress from); entries
 that disappeared fail (a silently dropped bench is as bad as a slow one —
@@ -43,14 +47,17 @@ import sys
 
 
 def iter_entries(node, path=""):
-    """Yield (json_path, value, record) for every numeric ``*_us`` or
-    ``*_speedup`` leaf; ``record`` is the enclosing dict, so a speedup can
-    be weighed by the size of its sibling timings."""
+    """Yield (json_path, value, record) for every numeric ``*_us``,
+    ``*_speedup`` or ``*_bytes`` leaf; ``record`` is the enclosing dict, so
+    a speedup can be weighed by the size of its sibling timings. Byte
+    entries are deterministic wire/VMEM models, so any growth past the
+    threshold is a real accounting regression, never noise."""
     if isinstance(node, dict):
         for key, val in node.items():
             sub = f"{path}.{key}" if path else key
             if (isinstance(val, (int, float))
-                    and (key.endswith("_us") or key.endswith("_speedup"))):
+                    and (key.endswith("_us") or key.endswith("_speedup")
+                         or key.endswith("_bytes"))):
                 yield sub, float(val), node
             else:
                 yield from iter_entries(val, sub)
@@ -62,7 +69,8 @@ def iter_entries(node, path=""):
                 tag = "/".join(
                     str(item[k]) for k in ("params", "n_workers",
                                            "modulus_bits", "rounds",
-                                           "fed", "model") if k in item)
+                                           "fed", "model", "fanout")
+                    if k in item)
                 yield from iter_entries(item, f"{path}[{tag}]")
             else:
                 yield from iter_entries(item, path)
@@ -103,13 +111,22 @@ def compare(baseline: dict, candidate: dict, threshold: float,
                     f"(lost >{threshold:.2f}x ground vs same-run "
                     f"counterpart)")
         else:
-            ratio = max(cand_v, floor_us) / max(base_v, floor_us)
+            if key.endswith("_bytes"):
+                # deterministic wire/VMEM byte models: no noise floor —
+                # compare exactly
+                unit = "B"
+                ratio = (cand_v / base_v if base_v
+                         else (1.0 if cand_v == 0 else float("inf")))
+            else:
+                unit = "us"
+                ratio = max(cand_v, floor_us) / max(base_v, floor_us)
             bad = ratio > threshold
             print(f"{'SLOWDOWN' if bad else 'ok':9s}{key}: "
-                  f"{base_v:.0f}us -> {cand_v:.0f}us ({ratio:.2f}x)")
+                  f"{base_v:.0f}{unit} -> {cand_v:.0f}{unit} "
+                  f"({ratio:.2f}x)")
             if bad:
-                failures.append(f"SLOWDOWN {key}: {base_v:.0f}us -> "
-                                f"{cand_v:.0f}us ({ratio:.2f}x)")
+                failures.append(f"SLOWDOWN {key}: {base_v:.0f}{unit} -> "
+                                f"{cand_v:.0f}{unit} ({ratio:.2f}x)")
     for key in sorted(set(cand) - set(base)):
         print(f"new      {key}: {cand[key][0]:.2f} (no baseline)")
     return failures

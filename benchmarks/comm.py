@@ -2,17 +2,88 @@
 
 Reports the analytic Eq. (8) curve for the paper's own model sizes
 (ResNet50-FIXUP 35 MB, U-Net 119 MB) and the *measured* ledger bytes from
-the simulator, plus the headline reductions (31.25% … 42.20%)."""
+the simulator, plus the headline reductions (31.25% … 42.20%).
+
+Extended with the per-round byte accounting of the three wires the repo
+actually implements — plaintext 2-bit, masked-16, masked-32 — under flat
+vs hierarchical-tree aggregation vs FedAvg, at cohort sizes N ∈ {16, 64,
+256}. The rows land in a ``comm`` section of the kernels-bench JSON
+(``BENCH_kernels.json``, or the smoke variant under ``--smoke``) so
+``check_bench_regression.py`` gates them: any change that grows a wire's
+per-round bytes >25% fails CI the same way a kernel slowdown does.
+
+Reading the tree columns: the tree does NOT shrink TOTAL bytes — every
+interior level adds ``w_l`` word-wide partial links — it shrinks the bytes
+over any single link. The flat master ingests N-1 buffers over one link;
+the tree root ingests ``w_L <= fanout``, a ``(N-1)/w_L`` reduction, and
+every interior node ingests exactly ``fanout``.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+from dataclasses import replace
+
 from benchmarks.common import emit, make_sim, make_task, timed
+from benchmarks.kernels_bench import BENCH_JSON, BENCH_SMOKE_JSON
 from repro.core.protocol import (fedavg_bytes_per_round,
-                                 fedpc_bytes_per_round, reduction_vs_fedavg)
+                                 fedpc_bytes_per_round,
+                                 fedpc_masked_bytes_per_round,
+                                 fedpc_tree_bytes_per_round,
+                                 reduction_vs_fedavg)
+from repro.core.tree import TreeSpec
 
 PAPER_MODELS = {"resnet50_fixup": 35e6, "unet": 119e6}
+TREE_COHORTS = (16, 64, 256)
+TREE_FANOUT = 4
 
 
-def run() -> dict:
+def _wire_rows(name: str, v: float) -> list[dict]:
+    """Analytic per-round bytes for one model size across cohorts: flat vs
+    tree at every wire, plus the FedAvg yardstick."""
+    rows = []
+    for n in TREE_COHORTS:
+        ts = TreeSpec(fanout=TREE_FANOUT)
+        w_last = ts.level_widths(n)[-1]
+        rows.append({
+            "model": name,
+            "model_bytes": v,
+            "n_workers": n,
+            "fanout": TREE_FANOUT,
+            "levels": ts.n_levels(n),
+            "fedavg_bytes": fedavg_bytes_per_round(v, n),
+            "flat_plain_bytes": fedpc_bytes_per_round(v, n),
+            "tree_plain_bytes": fedpc_tree_bytes_per_round(v, n,
+                                                           TREE_FANOUT),
+            "flat_masked16_bytes": fedpc_masked_bytes_per_round(v, n, 16),
+            "tree_masked16_bytes": fedpc_tree_bytes_per_round(
+                v, n, TREE_FANOUT, word_bits=16),
+            "flat_masked32_bytes": fedpc_masked_bytes_per_round(v, n, 32),
+            "tree_masked32_bytes": fedpc_tree_bytes_per_round(
+                v, n, TREE_FANOUT, word_bits=32),
+            # ingress of the aggregation bottleneck link (masked-16):
+            # N-1 word buffers into the flat master vs w_L tree partials
+            "flat_root_link16_bytes": (n - 1) * v * 16 / 32,
+            "tree_root_link16_bytes": w_last * v * 16 / 32,
+            "root_link_reduction": (n - 1) / max(w_last, 1),
+        })
+    return rows
+
+
+def _merge_section(json_path: str, section: dict) -> None:
+    """Read-modify-write the kernels-bench JSON: comm rows ride in the same
+    file the CI regression gate already diffs."""
+    try:
+        with open(json_path) as f:
+            payload = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        payload = {}
+    payload["comm"] = section
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+
+def run(smoke: bool = False) -> dict:
     results = {}
     for name, v in PAPER_MODELS.items():
         for n in (3, 4, 5, 6, 7, 8, 9, 10):
@@ -30,15 +101,62 @@ def run() -> dict:
     emit("fig6_claim_max_reduction", 0.0,
          f"{reduction_vs_fedavg(35e6, 10)*100:.2f}% (paper: 42.20%)")
 
+    # ---- flat vs tree vs FedAvg at Eq. (8) accounting, three wires ------
+    wire_rows = []
+    for name, v in PAPER_MODELS.items():
+        rows = _wire_rows(name, v)
+        wire_rows.extend(rows)
+        for r in rows:
+            if r["n_workers"] != max(TREE_COHORTS):
+                continue
+            emit(f"comm_tree_{name}_N{r['n_workers']}_f{r['fanout']}", 0.0,
+                 f"root_link16={r['tree_root_link16_bytes']/1e6:.0f}MB "
+                 f"(flat {r['flat_root_link16_bytes']/1e6:.0f}MB, "
+                 f"{r['root_link_reduction']:.1f}x) "
+                 f"total16={r['tree_masked16_bytes']/1e6:.0f}MB "
+                 f"fedavg={r['fedavg_bytes']/1e6:.0f}MB")
+
     # measured through the simulator ledger
+    n_sim = 6 if smoke else 10
+    rounds = 2
     task = make_task(seed=3)
-    sim, _ = make_sim(task, 10, seed=3)
-    res_pc, us = timed(lambda: sim.run_fedpc(rounds=2))
-    res_avg = sim.run_fedavg(rounds=2)
+    sim, _ = make_sim(task, n_sim, seed=3)
+    res_pc, us = timed(lambda: sim.run_fedpc(rounds=rounds))
+    res_avg = sim.run_fedavg(rounds=rounds)
     meas = 1.0 - res_pc.bytes_per_round[0] / res_avg.bytes_per_round[0]
-    emit("fig6_measured_reduction_N10", us, f"{meas*100:.2f}%")
+    emit(f"fig6_measured_reduction_N{n_sim}", us, f"{meas*100:.2f}%")
+
+    # measured on the tree path: the ledger's per-round accounting follows
+    # the configured topology, and must agree with the analytic model
+    sim_tree, _ = make_sim(task, n_sim, seed=3)
+    sim_tree.fed_cfg = replace(sim_tree.fed_cfg, tree=TreeSpec(fanout=2))
+    res_tree, us_t = timed(lambda: sim_tree.run_fedpc(rounds=rounds))
+    want = fedpc_tree_bytes_per_round(
+        res_avg.bytes_per_round[0] / (2 * n_sim), n_sim, 2)
+    got = res_tree.bytes_per_round[0]
+    assert got == want, (got, want)
+    emit(f"comm_measured_tree_N{n_sim}_f2", us_t,
+         f"ledger={got/1e3:.1f}KB matches Eq.(8)-tree model: True")
+
+    section = {
+        "paper_models": wire_rows,
+        "measured": {
+            "n_workers": n_sim,
+            "rounds": rounds,
+            "fedpc_flat_bytes": res_pc.bytes_per_round[0],
+            "fedpc_tree_f2_bytes": got,
+            "fedavg_bytes": res_avg.bytes_per_round[0],
+        },
+    }
+    _merge_section(BENCH_SMOKE_JSON if smoke else BENCH_JSON, section)
+    emit("bench_comm_section", 0.0,
+         "merged into " + ("smoke" if smoke else "full") + " bench JSON")
     return results
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small measured sim for CI; merges the comm "
+                         "section into BENCH_kernels_smoke.json")
+    run(smoke=ap.parse_args().smoke)

@@ -24,6 +24,8 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.core import flat as fl
+from repro.core import protocol as proto
+from repro.core.tree import TreeSpec
 from repro.fed import rounds as rd
 from repro.kernels import fused_wire as fw
 from repro.kernels import ops, ref, tune
@@ -224,6 +226,111 @@ def _worker_scaling(m: int, n_list: tuple, reps: int) -> list:
             "wire_bytes_per_round": n * r4 * 128,   # uint8 uplink payload
             "master_vmem_tile_bytes": vmem_new,     # constant in N
             "master_vmem_tile_bytes_preaccum": vmem_old,  # linear in N
+            "mode": "cpu-interpret",
+        })
+    return out
+
+
+def _tree_scaling(m: int, n_list: tuple, fanout: int, reps: int) -> list:
+    """Cohort-scale sweep of hierarchical fan-in aggregation: a full plain
+    round through the tree (packed leaves → fixed-point level partials →
+    root sum-and-descale, ``n_levels + 2`` launches) vs the flat two-launch
+    round, at each N.
+
+    The tree rides the integer wire, so its result is invariant to tree
+    shape — the parity assert against the flat float master is bounded only
+    by Eq. (3) weight quantization at ``TREE_PLAIN_FIXPOINT_BITS``. The
+    structural claims are asserted on the jaxpr before timing: launch count
+    grows with DEPTH (log_fanout N), not N, and zero host syncs.
+
+    Byte columns come from the analytic Eq. (8) models at all three wires
+    (plaintext 2-bit, masked-16, masked-32): the link INTO the root carries
+    ``w_L <= fanout`` partials instead of the flat master's N-1 uplinks, and
+    the root's grid/VMEM tile is O(fanout), not O(N)."""
+    rows = m // 128
+    r4 = rows // 4
+    ts = TreeSpec(fanout=fanout)
+    # one timed sweep fills the partial_sum plan for (r4, fanout) — the
+    # table is keyed by fanout, not level width, so every level shares it
+    tune.autotune_partial_sum(r4, fanout, fanout * fanout, interpret=True,
+                              reps=1)
+    out = []
+    for n in n_list:
+        levels = ts.n_levels(n)
+        widths = ts.level_widths(n)
+        k = jax.random.PRNGKey(100 + n)
+        bufs_q = jax.random.normal(k, (n, rows, 128))
+        p1 = jax.random.normal(jax.random.fold_in(k, 1), (rows, 128))
+        p2 = jax.random.normal(jax.random.fold_in(k, 2), (rows, 128))
+        w = jnp.full((n,), 1.0 / max(n - 1, 1)).at[0].set(0.0)
+        if n <= 64:
+            # at larger N the cpu-interpret default (one-shot) is already
+            # the plan the sweep would pick; skip the expensive timing
+            tune.autotune_stacked(r4, n, interpret=True, reps=1)
+            tune.autotune_master(r4, n, interpret=True, reps=1)
+        wire_flat = rd.WirePath(rd.WireConfig(), interpret=True)
+        wire_tree = rd.WirePath(rd.WireConfig(), interpret=True, tree=ts)
+
+        def flat():
+            return wire_flat.round_from_stacked(bufs_q, 0, w, p1, p2,
+                                                t=3)[0]
+
+        def tree():
+            return wire_tree.round_from_stacked(bufs_q, 0, w, p1, p2,
+                                                t=3)[0]
+
+        np.testing.assert_allclose(np.asarray(tree()), np.asarray(flat()),
+                                   rtol=1e-4, atol=1e-4)
+        counts_tree = jaxpr_primitive_counts(tree)
+        counts_flat = jaxpr_primitive_counts(flat)
+        assert counts_tree.get("pallas_call") == levels + 2, counts_tree
+        assert counts_flat.get("pallas_call") == 2, counts_flat
+        host_syncs = sum(counts_tree.get(p, 0)
+                         for p in HOST_SYNC_PRIMITIVES)
+        assert host_syncs == 0, counts_tree
+
+        us_flat = _bench(flat, reps=reps)
+        us_tree = _bench(tree, reps=reps)
+
+        mb = m * 4.0                       # float32 model bytes
+        w_last = widths[-1]
+        tpu_root = tune.default_plan("master", r4, w_last, "tpu")
+        tpu_flat = tune.default_plan("master", r4, n, "tpu")
+        out.append({
+            "params": m,
+            "n_workers": n,
+            "fanout": fanout,
+            "levels": levels,
+            "level_widths": widths,
+            "flat_round_us": us_flat,
+            "tree_round_us": us_tree,
+            "launches": {"flat": 2, "tree": levels + 2},
+            "host_syncs": 0,
+            # the root sums w_L <= fanout partials, not N-1 uplinks — its
+            # worker-axis grid and VMEM tile stop growing with cohort size
+            "root_fan_in": {"flat": n, "tree": w_last},
+            "root_link_reduction": (n - 1) / max(w_last, 1),
+            # bytes over the link INTO the root per round (the flat
+            # master's ingress bottleneck), masked-16 wire: N-1 word
+            # buffers flat vs the last level's w_L partials on the tree
+            "flat_root_link16_bytes": (n - 1) * mb * 16 / 32,
+            "tree_root_link16_bytes": w_last * mb * 16 / 32,
+            "root_vmem_tile_bytes": tune.master_vmem_tile_bytes(
+                tpu_root["block_rows"], tpu_root["block_workers"]),
+            "flat_master_vmem_tile_bytes": tune.master_vmem_tile_bytes(
+                tpu_flat["block_rows"], tpu_flat["block_workers"]),
+            "flat_plain_bytes": proto.fedpc_bytes_per_round(mb, n),
+            "tree_plain_bytes": proto.fedpc_tree_bytes_per_round(
+                mb, n, fanout),
+            "flat_masked16_bytes": proto.fedpc_masked_bytes_per_round(
+                mb, n, 16),
+            "tree_masked16_bytes": proto.fedpc_tree_bytes_per_round(
+                mb, n, fanout, word_bits=16),
+            "flat_masked32_bytes": proto.fedpc_masked_bytes_per_round(
+                mb, n, 32),
+            "tree_masked32_bytes": proto.fedpc_tree_bytes_per_round(
+                mb, n, fanout, word_bits=32),
+            "fedavg_bytes": proto.fedavg_bytes_per_round(mb, n),
             "mode": "cpu-interpret",
         })
     return out
@@ -556,6 +663,24 @@ def run(smoke: bool = False) -> dict:
              f"master_vmem_tile={s['master_vmem_tile_bytes']}B "
              f"(preaccum={s['master_vmem_tile_bytes_preaccum']}B)")
 
+    # ---- hierarchical tree aggregation: cohort-scale sweep --------------
+    tr_m = (1 << 14) if smoke else (1 << 18)
+    tr_n = (4, 8) if smoke else (16, 64, 256)
+    tr_fanout = 2 if smoke else 4
+    tr_tag = (f"{tr_m // (1 << 20)}M" if tr_m >= (1 << 20)
+              else f"{tr_m // 1024}K")
+    tree_results = _tree_scaling(tr_m, tr_n, tr_fanout, 1)
+    for s in tree_results:
+        emit(f"tree_scaling_{tr_tag}_{s['n_workers']}w_f{s['fanout']}",
+             s["tree_round_us"],
+             f"flat={s['flat_round_us']:.0f}us levels={s['levels']} "
+             f"launches={s['launches']['tree']}v2 "
+             f"root_fanin={s['root_fan_in']['tree']}v"
+             f"{s['root_fan_in']['flat']} "
+             f"root_vmem={s['root_vmem_tile_bytes']}B "
+             f"m16_wire={s['tree_masked16_bytes']:.3g}B "
+             f"(flat {s['flat_masked16_bytes']:.3g}B)")
+
     # ---- secure-aggregation wire: masked vs plaintext kernels -----------
     mk_m = (1 << 14) if smoke else (1 << 20)
     mk_tag = (f"{mk_m // (1 << 20)}M" if mk_m >= (1 << 20)
@@ -610,6 +735,7 @@ def run(smoke: bool = False) -> dict:
                "results": results,
                "batched_uplink": uplink_results,
                "worker_scaling": scaling_results,
+               "tree_scaling": tree_results,
                "masked_wire": masked_results,
                "scan_rounds": scan_results,
                "sharded_sync": sync_results}

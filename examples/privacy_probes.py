@@ -13,7 +13,10 @@ Probes the ``repro.privacy`` subsystem end-to-end:
   3. the PrivacyAccountant composes per-round epsilon across a simulated
      federation (basic vs advanced composition read-outs);
   4. the §4.2 enforcement hook: the simulator audits its traced round
-     program at setup and the ledger records the passed audit.
+     program at setup and the ledger records the passed audit;
+  5. hierarchical tree aggregation: the partial sums crossing every tree
+     edge below the root are still masked (a tapped edge leaks nothing),
+     and the level-scoped masks cancel exactly once — at the root.
 
 Run:  PYTHONPATH=src python examples/privacy_probes.py
 """
@@ -22,8 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fedpc import FedPCConfig
+from repro.core.tree import TreeSpec
 from repro.data.pipeline import federated_loaders
 from repro.data.synthetic import SyntheticClassification, random_share_split
+from repro.fed import rounds as rd
 from repro.fed.simulator import FedSimulator
 from repro.fed.worker import Worker, make_worker_configs
 from repro.kernels import ops
@@ -78,6 +83,48 @@ def probe_mask_removal(word_bits: int):
           f"{bool(jnp.all(full == want))}")
     print(f"  modulus {word_bits}: drop-one subset sum recovers "
           f"{recovered:.3%} of words -> the attack {verdict}\n")
+
+
+def probe_subtree_masks(word_bits: int = 16):
+    """Probe 5: hierarchical tree aggregation keeps every edge masked.
+
+    With a fan-in tree, interior nodes forward PARTIAL sums up the tree.
+    Each level's partial is formed by summing its children (whose
+    sibling-scoped masks cancel) and adding the node's OWN net mask from
+    the level-salted stream — so a party tapping any single tree edge sees
+    a still-masked word stream, and a node's children learn nothing about
+    sibling subtrees. The masks have all cancelled exactly once: at the
+    root's sum of the last level's partials."""
+    n, rows, fanout, t = 8, 32, 2, 5
+    k = jax.random.PRNGKey(7)
+    bufs = jax.random.normal(k, (n, rows, 128))
+    p1 = jax.random.normal(jax.random.fold_in(k, 1), (rows, 128))
+    p2 = jax.random.normal(jax.random.fold_in(k, 2), (rows, 128))
+    w = jnp.full((n,), 1.0 / n)
+    ts = TreeSpec(fanout=fanout)
+    mk = {"interpret": True, "tree": ts}
+    wire = rd.WirePath(rd.WireConfig(),
+                       privacy=PrivacySpec(modulus_bits=word_bits), **mk)
+    clear_wire = rd.WirePath(rd.WireConfig(), privacy=PrivacySpec(
+        modulus_bits=word_bits, mask_seed=None, enforce=False), **mk)
+
+    y, _ = wire.uplink_masked(bufs, p1, p2, t=t, w=w)
+    y_clear, _ = clear_wire.uplink_masked(bufs, p1, p2, t=t, w=w)
+    top = wire._tree_fold_masked(y, t=t)          # (w_L, r4, 512) masked
+    top_clear = clear_wire._tree_fold_masked(y_clear, t=t)
+
+    print(f"probe 5 — tree aggregation (fanout {fanout}, "
+          f"{ts.n_levels(n)} levels, modulus 2**{word_bits})")
+    # tap one tree edge below the root: the level-L partial of node 0 —
+    # a full subtree's sum, yet it still carries that node's own net mask
+    match = float(jnp.mean((top[0] == top_clear[0]).astype(jnp.float32)))
+    verdict = "fails" if match < 0.01 else "SUCCEEDS"
+    print(f"  tapping a below-root edge recovers {match:.3%} of the "
+          f"subtree's words -> the tree-edge attack {verdict}")
+    root = jnp.sum(top, axis=0, dtype=top.dtype)
+    root_clear = jnp.sum(top_clear, axis=0, dtype=top_clear.dtype)
+    print(f"  tree level masks: subtree sums cancel at the root: "
+          f"{bool(jnp.all(root == root_clear))}\n")
 
 
 def probe_randomized_response():
@@ -135,6 +182,7 @@ def probe_accountant_and_enforcement():
 def main():
     probe_mask_removal(16)
     probe_mask_removal(32)
+    probe_subtree_masks()
     probe_randomized_response()
     probe_accountant_and_enforcement()
 

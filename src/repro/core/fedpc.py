@@ -26,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core.goodness import select_pilot as _select_pilot
 from repro.core.ternary import ternarize_tree, ternarize_tree_round1
+from repro.core.tree import TreeSpec
 from repro.core.update import master_update_tree
 from repro.privacy.spec import PrivacySpec
 from repro.utils import PyTree
@@ -43,6 +44,7 @@ class FedPCConfig:
     participation: float = 1.0    # FedAvg-style C-fraction of workers per round
     privacy: PrivacySpec | None = None  # secure-agg / local-DP wire
     renorm_shares: bool = False   # Eq. (3) shares renormalized over sampled set
+    tree: TreeSpec | None = None  # hierarchical fan-in aggregation tree
 
     def __post_init__(self):
         if self.betas is not None and len(self.betas) != self.n_workers:

@@ -109,6 +109,31 @@ def fedpc_masked_bytes_per_round(model_bytes: float, n_workers: int,
     return _fedpc_wire_bytes(model_bytes, n_workers, float(word_bits))
 
 
+def fedpc_tree_bytes_per_round(model_bytes: float, n_workers: int,
+                               fanout: int, *, levels: int | None = None,
+                               word_bits: int | None = None) -> float:
+    """Eq. (8) under hierarchical fan-in aggregation.
+
+    Download and pilot upload are topology-free: ``V(N+1)``. The N-1
+    non-pilot leaf uplinks carry 2-bit codes on the plaintext tree
+    (``word_bits=None``) or ``word_bits``-wide masked words on the secure
+    wire. Each interior level l then moves ``w_l = ceil(w_{l-1}/fanout)``
+    partials of one integer word per parameter (partials are word-wide on
+    BOTH wires — the plain tree rides the uint32 integer wire), so the link
+    INTO the root carries ``w_L ≤ fanout`` buffers instead of the flat
+    master's N-1: per-level wire bytes shrink ~fanout× as the tree
+    ascends."""
+    from repro.core.tree import TreeSpec
+    ts = TreeSpec(fanout=fanout, levels=levels)
+    leaf_bits = 2.0 if word_bits is None else float(word_bits)
+    interior_bits = 32.0 if word_bits is None else float(word_bits)
+    total = model_bytes * (n_workers + 1)
+    total += model_bytes * (n_workers - 1) * leaf_bits / 32.0
+    for w_l in ts.level_widths(n_workers)[1:]:
+        total += model_bytes * w_l * interior_bits / 32.0
+    return total
+
+
 def fedavg_bytes_per_round(model_bytes: float, n_workers: int) -> float:
     """FedAvg / Phong et al.: every worker downloads and uploads the model."""
     return 2.0 * model_bytes * n_workers

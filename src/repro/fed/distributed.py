@@ -43,6 +43,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import flat as fl
 from repro.core.goodness import select_pilot as _select_pilot
+from repro.core.tree import TreeSpec
 from repro.fed import rounds as rd
 from repro.models.model import Model
 from repro.privacy import audit as pv_audit
@@ -73,9 +74,70 @@ def _shard_map(body, mesh, in_specs, out_specs, manual_axes):
 # Sync strategies (shard_map bodies over (fed, model), on flat buffer slabs)
 # ---------------------------------------------------------------------------
 
+def _tree_butterfly_reduce(y, *, spec, tree, idx, t, fed_axis, n_fed,
+                           m_idx, pmask):
+    """Tree-shaped masked all-reduce as XOR recursive doubling.
+
+    Level l folds aligned sibling groups of ``fanout`` nodes with
+    ``fanout``-spanning ppermute hops (group masks cancel in the modular
+    sum — leaf signs are sibling-scoped), then only the group
+    representatives (``idx % fanout**l == 0``) carry on: each adds its OWN
+    level-salted sibling-scoped node mask (``net_mask_slab`` over the
+    ``tree_level_seed`` stream) and every non-representative zeroes out, so
+    the words on every subsequent hop stay masked and nothing is
+    double-counted. After the last level a butterfly over the w_L
+    representatives completes the root sum (their level-L masks cancel
+    there), and an additive down-broadcast returns the identical public
+    masked total to every instance — at each hop exactly one endpoint is
+    nonzero, so addition is a broadcast. Modular addition is order-free:
+    the result is bitwise equal to the flat psum of the flat-signed wire.
+
+    Per level the number of information-bearing payloads drops fanout×
+    (non-representatives ship all-zero slabs — SPMD cannot skip a
+    permute, a physical tree runtime simply would not send them).
+    """
+    f = tree.fanout
+    L = tree.n_levels(n_fed)
+    seed = spec.mask_seed if spec.masking_on else 0
+    act = None if pmask is None else jnp.asarray(pmask, jnp.float32)
+    contrib = y
+
+    def hop(x, d):
+        perm = [(i, i ^ d) for i in range(n_fed)]
+        return x + jax.lax.ppermute(x, fed_axis, perm=perm)
+
+    for lvl in range(1, L + 1):
+        for d in (f ** (lvl - 1) * (1 << k) for k in range(f.bit_length() - 1)):
+            contrib = hop(contrib, d)
+        if act is not None:
+            act = pvm.tree_activity(act, f)
+        stride = f ** lvl
+        node = idx // stride
+        w_l = n_fed // stride
+        sib_l = f if lvl < L else w_l
+        if spec.masking_on and w_l >= 2:
+            slab = pvm.net_mask_slab(
+                pvm.tree_level_seed(seed, lvl), node, w_l, t, y.shape,
+                m_idx, word_bits=spec.modulus_bits,
+                signs_row=pvm.tree_pair_signs_row(node, w_l, sib_l,
+                                                  participation=act))
+            contrib = contrib + slab
+        is_rep = (idx % stride) == 0
+        contrib = jnp.where(is_rep, contrib, jnp.zeros_like(contrib))
+    d = f ** L
+    while d < n_fed:            # root: fold the w_L last-level partials
+        contrib = hop(contrib, d)
+        d *= 2
+    d = 1
+    while d < f ** L:           # down-broadcast the public masked total
+        contrib = hop(contrib, d)
+        d *= 2
+    return contrib
+
+
 def _sync_body(q_buf, p_prev, p_prev2, *, wire: rd.WirePath, k_star, w,
                t, fed_axis, n_fed, mode, betas=None, model_axis=None,
-               pmask=None):
+               pmask=None, tree=None):
     """One (fed, model) device's slice of the round sync — a thin driver
     over :class:`repro.fed.rounds.WirePath`.
 
@@ -112,14 +174,23 @@ def _sync_body(q_buf, p_prev, p_prev2, *, wire: rd.WirePath, k_star, w,
         wq = pvm.quantize_weights(wf, spec.fixpoint_bits)
         seed = spec.mask_seed if spec.masking_on else 0
         keys_row = pvm.pair_stream_keys_row(seed, idx, n_fed, t, m_idx)
-        signs_row = pvm.pair_signs_row(idx, n_fed, participation=pmask)
+        if tree is not None:        # leaf masks cancel within sibling groups
+            signs_row = pvm.tree_pair_signs_row(idx, n_fed, tree.fanout,
+                                                participation=pmask)
+        else:
+            signs_row = pvm.pair_signs_row(idx, n_fed, participation=pmask)
         rr_key = pdp.rr_stream_key(spec.dp_seed, t, idx, m_idx)
         y = wire.uplink_masked_slab(q, p_prev, p_prev2, t=t,
                                     wq_own=jnp.take(wq, idx),
                                     keys_row=keys_row,
                                     signs_row=signs_row, rr_key=rr_key,
                                     beta=beta_k)
-        if y.shape[0] % n_fed == 0:
+        if tree is not None:
+            s = _tree_butterfly_reduce(y, spec=spec, tree=tree, idx=idx,
+                                       t=t, fed_axis=fed_axis,
+                                       n_fed=n_fed, m_idx=m_idx,
+                                       pmask=pmask)
+        elif y.shape[0] % n_fed == 0:
             part = jax.lax.psum_scatter(y, fed_axis, scatter_dimension=0,
                                         tiled=True)
             s = jax.lax.all_gather(part, fed_axis, axis=0, tiled=True)
@@ -176,6 +247,7 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
                    wire_block_workers: int | None = None,
                    betas=None, privacy: PrivacySpec | None = None,
                    renorm_shares: bool = False,
+                   tree: TreeSpec | None = None,
                    ledger=None) -> Callable:
     """Returns sync(params_F, costs, sizes, state, mask=None) ->
     (new_global_params, aux).
@@ -215,6 +287,13 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
     trace) and the passing audit recorded in ``ledger`` when given.
     ``renorm_shares`` selects the renormalized-share Eq. (3) variant under
     partial participation.
+
+    ``tree`` (masked wire only) replaces the flat fed all-reduce with the
+    tree-shaped XOR-butterfly of :func:`_tree_butterfly_reduce`: sibling
+    groups of ``tree.fanout`` fold level by level, per-level node masks
+    keep every hop's payload masked, and the link into the root carries
+    w_L ≤ fanout partials instead of F — bitwise identical to the flat
+    path. Requires power-of-two ``fanout`` and fed axis size.
     """
     F = mesh.shape[fed_axis]
     M = mesh.shape.get(model_axis, 1) if shard_wire else 1
@@ -229,6 +308,25 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
         raise ValueError("privacy (secure-agg / DP wire) requires a fedpc "
                          "strategy; strategy='fedavg' moves full-precision "
                          "params over the fed axis")
+    if tree is not None:
+        # The XOR-butterfly tree reduce needs aligned power-of-two sibling
+        # groups and full levels over the fed axis, and the masked wire
+        # (partials crossing tree edges must be masked words).
+        if not masked_wire:
+            raise ValueError("tree aggregation on the mesh requires an "
+                             "active privacy spec — every tree edge must "
+                             "carry masked words")
+        if tree.fanout & (tree.fanout - 1):
+            raise ValueError(f"mesh tree fanout must be a power of two, "
+                             f"got {tree.fanout}")
+        if F & (F - 1):
+            raise ValueError(f"mesh tree reduce needs a power-of-two fed "
+                             f"axis, got {F}")
+        if F % (tree.fanout ** tree.n_levels(F)):
+            raise ValueError(
+                f"fed axis ({F}) must hold whole sibling groups at every "
+                f"level: not divisible by fanout**levels "
+                f"({tree.fanout}**{tree.n_levels(F)})")
     audit_state = {"done": False}
 
     def sync(params_F: PyTree, costs: jax.Array, sizes: jax.Array,
@@ -292,7 +390,7 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
             body = partial(
                 _sync_body, wire=wire, k_star=k_star, w=w, t=t,
                 fed_axis=fed_axis, n_fed=F, betas=betas_arr,
-                model_axis=m_axis, pmask=mask, mode=mode)
+                model_axis=m_axis, pmask=mask, mode=mode, tree=tree)
 
             specs = wire_specs(fed_axis, m_axis)
             sharded_sync = _shard_map(

@@ -50,12 +50,21 @@ import jax.numpy as jnp
 from repro.core import flat as fl
 from repro.core.goodness import select_pilot
 from repro.core.ternary import ternarize, ternarize_round1
+from repro.core.tree import TreeSpec
 from repro.kernels import ops
 from repro.privacy import dp as pdp
 from repro.privacy import masking as pvm
 from repro.privacy.accountant import PrivacyAccountant
 from repro.privacy.spec import PrivacySpec
 from repro.utils import PyTree
+
+#: The plain (no-privacy) tree rides the integer wire so that float
+#: non-associativity cannot break tree == flat bitwise parity: leaves are
+#: weighted with fixed-point Eq. (3) coefficients at these parameters and
+#: every tree edge carries modular uint32 words; the single root launch
+#: de-biases by the public ΣW_k and descales by 2**-TREE_PLAIN_FIXPOINT_BITS.
+TREE_PLAIN_WORD_BITS = 32
+TREE_PLAIN_FIXPOINT_BITS = 24
 
 
 @dataclass(frozen=True)
@@ -187,6 +196,24 @@ class WirePath:
     of Eq. (3) under partial participation: the data shares p_k are
     renormalized over the sampled set (mirroring the C-fraction FedAvg
     fix) instead of keeping the paper's global shares.
+
+    ``tree`` switches the aggregation onto a hierarchical fan-in tree
+    (:class:`repro.core.tree.TreeSpec`): instead of the master folding all
+    N uplinks in one launch, each level folds sibling groups of ``fanout``
+    children into one partial with a fused sub-aggregate kernel, and the
+    root runs the master update over the last level's w_L ≤ fanout
+    partials — master VMEM and grid are O(fanout), not O(N), and a round
+    costs ``levels + 2`` launches. De-bias (−ΣW_k) and fixed-point descale
+    happen exactly ONCE, at the root, over the public global ΣW_k, so the
+    tree is bitwise identical to the flat path (modular accumulation is
+    order-free). On the masked wire, pairwise mask streams are scoped per
+    sibling group (leaf masks cancel inside the level-1 partial; each
+    interior node adds its own level-salted sibling-scoped mask in-kernel)
+    so every tree edge still carries masked words. Without privacy the
+    tree rides the unmasked integer wire at ``TREE_PLAIN_WORD_BITS`` /
+    ``TREE_PLAIN_FIXPOINT_BITS`` — identical bits to the flat integer
+    comparator; vs the float flat master it differs only by the
+    fixed-point weight quantization.
     """
     cfg: WireConfig = WireConfig()
     interpret: bool | None = None
@@ -194,6 +221,7 @@ class WirePath:
     block_workers: int | None = None
     privacy: PrivacySpec | None = None
     renorm_shares: bool = False
+    tree: TreeSpec | None = None
 
     # -- elementwise protocol math (jnp semantics, traced round index) ------
 
@@ -315,7 +343,13 @@ class WirePath:
         wq = pvm.quantize_weights(w, spec.fixpoint_bits)
         keys = pvm.pair_stream_keys(
             spec.mask_seed if spec.masking_on else 0, n, t)
-        signs = pvm.pair_signs(n, participation=pmask)
+        if self.tree is not None:
+            # Leaf masks are scoped to sibling groups so they cancel inside
+            # the level-1 partial, not only at the root.
+            signs = pvm.tree_pair_signs(n, self.tree.fanout,
+                                        participation=pmask)
+        else:
+            signs = pvm.pair_signs(n, participation=pmask)
         rrk = pdp.rr_stream_keys(spec.dp_seed, t, n)
         beta = self.cfg.beta if betas is None else betas
         y = ops.flat_ternary_pack_masked(
@@ -367,6 +401,78 @@ class WirePath:
             interpret=self.interpret, block_rows=self.block_rows,
             block_workers=self.block_workers)
 
+    def _tree_fold_masked(self, y: jax.Array, *, t, pmask=None) -> jax.Array:
+        """Fold the N masked leaf uplinks level by level down to the last
+        level's w_L partials — one fused sub-aggregate launch per level.
+
+        Level l's nodes each sum their ``fanout`` children (whose
+        sibling-scoped masks cancel in the modular sum) and add their OWN
+        net mask from the level-salted stream
+        (``tree_level_seed(mask_seed, l)``), scoped to level-l sibling
+        groups — so the words crossing every tree edge stay masked, and all
+        masks have cancelled exactly when the root sums the last level.
+        ``pmask`` participation folds upward: a node is active iff any
+        descendant leaf is, and masks only pair active nodes."""
+        spec, ts = self.privacy, self.tree
+        n = y.shape[0]
+        widths = ts.level_widths(n)
+        act = None if pmask is None else jnp.asarray(pmask, jnp.float32)
+        cur = y
+        for lvl in range(1, len(widths)):
+            g = widths[lvl]
+            sib = ts.sibling_size(lvl, n)
+            if act is not None:
+                act = pvm.tree_activity(act, ts.fanout)
+            if spec.masking_on:
+                keys = pvm.pair_stream_keys(
+                    pvm.tree_level_seed(spec.mask_seed, lvl), g, t)
+            else:
+                keys = jnp.zeros((g, g), jnp.uint32)
+            signs = pvm.tree_pair_signs(g, sib, participation=act)
+            cur = ops.flat_masked_partial_sum(
+                cur, keys, signs, fanout=ts.fanout, sibling=sib,
+                use_masks=spec.masking_on, interpret=self.interpret,
+                block_rows=self.block_rows,
+                block_groups=self.block_workers)
+        return cur
+
+    def _tree_round_plain(self, bufs_q: jax.Array, k_star, w: jax.Array,
+                          buf_p1: jax.Array, buf_p2: jax.Array, *, t,
+                          betas=None) -> tuple[jax.Array, jax.Array]:
+        """The no-privacy tree round: packed §3.3 leaves → fixed-point
+        weighted level-1 partials → unmasked interior folds → one root
+        sum-and-descale. Rides the integer wire (uint32 words, Eq. (3)
+        weights quantized at ``TREE_PLAIN_FIXPOINT_BITS``) so the result is
+        invariant to tree shape — bitwise equal to the flat integer path
+        for every fanout, ragged groups included."""
+        ts = self.tree
+        n = bufs_q.shape[0]
+        packed = self.uplink_stacked(bufs_q, buf_p1, buf_p2, t=t,
+                                     betas=betas)
+        wq = pvm.quantize_weights(w, TREE_PLAIN_FIXPOINT_BITS)
+        cur = ops.flat_partial_sum(
+            packed, wq, fanout=ts.fanout, word_bits=TREE_PLAIN_WORD_BITS,
+            interpret=self.interpret, block_rows=self.block_rows,
+            block_groups=self.block_workers)
+        widths = ts.level_widths(n)
+        for lvl in range(2, len(widths)):
+            g = widths[lvl]
+            sib = ts.sibling_size(lvl, n)
+            cur = ops.flat_masked_partial_sum(
+                cur, jnp.zeros((g, g), jnp.uint32),
+                jnp.zeros((g, g), jnp.int32), fanout=ts.fanout,
+                sibling=sib, use_masks=False, interpret=self.interpret,
+                block_rows=self.block_rows,
+                block_groups=self.block_workers)
+        buf_pilot = jnp.take(bufs_q, k_star, axis=0)
+        new_buf = ops.flat_masked_master_update(
+            buf_pilot, cur, jnp.sum(wq), buf_p1, buf_p2, t=t,
+            alpha0=self.cfg.alpha0,
+            scale_mult=2.0 ** -TREE_PLAIN_FIXPOINT_BITS,
+            interpret=self.interpret, block_rows=self.block_rows,
+            block_workers=self.block_workers)
+        return new_buf, packed
+
     def round_from_stacked(self, bufs_q: jax.Array, k_star, w: jax.Array,
                            buf_p1: jax.Array, buf_p2: jax.Array, *, t,
                            betas=None, pmask=None
@@ -390,10 +496,17 @@ class WirePath:
         if self.privacy is not None and self.privacy.active:
             y, wq = self.uplink_masked(bufs_q, buf_p1, buf_p2, t=t, w=w,
                                        betas=betas, pmask=pmask)
+            if self.tree is not None:
+                y_top = self._tree_fold_masked(y, t=t, pmask=pmask)
+            else:
+                y_top = y
             buf_pilot = jnp.take(bufs_q, k_star, axis=0)
-            new_buf = self.master_masked(buf_pilot, y, wq, buf_p1, buf_p2,
-                                         t=t)
+            new_buf = self.master_masked(buf_pilot, y_top, wq, buf_p1,
+                                         buf_p2, t=t)
             return new_buf, y
+        if self.tree is not None:
+            return self._tree_round_plain(bufs_q, k_star, w, buf_p1,
+                                          buf_p2, t=t, betas=betas)
         packed = self.uplink_stacked(bufs_q, buf_p1, buf_p2, t=t,
                                      betas=betas)
         buf_pilot = jnp.take(bufs_q, k_star, axis=0)

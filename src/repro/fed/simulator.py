@@ -135,7 +135,8 @@ class FedSimulator:
                            block_rows=wire_block_rows,
                            block_workers=wire_block_workers,
                            privacy=cfg.privacy,
-                           renorm_shares=cfg.renorm_shares)
+                           renorm_shares=cfg.renorm_shares,
+                           tree=cfg.tree)
 
     def _enforce_privacy(self, runtime: str, wire: rd.WirePath,
                          state: rd.RoundState, betas_arr,
@@ -202,13 +203,18 @@ class FedSimulator:
             res.costs.append(float(np.average(vals,
                                               weights=self.sizes * row)))
             res.pilot_history.append(int(pilots[i]))
-            if masked_wire:
+            n_part = int(np.sum(row > 0))
+            if self.fed_cfg.tree is not None:
+                res.bytes_per_round.append(proto.fedpc_tree_bytes_per_round(
+                    model_bytes, n_part, self.fed_cfg.tree.fanout,
+                    levels=self.fed_cfg.tree.levels,
+                    word_bits=spec.modulus_bits if masked_wire else None))
+            elif masked_wire:
                 res.bytes_per_round.append(proto.fedpc_masked_bytes_per_round(
-                    model_bytes, int(np.sum(row > 0)),
-                    word_bits=spec.modulus_bits))
+                    model_bytes, n_part, word_bits=spec.modulus_bits))
             else:
                 res.bytes_per_round.append(proto.fedpc_bytes_per_round(
-                    model_bytes, int(np.sum(row > 0))))
+                    model_bytes, n_part))
         res.params = fl.unflatten_tree(state.buf_p1, layout)
         res.round_state = state
         return res

@@ -16,6 +16,7 @@ from repro.kernels import fused_wire as fw
 from repro.kernels import masked_wire as mw
 from repro.kernels import pack2bit as pk
 from repro.kernels import master_update as mu
+from repro.kernels import partial_sum as ps
 from repro.kernels import ternary_encode as te
 from repro.kernels import tune
 from repro.utils import round_up
@@ -303,6 +304,71 @@ def flat_masked_master_update(buf_q_pilot, masked, sum_wq, buf_p1, buf_p2,
         buf_p1.reshape(r4, wide), buf_p2.reshape(r4, wide), t, alpha0,
         scale_mult, interpret=interpret, block_rows=br, block_workers=bw)
     return out.reshape(rows, LANES)
+
+
+def flat_partial_sum(packed, wq, *, fanout: int, word_bits: int = 32,
+                     interpret: bool | None = None,
+                     block_rows: int | None = None,
+                     block_groups: int | None = None):
+    """Leaf-level tree sub-aggregate over the packed wire: (C, rows//4,
+    128) uint8 children + (C,) fixed-point weights -> (ceil(C/fanout),
+    rows//4, 512) word partials, one launch per level.
+
+    The ragged last sibling group (C not a multiple of ``fanout``) is
+    padded with zero bytes and zero weight — an exact identity (0·field ==
+    0 mod 2**word_bits). Block plans resolve through the tune table under
+    kind ``partial_sum`` keyed by (rows, fanout, backend); every plan
+    produces identical bits (modular accumulation is order-free).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    c, r4, _ = packed.shape
+    g = -(-c // fanout)
+    # Plans are keyed by fanout (the per-node working set); the group-axis
+    # block is fitted to this level's width, not to fanout.
+    tuned_br, tuned_bg = tune.lookup("partial_sum", r4, fanout,
+                                     interpret=interpret)
+    br = _block_rows_for(r4, block_rows or tuned_br)
+    bg = tune.fit_block_workers(g, block_groups or tuned_bg)
+    pad = g * fanout - c
+    wq = jnp.asarray(wq, jnp.uint32)
+    if pad:
+        packed = jnp.pad(packed, ((0, pad), (0, 0), (0, 0)))
+        wq = jnp.pad(wq, (0, pad))
+    return ps.partial_sum_2d(packed, wq, fanout=fanout,
+                             word_bits=word_bits, interpret=interpret,
+                             block_rows=br, block_groups=bg)
+
+
+def flat_masked_partial_sum(words, keys, signs, *, fanout: int,
+                            sibling: int, use_masks: bool = True,
+                            interpret: bool | None = None,
+                            block_rows: int | None = None,
+                            block_groups: int | None = None):
+    """Interior tree sub-aggregate over word partials: (C, rows//4, 512)
+    children -> (ceil(C/fanout), rows//4, 512) parents in the same wire
+    dtype, each parent's own sibling-scoped net mask added in-kernel from
+    the level's (G, G) ``keys``/``signs`` matrices.
+
+    Zero-word padding of the ragged last group is an exact identity.
+    Plans resolve under kind ``partial_sum_masked16``/``partial_sum_masked``
+    (by dtype) keyed by (rows, fanout, backend), chaining down to the
+    plain ``partial_sum`` plan when untuned.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    c, r4, _ = words.shape
+    g = -(-c // fanout)
+    kind = ("partial_sum_masked16" if words.dtype == jnp.uint16
+            else "partial_sum_masked")
+    tuned_br, tuned_bg = tune.lookup(kind, r4, fanout, interpret=interpret)
+    br = _block_rows_for(r4, block_rows or tuned_br)
+    bg = tune.fit_block_workers(g, block_groups or tuned_bg)
+    pad = g * fanout - c
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0), (0, 0)))
+    return ps.masked_partial_sum_2d(words, keys, signs, fanout=fanout,
+                                    sibling=sibling, use_masks=use_masks,
+                                    interpret=interpret, block_rows=br,
+                                    block_groups=bg)
 
 
 def master_update(q_pilot, tern_stacked, w, p1, p2,

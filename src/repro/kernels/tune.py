@@ -40,20 +40,30 @@ BLOCK_ROWS = 64
 BLOCK_WORKERS = 1
 
 KINDS = ("uplink", "uplink_stacked", "master", "uplink_masked",
-         "master_masked", "uplink_masked16", "master_masked16")
+         "master_masked", "uplink_masked16", "master_masked16",
+         "partial_sum", "partial_sum_masked", "partial_sum_masked16")
 
 # Masked kernels share the grid geometry of their plaintext counterparts
 # (same block shapes over the same (rows, N) iteration space), so an
 # untuned masked kind borrows down a chain of geometry twins: the 16-bit
 # modulus kinds fall back to the 32-bit masked plans, which fall back to
-# the unmasked kinds, which fall back to the backend heuristic.
+# the unmasked kinds, which fall back to the backend heuristic. The tree
+# sub-aggregate kinds (keyed by fanout in the n_workers slot, block_workers
+# meaning output groups per step) chain the same way.
 MASKED_FALLBACK = {"uplink_masked16": "uplink_masked",
                    "master_masked16": "master_masked",
                    "uplink_masked": "uplink_stacked",
-                   "master_masked": "master"}
+                   "master_masked": "master",
+                   "partial_sum_masked16": "partial_sum_masked",
+                   "partial_sum_masked": "partial_sum"}
 
 # (kind, rows, n_workers, backend) -> {"block_rows": int, "block_workers": int}
 _TABLE: dict[tuple[str, int, int, str], dict] = {}
+
+# Fallback-chain resolutions already reported, one line per (kind, rows, n,
+# backend) — tuner gaps surface in bench output instead of silently
+# borrowing another kind's plan forever.
+_FALLBACK_LOGGED: set[tuple[str, int, int, str]] = set()
 
 # Interpret-mode sweeps execute one Python-level step per grid tile; cap the
 # plans a cpu sweep will even try so autotuning stays seconds, not minutes.
@@ -95,13 +105,27 @@ def fit_block_workers(n: int, want: int) -> int:
     return 1
 
 
+# Group-axis "all of them" sentinel of the partial-sum default: the ops
+# wrappers fit block_workers to the level width, so a huge want collapses
+# the group grid to one step (the cpu-interpret optimum at any width).
+_ALL_GROUPS = 1 << 30
+
+
 def default_plan(kind: str, rows: int, n_workers: int = 1,
                  backend: str | None = None) -> dict:
     """The untimed heuristic: fewest steps on cpu-interpret (per-step
-    machinery dominates), VMEM-sized O(block) tiles elsewhere."""
+    machinery dominates), VMEM-sized O(block) tiles elsewhere. For the
+    partial-sum kinds ``n_workers`` holds the fanout and ``block_workers``
+    means output groups per grid step — the cpu one-shot wants ALL groups
+    (the ops wrapper clamps to the level width)."""
     backend = backend or backend_tag()
     if backend == "cpu-interpret":
+        if kind.startswith("partial_sum"):
+            return {"block_rows": rows, "block_workers": _ALL_GROUPS}
         return {"block_rows": rows, "block_workers": max(1, n_workers)}
+    if kind.startswith("partial_sum"):
+        return {"block_rows": fit_block_rows(rows, BLOCK_ROWS),
+                "block_workers": 1}
     return {"block_rows": fit_block_rows(rows, BLOCK_ROWS),
             "block_workers": fit_block_workers(max(1, n_workers),
                                                BLOCK_WORKERS)}
@@ -112,14 +136,29 @@ def lookup(kind: str, rows: int, n_workers: int = 1, *,
     """(block_rows, block_workers) for a shape — tuned entry or heuristic.
 
     Never times anything; this is the hot-path call the ``ops`` wrappers
-    make when the caller leaves the block sizes unspecified.
+    make when the caller leaves the block sizes unspecified. When the
+    requested kind has no entry and resolution walks the
+    ``MASKED_FALLBACK`` chain, the traversal is reported once per (kind,
+    rows, n, backend) so tuner gaps are visible in bench output instead of
+    silently borrowing another kind's plan.
     """
     backend = backend_tag(interpret)
     probe = kind
+    chain = [kind]
     plan = _TABLE.get((probe, rows, max(1, n_workers), backend))
     while plan is None and probe in MASKED_FALLBACK:
         probe = MASKED_FALLBACK[probe]
+        chain.append(probe)
         plan = _TABLE.get((probe, rows, max(1, n_workers), backend))
+    if len(chain) > 1:
+        key = (kind, rows, max(1, n_workers), backend)
+        if key not in _FALLBACK_LOGGED:
+            _FALLBACK_LOGGED.add(key)
+            landed = (f"tuned '{probe}' plan" if plan is not None
+                      else f"'{backend}' heuristic")
+            print(f"[tune] no plan for {kind}@(rows={rows}, "
+                  f"n={max(1, n_workers)}, {backend}); fell back "
+                  f"{' -> '.join(chain)} to the {landed}")
     if plan is None:
         plan = default_plan(kind, rows, n_workers, backend)
     return plan["block_rows"], plan["block_workers"]
@@ -321,6 +360,75 @@ def autotune_masked_master(rows: int, n_workers: int, *,
 
     kind = "master_masked16" if word_bits == 16 else "master_masked"
     return _sweep(kind, rows, n_workers, run_plan, interpret=itp, reps=reps)
+
+
+def autotune_partial_sum(rows: int, fanout: int, n_children: int, *,
+                         interpret: bool | None = None, reps: int = 2,
+                         seed: int = 0, word_bits: int = 32,
+                         masked: bool = False) -> dict:
+    """Timed sweep of the tree sub-aggregate plans for (rows, fanout) at
+    one level width ``n_children``; fills the ``partial_sum*`` kind picked
+    by ``masked``/``word_bits``. The table key holds the fanout in the
+    n_workers slot and the winning ``block_workers`` means output groups
+    per grid step (clamped to the level width by the ops wrappers)."""
+    from repro.kernels import partial_sum as psk
+    from repro.privacy import masking as pvm
+    itp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    backend = backend_tag(itp)
+    g = -(-n_children // fanout)
+    pad_c = g * fanout
+    wide = 512
+    key = jax.random.PRNGKey(seed)
+    if masked:
+        kind = ("partial_sum_masked16" if word_bits == 16
+                else "partial_sum_masked")
+        word = jnp.uint16 if word_bits == 16 else jnp.uint32
+        y = jax.random.bits(key, (pad_c, rows, wide),
+                            jnp.uint32).astype(word)
+        keys = pvm.pair_stream_keys(seed, g, 3)
+        sib = max(1, min(g, fanout))
+        signs = pvm.tree_pair_signs(g, sib)
+
+        def run_plan(plan):
+            return psk.masked_partial_sum_2d(
+                y, keys, signs, fanout=fanout, sibling=sib, interpret=itp,
+                block_rows=plan["block_rows"],
+                block_groups=plan["block_workers"])
+    else:
+        kind = "partial_sum"
+        packed = jax.random.bits(key, (pad_c, rows, 128),
+                                 jnp.uint32).astype(jnp.uint8)
+        fb = 14 if word_bits == 16 else 24
+        wq = jnp.full((pad_c,), (1 << fb) // max(pad_c, 1), jnp.uint32)
+
+        def run_plan(plan):
+            return psk.partial_sum_2d(
+                packed, wq, fanout=fanout, word_bits=word_bits,
+                interpret=itp, block_rows=plan["block_rows"],
+                block_groups=plan["block_workers"])
+
+    cands, seen = [], set()
+    for c in ({"block_rows": rows, "block_workers": g},
+              {"block_rows": rows, "block_workers": 1},
+              {"block_rows": fit_block_rows(rows, BLOCK_ROWS),
+               "block_workers": 1}):
+        ck = (c["block_rows"], c["block_workers"])
+        steps = (rows // c["block_rows"]) * (g // c["block_workers"])
+        if ck in seen or (backend == "cpu-interpret"
+                          and steps > _MAX_SWEEP_STEPS_INTERPRET):
+            continue
+        seen.add(ck)
+        cands.append(c)
+    timings = [{**plan, "us": _time_us(lambda p=plan: run_plan(p), reps)}
+               for plan in cands]
+    best = min(timings, key=lambda r: r["us"])
+    _TABLE[(kind, rows, fanout, backend)] = {
+        "block_rows": best["block_rows"],
+        "block_workers": best["block_workers"]}
+    return {"kind": kind, "rows": rows, "n_workers": fanout,
+            "n_children": n_children, "backend": backend,
+            "best": {k: best[k] for k in ("block_rows", "block_workers")},
+            "timings": timings}
 
 
 def save_table(path: str) -> None:

@@ -21,7 +21,9 @@ from repro.privacy.masking import (mix32, net_mask_slab, net_masks,
                                    pair_incidence, pair_signs,
                                    pair_signs_row, pair_stream_keys,
                                    pair_stream_keys_row, quantize_weights,
-                                   stream_key)
+                                   stream_key, tree_activity,
+                                   tree_level_seed, tree_pair_signs,
+                                   tree_pair_signs_row)
 from repro.privacy.spec import PrivacySpec
 
 __all__ = [
@@ -30,5 +32,6 @@ __all__ = [
     "net_masks", "pair_incidence", "pair_signs", "pair_signs_row",
     "pair_stream_keys", "pair_stream_keys_row", "quantize_weights",
     "rr_bits", "rr_bits_worker", "rr_fields", "rr_stream_key",
-    "rr_stream_keys", "stream_key",
+    "rr_stream_keys", "stream_key", "tree_activity", "tree_level_seed",
+    "tree_pair_signs", "tree_pair_signs_row",
 ]

@@ -65,6 +65,23 @@ def _is_unsigned_dtype(dtype) -> bool:
         return False
 
 
+def _is_signed_int_buffer(shape, dtype) -> bool:
+    """True for a signed-integer tensor with buffer-scale volume. On the
+    masked wire the de-biased (bitcast-signed) sum exists only at the root,
+    after unmasking — a signed int16/int32 buffer in a fed collective is a
+    partial that was de-masked below the root. Scalar signed metadata
+    (round counters, pilot index) stays allowed."""
+    try:
+        if not jnp.issubdtype(dtype, jnp.signedinteger):
+            return False
+    except TypeError:
+        return False
+    volume = 1
+    for d in shape:
+        volume *= d
+    return volume > _SCALAR_PAYLOAD_MAX
+
+
 def _is_float_dtype(dtype) -> bool:
     # guarded: extended dtypes (PRNG keys) reject jnp.issubdtype
     try:
@@ -161,6 +178,12 @@ def check_fed_collectives(fn: Callable, *args, n_fed: int,
                 f"unexpected unsigned payload crosses a {p['primitive']} "
                 f"on the masked wire: shape {p['shape']} {p['dtype']} — "
                 f"masked words must be one of {MASKED_WORD_DTYPES}")
+        if masked and _is_signed_int_buffer(p["shape"], p["dtype"]):
+            raise LeakageError(
+                f"de-masked integer partial crosses a {p['primitive']} "
+                f"below the root: shape {p['shape']} {p['dtype']} — "
+                f"tree edges must carry masked unsigned words; the signed "
+                f"de-biased sum exists only after the root unmask")
     return {"boundary": "fed-collectives", "n_payloads": len(payloads),
             "masked": masked}
 
@@ -175,10 +198,12 @@ def check_round_program(fn: Callable, *args, n_workers: int,
     ``masked=True``, additionally assert that (a) no int8/uint8
     ternary-code tensor materializes anywhere outside kernel bodies — the
     packed plaintext wire buffer of the unmasked path must not exist — and
-    (b) no worker-side (non-master) launch consumes a mask-shaped
-    unsigned-int operand stacked over the worker axis: mask and RR streams
-    must be generated in-kernel from counter keys, never materialized in
-    HBM and fed to the uplink (the pre-in-kernel-PRNG signature).
+    (b) the uplink launch (the first in the program) does not consume a
+    mask-shaped unsigned-int operand stacked over the worker axis: mask and
+    RR streams must be generated in-kernel from counter keys, never
+    materialized in HBM and fed to the uplink (the pre-in-kernel-PRNG
+    signature). Interior tree launches after the uplink legitimately
+    consume stacked masked-word partials and are exempt from (b).
     """
     jaxpr = _jaxpr_of(fn, *args, **kwargs)
     launches = [e for e in iter_jaxpr_eqns(jaxpr, into_pallas=False)
@@ -206,7 +231,10 @@ def check_round_program(fn: Callable, *args, n_workers: int,
                         f"plaintext code tensor materialized on the masked "
                         f"wire path: {eqn.primitive.name} -> "
                         f"{tuple(aval.shape)} {aval.dtype}")
-        for launch in launches[:-1]:
+        # Only the first launch is the worker uplink; later launches on the
+        # tree path are interior partial-sum nodes whose operands are
+        # legitimately (C, rows, 512) stacks of already-masked wire words.
+        for launch in launches[:1]:
             for v in launch.invars:
                 aval = getattr(v, "aval", None)
                 if aval is None or not getattr(aval, "shape", None):

@@ -54,6 +54,7 @@ RR_DOMAIN = 0x3C6EF372
 _SALT_STREAM = 0x85EBCA6B
 _SALT_ROUND = 0xC2B2AE35
 _SALT_SHARD = 0x27D4EB2F
+_SALT_TREE_LEVEL = 0x165667B1
 
 
 def mix32(x) -> jax.Array:
@@ -181,6 +182,51 @@ def pair_signs(n: int, *, participation=None) -> jax.Array:
     return signs
 
 
+def tree_level_seed(seed, level: int) -> jax.Array:
+    """Mask seed of tree node level ``level`` (0 = leaves). Level 0 keeps
+    the cohort's root seed (the leaf uplink is the flat uplink with scoped
+    signs); every higher level mixes a level salt so a level-l node's pair
+    streams are independent of the leaf streams with the same pair id."""
+    if level == 0:
+        return jnp.asarray(seed, jnp.uint32)
+    return mix32(jnp.asarray(seed, jnp.uint32)
+                 + jnp.uint32(level) * jnp.uint32(_SALT_TREE_LEVEL))
+
+
+def tree_pair_signs(n: int, sibling: int, *, participation=None) -> jax.Array:
+    """:func:`pair_signs` scoped to contiguous sibling groups of size
+    ``sibling``: a pair's masks are active only when both endpoints share a
+    parent (``i // sibling == j // sibling``), so each node's net mask
+    cancels exactly inside its parent's partial sum — one tree level up,
+    never later. Participation folds in as in the flat matrix."""
+    signs = pair_signs(n, participation=participation)
+    idx = jnp.arange(n)
+    same = (idx[:, None] // sibling) == (idx[None, :] // sibling)
+    return signs * same.astype(jnp.int32)
+
+
+def tree_pair_signs_row(idx, n: int, sibling: int, *,
+                        participation=None) -> jax.Array:
+    """One node's (n,) row of :func:`tree_pair_signs` (``idx`` traced)."""
+    signs = pair_signs_row(idx, n, participation=participation)
+    others = jnp.arange(n)
+    same = (others // sibling) == (jnp.asarray(idx) // sibling)
+    return signs * same.astype(jnp.int32)
+
+
+def tree_activity(mask, fanout: int) -> jax.Array:
+    """Fold a (w,) participation/activity mask one tree level up: a node
+    is active iff ANY of its (at most ``fanout``) children is. Returns
+    (ceil(w/fanout),) float32 0/1 — the participation vector of the next
+    level's sign scoping, so a fully-dropped subtree's node generates no
+    mask and its partial is exactly zero."""
+    m = (jnp.asarray(mask) > 0).astype(jnp.float32)
+    w = m.shape[0]
+    g = -(-w // fanout)
+    m = jnp.pad(m, (0, g * fanout - w))
+    return jnp.max(m.reshape(g, fanout), axis=1)
+
+
 def pair_stream_keys_row(seed, idx, n: int, t, shard_idx=0) -> jax.Array:
     """One worker's (n,) row of :func:`pair_stream_keys` — the distributed
     form (``idx`` is a traced mesh index)."""
@@ -248,7 +294,8 @@ def net_masks(seed, n: int, t, shape: tuple, *, word_bits: int = 32,
 
 
 def net_mask_slab(seed, idx, n: int, t, shape: tuple, shard_idx=0, *,
-                  word_bits: int = 32, participation=None) -> jax.Array:
+                  word_bits: int = 32, participation=None,
+                  signs_row=None) -> jax.Array:
     """One worker's net mask over its model-shard slab — the distributed
     form of :func:`net_masks` (worker ``idx`` and ``shard_idx`` may be
     traced mesh indices). Each (pair, round, model shard) gets its own
@@ -256,14 +303,17 @@ def net_mask_slab(seed, idx, n: int, t, shape: tuple, shard_idx=0, *,
     endpoints mix the same ``shard_idx``. The loop spans all ``n``
     workers — the self-pair (and, under participation, inactive pairs)
     still generate a stream that is then sign-zeroed, because ``idx`` is
-    traced and the case cannot be pruned statically.
+    traced and the case cannot be pruned statically. ``signs_row``
+    overrides the sign derivation (the tree reduce passes sibling-scoped
+    :func:`tree_pair_signs_row` rows for its per-level node masks).
     """
     out_dtype = jnp.uint16 if word_bits == 16 else jnp.uint32
     size = int(np.prod(shape))
     if n < 2:
         return jnp.zeros(tuple(shape), out_dtype)
     keys = pair_stream_keys_row(seed, idx, n, t, shard_idx)
-    signs = pair_signs_row(idx, n, participation=participation)
+    signs = (pair_signs_row(idx, n, participation=participation)
+             if signs_row is None else signs_row)
     h = index_hash(size if word_bits == 32 else 2 * ((size + 1) // 2),
                    word_bits)
     total = jnp.zeros((size,), jnp.int32)

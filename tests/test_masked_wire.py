@@ -342,10 +342,13 @@ def test_masked_kinds_registered():
     for kind in ("uplink_masked", "master_masked", "uplink_masked16",
                  "master_masked16"):
         assert kind in tune.KINDS
-    assert tune.MASKED_FALLBACK == {"uplink_masked16": "uplink_masked",
-                                    "master_masked16": "master_masked",
-                                    "uplink_masked": "uplink_stacked",
-                                    "master_masked": "master"}
+    assert tune.MASKED_FALLBACK == {
+        "uplink_masked16": "uplink_masked",
+        "master_masked16": "master_masked",
+        "uplink_masked": "uplink_stacked",
+        "master_masked": "master",
+        "partial_sum_masked16": "partial_sum_masked",
+        "partial_sum_masked": "partial_sum"}
 
 
 def test_lookup_falls_back_to_unmasked_plan():
@@ -388,6 +391,11 @@ def test_lookup_resolves_every_kind_on_empty_table():
     r4, n = 32, 4
     for kind in tune.KINDS:
         br, bw = tune.lookup(kind, r4, n, interpret=True)
+        if kind.startswith("partial_sum"):
+            # block_workers means output GROUPS per grid step for the tree
+            # sub-aggregate kinds and may be the all-groups sentinel — the
+            # ops wrappers clamp it to the level width
+            bw = tune.fit_block_workers(n, bw)
         assert r4 % br == 0 and n % bw == 0, (kind, br, bw)
 
 
