@@ -69,7 +69,8 @@ def iter_entries(node, path=""):
                 tag = "/".join(
                     str(item[k]) for k in ("params", "n_workers",
                                            "modulus_bits", "rounds",
-                                           "fed", "model", "fanout")
+                                           "fed", "model", "fanout",
+                                           "dropout")
                     if k in item)
                 yield from iter_entries(item, f"{path}[{tag}]")
             else:

@@ -443,6 +443,66 @@ def _masked_wire(m: int, n_workers: int, reps: int) -> list:
     return out
 
 
+def _dropout_recovery(m: int, n_list: tuple, reps: int) -> list:
+    """Dropout-recovery price at m params x N workers vs dropout rate.
+
+    Times the fused ``mask_repair_2d`` launch that subtracts the dead
+    workers' mask residue from the aggregated slab (rate 0 exercises the
+    in-kernel zero-coefficient skip — a fault-free round's repair is a
+    near-no-op) and records the analytic control-plane wire overhead:
+    per-round Shamir dealing (every worker shares its key row with its
+    siblings) plus per-death reconstruction traffic — so the robustness
+    premium is a number next to the masked-wire numbers it rides on."""
+    from repro.core import protocol as proto
+    from repro.privacy import masking as pvm
+    from repro.privacy import recovery as pvr
+    rows = m // 128
+    r4 = rows // 4
+    thr = 2
+    k = jax.random.PRNGKey(31)
+    out = []
+    for n in n_list:
+        keys_mat = pvm.pair_stream_keys(0, n, 3)
+        signs = pvm.pair_signs(n)
+        i_idx, j_idx = pvr.repair_pair_index(n)
+        dealing = proto.recovery_dealing_bytes_per_round(n)
+        for rate in (0.0, 1.0 / n, 0.10):
+            n_dead = int(round(rate * n))
+            alive = np.ones(n)
+            alive[:n_dead] = 0.0
+            ae, de = pvr.effective_masks(None, jnp.asarray(alive), thr,
+                                         None, n)
+            for wb in (16, 32):
+                kf, cf = pvr.repair_coefficients(keys_mat, signs, ae, de,
+                                                 i_idx, j_idx)
+                word = jnp.uint16 if wb == 16 else jnp.uint32
+                y = jax.random.bits(k, (r4, 512), jnp.uint32).astype(word)
+                tune.autotune_mask_repair(r4, len(i_idx), interpret=True,
+                                          reps=1, word_bits=wb)
+
+                def repair():
+                    return ops.flat_mask_repair(y, kf, cf, interpret=True)
+
+                us = _bench(repair, reps=reps)
+                recon = proto.recovery_reconstruction_bytes(
+                    n_dead, thr, n_workers=n)
+                out.append({
+                    "params": m,
+                    "n_workers": n,
+                    "modulus_bits": wb,
+                    "dropout": round(rate, 4),
+                    "n_dead": n_dead,
+                    "repair_pairs": int(len(i_idx)),
+                    "active_pairs": int(np.sum(np.asarray(cf) != 0)),
+                    "repair_us": us,
+                    "dealing_bytes_per_round": dealing,
+                    "reconstruction_bytes": recon,
+                    "recovery_bytes_total": dealing + recon,
+                    "mode": "cpu-interpret",
+                })
+    return out
+
+
 def _scan_rounds_bench(m: int, n_workers: int, rounds: int,
                        reps: int) -> dict:
     """Multi-round FedPC: a Python loop re-dispatching ONE jitted round body
@@ -699,6 +759,22 @@ def run(smoke: bool = False) -> dict:
              f"plain={s['master_plain_us']:.0f}us "
              f"overhead={s['masked_master_overhead']:.2f}x")
 
+    # ---- dropout recovery: repair latency + control-plane bytes ---------
+    dr_m = (1 << 14) if smoke else (1 << 18)
+    dr_n = (4, 8) if smoke else (16, 64)
+    dr_tag = (f"{dr_m // (1 << 20)}M" if dr_m >= (1 << 20)
+              else f"{dr_m // 1024}K")
+    recovery_results = _dropout_recovery(dr_m, dr_n, 1 if not smoke else 3)
+    for s in recovery_results:
+        if s["modulus_bits"] != 16:
+            continue                       # one emit per (n, rate) is enough
+        emit(f"dropout_recovery_{dr_tag}_{s['n_workers']}w"
+             f"_d{s['dropout']}",
+             s["repair_us"],
+             f"dead={s['n_dead']} pairs={s['active_pairs']}/"
+             f"{s['repair_pairs']} dealing={s['dealing_bytes_per_round']:.0f}B "
+             f"recon={s['reconstruction_bytes']:.0f}B")
+
     # ---- multi-round scan driver vs per-round Python loop ---------------
     scan_results = []
     scan_sizes = (((1 << 14), 4, 4),) if smoke else ((1 << 20, 4, 3),)
@@ -737,6 +813,7 @@ def run(smoke: bool = False) -> dict:
                "worker_scaling": scaling_results,
                "tree_scaling": tree_results,
                "masked_wire": masked_results,
+               "dropout_recovery": recovery_results,
                "scan_rounds": scan_results,
                "sharded_sync": sync_results}
     if smoke:

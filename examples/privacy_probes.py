@@ -16,7 +16,11 @@ Probes the ``repro.privacy`` subsystem end-to-end:
      program at setup and the ledger records the passed audit;
   5. hierarchical tree aggregation: the partial sums crossing every tree
      edge below the root are still masked (a tapped edge leaks nothing),
-     and the level-scoped masks cancel exactly once — at the root.
+     and the level-scoped masks cancel exactly once — at the root;
+  6. dropout recovery: a dead worker's mask seeds reconstruct exactly
+     from t Shamir share-holders, while the server colluding with t-1
+     holders recovers 0% of a LIVE worker's mask words — and the audit
+     layer refuses live-target reconstruction outright.
 
 Run:  PYTHONPATH=src python examples/privacy_probes.py
 """
@@ -33,8 +37,12 @@ from repro.fed.simulator import FedSimulator
 from repro.fed.worker import Worker, make_worker_configs
 from repro.kernels import ops
 from repro.models.mlp import init_mlp_classifier, mlp_loss_and_grad
-from repro.privacy import (PrivacySpec, pair_signs, pair_stream_keys,
-                           quantize_weights, rr_fields, rr_stream_keys)
+from repro.core.privacy import LeakageError
+from repro.privacy import (PrivacySpec, deal_worker_shares, pair_signs,
+                           pair_stream_keys, quantize_weights,
+                           reconstruct, recover_worker_keys, rr_fields,
+                           rr_stream_keys)
+from repro.privacy.masking import index_hash, stream_values
 
 
 def probe_mask_removal(word_bits: int):
@@ -179,12 +187,65 @@ def probe_accountant_and_enforcement():
           "direction reaches the master.")
 
 
+def probe_dropout_recovery():
+    """Probe 6: the dropout-recovery control plane — t-of-n seed shares.
+
+    Each worker's per-pair mask seeds are Shamir-shared (GF(2^16),
+    threshold t) across its sibling group so the cohort can repair the
+    masked sum after a post-uplink death. The probe plays both sides:
+    the server colluding with t-1 share-holders against a LIVE worker
+    (must learn nothing), and a legitimate >= t reconstruction of a
+    DECLARED-DEAD worker's stream (must be exact)."""
+    n, thr, victim = 8, 3, 2
+    t = jnp.asarray(5, jnp.int32)
+    members, xs, shares = deal_worker_shares(5, victim, n, t, thr)
+    true_keys = np.asarray(pair_stream_keys(5, n, t))[victim][members]
+    h = index_hash(512, 16)
+    true_words = np.stack([np.asarray(stream_values(jnp.uint32(k), h, 16))
+                           for k in true_keys])
+
+    print(f"probe 6 — dropout recovery: {thr}-of-{len(members)} seed "
+          f"shares (GF(2^16) Shamir)")
+    # --- the collusion attack: server + t-1 holders, victim still live
+    holders = [j for j in range(len(members))
+               if int(members[j]) != victim][:thr - 1]
+    part = reconstruct(shares[holders], xs[holders])   # t-1 points only
+    guess_keys = (part[..., 0].astype(np.uint32)
+                  | (part[..., 1].astype(np.uint32) << 16))
+    guess_words = np.stack(
+        [np.asarray(stream_values(jnp.uint32(k), h, 16))
+         for k in guess_keys])
+    hit = float(np.mean(guess_words == true_words))
+    verdict = "fails" if hit < 0.01 else "SUCCEEDS"
+    print(f"  server + {thr - 1} colluding share-holders vs a LIVE "
+          f"worker: recover {hit:.3%} of its mask words -> the collusion "
+          f"attack {verdict}")
+    try:
+        recover_worker_keys(5, victim, n, t, thr, alive=np.ones(n))
+        refused = False
+    except LeakageError:
+        refused = True
+    print(f"  control plane refuses a live-target reconstruction "
+          f"(LeakageError): {refused}")
+    # --- the legitimate path: victim declared dead, >= t holders
+    alive = np.ones(n)
+    alive[victim] = 0.0
+    _, rec_keys = recover_worker_keys(5, victim, n, t, thr, alive=alive)
+    rec_words = np.stack(
+        [np.asarray(stream_values(jnp.uint32(k), h, 16))
+         for k in rec_keys])
+    exact = bool(np.array_equal(rec_words, true_words))
+    print(f"  declared-dead worker, {thr} surviving share-holders: "
+          f"recovered mask stream exact: {exact}\n")
+
+
 def main():
     probe_mask_removal(16)
     probe_mask_removal(32)
     probe_subtree_masks()
     probe_randomized_response()
     probe_accountant_and_enforcement()
+    probe_dropout_recovery()
 
 
 if __name__ == "__main__":

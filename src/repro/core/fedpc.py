@@ -19,7 +19,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +45,9 @@ class FedPCConfig:
     privacy: PrivacySpec | None = None  # secure-agg / local-DP wire
     renorm_shares: bool = False   # Eq. (3) shares renormalized over sampled set
     tree: TreeSpec | None = None  # hierarchical fan-in aggregation tree
+    # Deterministic fault schedule (repro.fed.faults.FaultPlan). Typed loosely:
+    # repro.fed imports this module, so the concrete class cannot be named here.
+    faults: Any = None
 
     def __post_init__(self):
         if self.betas is not None and len(self.betas) != self.n_workers:

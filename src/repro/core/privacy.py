@@ -34,6 +34,8 @@ ALLOWED_UPLINK_FIELDS = {
     "pilot_params",    # full weights, ONLY when commanded SEND_MODEL
     "worker_id",
     "round",
+    "seed_shares",     # dropout recovery: Shamir shares of pair-mask seeds
+    "mask_recovery",   # dropout recovery: shares of a DEAD worker's seeds
 }
 
 

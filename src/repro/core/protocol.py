@@ -134,6 +134,31 @@ def fedpc_tree_bytes_per_round(model_bytes: float, n_workers: int,
     return total
 
 
+def recovery_dealing_bytes_per_round(n_workers: int,
+                                     group_size: int | None = None) -> float:
+    """Dropout-recovery control plane, per round: each worker deals one
+    Shamir share of its per-pair mask seeds to every sibling. A share is
+    the worker's within-group key row — ``group_size - 1`` uint32 seeds (4
+    bytes as two GF(2^16) symbols) — and ``group_size - 1`` siblings each
+    hold one, so dealing costs ``n * (g - 1)^2 * 4`` bytes per round.
+    ``group_size=None`` is the flat wire: one cohort-wide group."""
+    g = n_workers if group_size is None else group_size
+    return float(n_workers) * (g - 1) ** 2 * 4.0
+
+
+def recovery_reconstruction_bytes(n_deaths: int, threshold: int,
+                                  group_size: int | None = None, *,
+                                  n_workers: int | None = None) -> float:
+    """Dropout-recovery reconstruction traffic: per post-uplink death,
+    ``threshold`` surviving siblings each upload their 4-byte-per-seed
+    share of the dead worker's ``group_size - 1``-seed row."""
+    if group_size is None:
+        if n_workers is None:
+            raise ValueError("flat-wire reconstruction needs n_workers")
+        group_size = n_workers
+    return float(n_deaths) * threshold * (group_size - 1) * 4.0
+
+
 def fedavg_bytes_per_round(model_bytes: float, n_workers: int) -> float:
     """FedAvg / Phong et al.: every worker downloads and uploads the model."""
     return 2.0 * model_bytes * n_workers

@@ -45,10 +45,12 @@ from repro.core import flat as fl
 from repro.core.goodness import select_pilot as _select_pilot
 from repro.core.tree import TreeSpec
 from repro.fed import rounds as rd
+from repro.kernels import ops
 from repro.models.model import Model
 from repro.privacy import audit as pv_audit
 from repro.privacy import dp as pdp
 from repro.privacy import masking as pvm
+from repro.privacy import recovery as pvr
 from repro.privacy.spec import PrivacySpec
 from repro.utils import PyTree
 
@@ -137,7 +139,7 @@ def _tree_butterfly_reduce(y, *, spec, tree, idx, t, fed_axis, n_fed,
 
 def _sync_body(q_buf, p_prev, p_prev2, *, wire: rd.WirePath, k_star, w,
                t, fed_axis, n_fed, mode, betas=None, model_axis=None,
-               pmask=None, tree=None):
+               pmask=None, tree=None, alive=None):
     """One (fed, model) device's slice of the round sync — a thin driver
     over :class:`repro.fed.rounds.WirePath`.
 
@@ -185,6 +187,20 @@ def _sync_body(q_buf, p_prev, p_prev2, *, wire: rd.WirePath, k_star, w,
                                     keys_row=keys_row,
                                     signs_row=signs_row, rr_key=rr_key,
                                     beta=beta_k)
+        alive_eff = dead_eff = None
+        if alive is not None:
+            # Dropout recovery (repro.privacy.recovery): the uplink above
+            # is what this worker COMMITTED; a post-fault death zeroes its
+            # slab before the collective (nothing arrives from a dead
+            # worker), its W_k leaves the de-bias, and the survivors'
+            # uncancelled pair masks toward the dead are repaired on the
+            # reduced total below — identically on every instance.
+            alive_eff, dead_eff = pvr.effective_masks(
+                pmask, alive, spec.recovery_threshold,
+                tree.fanout if tree is not None else None, n_fed)
+            y = jnp.where(jnp.take(alive_eff, idx) > 0, y,
+                          jnp.zeros_like(y))
+            wq = jnp.where(alive_eff > 0, wq, jnp.zeros_like(wq))
         if tree is not None:
             s = _tree_butterfly_reduce(y, spec=spec, tree=tree, idx=idx,
                                        t=t, fed_axis=fed_axis,
@@ -196,6 +212,20 @@ def _sync_body(q_buf, p_prev, p_prev2, *, wire: rd.WirePath, k_star, w,
             s = jax.lax.all_gather(part, fed_axis, axis=0, tiled=True)
         else:                       # slab rows not divisible by F
             s = jax.lax.psum(y, fed_axis)
+        if alive is not None and spec.masking_on:
+            i_idx, j_idx = pvr.repair_pair_index(
+                n_fed, tree.fanout if tree is not None else None)
+            keys_mat = pvm.pair_stream_keys(seed, n_fed, t, m_idx)
+            if tree is not None:
+                signs_mat = pvm.tree_pair_signs(n_fed, tree.fanout,
+                                                participation=pmask)
+            else:
+                signs_mat = pvm.pair_signs(n_fed, participation=pmask)
+            kf, cf = pvr.repair_coefficients(keys_mat, signs_mat,
+                                             alive_eff, dead_eff,
+                                             i_idx, j_idx)
+            s = ops.flat_mask_repair(s, kf, cf, interpret=wire.interpret,
+                                     block_rows=wire.block_rows)
         sw = jnp.sum(wq)
         if spec.modulus_bits == 16:
             sw = (sw & jnp.uint32(0xFFFF)).astype(jnp.uint16)
@@ -248,7 +278,7 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
                    betas=None, privacy: PrivacySpec | None = None,
                    renorm_shares: bool = False,
                    tree: TreeSpec | None = None,
-                   ledger=None) -> Callable:
+                   faults=None, ledger=None) -> Callable:
     """Returns sync(params_F, costs, sizes, state, mask=None) ->
     (new_global_params, aux).
 
@@ -294,6 +324,14 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
     keep every hop's payload masked, and the link into the root carries
     w_L ≤ fanout partials instead of F — bitwise identical to the flat
     path. Requires power-of-two ``fanout`` and fed axis size.
+
+    ``faults`` attaches a deterministic :class:`repro.fed.faults.FaultPlan`:
+    each round realizes per-worker fault codes from ``state["round"]`` and
+    excludes faulted workers from pilot selection and the aggregate. On the
+    masked wire the committed uplinks of dead workers are dropped and their
+    residual pair masks repaired post-reduce (identically on every
+    instance) — requires ``privacy.recovery_threshold``; a sibling group
+    below it degrades to an exact-zero subtree.
     """
     F = mesh.shape[fed_axis]
     M = mesh.shape.get(model_axis, 1) if shard_wire else 1
@@ -327,24 +365,46 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
                 f"fed axis ({F}) must hold whole sibling groups at every "
                 f"level: not divisible by fanout**levels "
                 f"({tree.fanout}**{tree.n_levels(F)})")
+    fault_plan = faults if faults is not None and faults.active else None
+    if (fault_plan is not None and masked_wire
+            and privacy.recovery_threshold is None):
+        raise ValueError(
+            "fault injection on the masked wire requires "
+            "privacy.recovery_threshold (the Shamir t of the "
+            "dropout-recovery dealing) to be set")
     audit_state = {"done": False}
 
     def sync(params_F: PyTree, costs: jax.Array, sizes: jax.Array,
              state: dict, mask: jax.Array | None = None
              ) -> tuple[PyTree, dict]:
         t = state["round"]
+        av = None if fault_plan is None else fault_plan.alive(t, F)
+        if av is None:
+            sel_mask = mask
+        elif masked_wire:
+            # Survivors of a below-threshold sibling group contribute an
+            # exact-zero subtree — exclude them from pilot selection and
+            # the cost carry along with the dead (the threshold and fault
+            # set are public, so every instance computes the same split).
+            sel_mask, _ = pvr.effective_masks(
+                mask, av, privacy.recovery_threshold,
+                tree.fanout if tree is not None else None, F)
+        elif mask is None:
+            sel_mask = av
+        else:
+            sel_mask = jnp.asarray(mask, jnp.float32) * av
         k_star, scores = _select_pilot(costs, state["prev_costs"], sizes, t,
-                                       mask)
+                                       sel_mask)
         p_shares = sizes.astype(jnp.float32) / jnp.sum(sizes)
 
         if strategy == "fedavg":
-            # C-fraction FedAvg: average over the sampled workers only,
-            # shares renormalized over the sampled set (mask has >= 1
+            # C-fraction FedAvg: average over the sampled (and surviving)
+            # workers only, shares renormalized over that set (>= 1
             # participant by construction).
-            if mask is None:
+            if sel_mask is None:
                 wts = p_shares
             else:
-                wm = p_shares * jnp.asarray(mask, jnp.float32)
+                wm = p_shares * jnp.asarray(sel_mask, jnp.float32)
                 wts = wm / jnp.sum(wm)
 
             def avg(x):
@@ -361,8 +421,12 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
                                block_workers=wire_block_workers,
                                privacy=privacy if masked_wire else None,
                                renorm_shares=renorm_shares)
+            # Masked wire: weights were committed BEFORE faults realized
+            # (pre-fault participation); dead rows drop downstream and the
+            # de-bias reweights by the surviving ΣW_k. Plain wire: faults
+            # fold straight into the weights — survivors-only exactly.
             w = wire.weights(p_shares, k_star, t, betas=betas_arr,
-                             mask=mask)
+                             mask=(mask if masked_wire else sel_mask))
             q_flat_F = fl.flatten_stacked(params_F, layout)
             p1_flat = fl.flatten_tree(state["params"], layout)
             p2_flat = fl.flatten_tree(state["params_prev"], layout)
@@ -390,7 +454,8 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
             body = partial(
                 _sync_body, wire=wire, k_star=k_star, w=w, t=t,
                 fed_axis=fed_axis, n_fed=F, betas=betas_arr,
-                model_axis=m_axis, pmask=mask, mode=mode, tree=tree)
+                model_axis=m_axis, pmask=mask, mode=mode, tree=tree,
+                alive=(av if masked_wire else None))
 
             specs = wire_specs(fed_axis, m_axis)
             sharded_sync = _shard_map(
@@ -415,8 +480,8 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
             new_params = fl.unflatten_tree(new_flat, layout)
 
         costs_eff = costs.astype(jnp.float32)
-        if mask is not None:    # non-participants carry their previous cost
-            costs_eff = jnp.where(jnp.asarray(mask) > 0, costs_eff,
+        if sel_mask is not None:  # non-participants / faulted: carry prev
+            costs_eff = jnp.where(jnp.asarray(sel_mask) > 0, costs_eff,
                                   state["prev_costs"])
         new_state = {
             "params": new_params,
@@ -438,7 +503,8 @@ def build_fed_step(model: Model, mesh: Mesh, fed_axis: str = "data",
                    strategy: str = "fedpc", local_steps: int = 1,
                    lr: float = 0.01, betas=None,
                    privacy: PrivacySpec | None = None,
-                   renorm_shares: bool = False, ledger=None) -> Callable:
+                   renorm_shares: bool = False, faults=None,
+                   ledger=None) -> Callable:
     """fed_step(state, opt_states_F, batch_F, sizes, mask=None) ->
        (state', opt_states_F', metrics)
 
@@ -454,7 +520,7 @@ def build_fed_step(model: Model, mesh: Mesh, fed_axis: str = "data",
     """
     sync = build_fed_sync(model, mesh, fed_axis, strategy, betas=betas,
                           privacy=privacy, renorm_shares=renorm_shares,
-                          ledger=ledger)
+                          faults=faults, ledger=ledger)
 
     def local_train(params, opt_state, batches):
         def step(carry, b):

@@ -54,6 +54,7 @@ from repro.core.tree import TreeSpec
 from repro.kernels import ops
 from repro.privacy import dp as pdp
 from repro.privacy import masking as pvm
+from repro.privacy import recovery as pvr
 from repro.privacy.accountant import PrivacyAccountant
 from repro.privacy.spec import PrivacySpec
 from repro.utils import PyTree
@@ -214,6 +215,20 @@ class WirePath:
     ``TREE_PLAIN_FIXPOINT_BITS`` — identical bits to the flat integer
     comparator; vs the float flat master it differs only by the
     fixed-point weight quantization.
+
+    ``faults`` attaches a deterministic failure schedule
+    (:class:`repro.fed.faults.FaultPlan`): each round realizes per-worker
+    fault codes from the plan's counter stream and excludes faulted workers
+    from pilot selection and the aggregate. On the plain wire faults simply
+    fold into the Eq. (3) weights (survivors-only, exactly); on the masked
+    wire the uplink was already committed when a post-uplink death is
+    observed, so the dead rows are dropped from the modular sum, the root
+    de-bias reweights by the surviving ΣW_k, and the survivors' uncancelled
+    pairwise masks toward the dead are repaired in one fused
+    ``mask_repair_2d`` launch from the recovered pair streams
+    (``repro.privacy.recovery`` — requires ``privacy.recovery_threshold``).
+    A sibling group left with fewer than ``recovery_threshold`` survivors
+    degrades to an exact-zero subtree instead of aborting.
     """
     cfg: WireConfig = WireConfig()
     interpret: bool | None = None
@@ -222,6 +237,7 @@ class WirePath:
     privacy: PrivacySpec | None = None
     renorm_shares: bool = False
     tree: TreeSpec | None = None
+    faults: Any = None
 
     # -- elementwise protocol math (jnp semantics, traced round index) ------
 
@@ -475,7 +491,7 @@ class WirePath:
 
     def round_from_stacked(self, bufs_q: jax.Array, k_star, w: jax.Array,
                            buf_p1: jax.Array, buf_p2: jax.Array, *, t,
-                           betas=None, pmask=None
+                           betas=None, pmask=None, alive=None
                            ) -> tuple[jax.Array, jax.Array]:
         """A full round over stacked worker buffers: batched uplink + fused
         master — exactly two kernel launches regardless of N.
@@ -490,16 +506,58 @@ class WirePath:
         the round takes the masked wire instead (same launch count; the
         wire buffer is uint32 masked words). ``pmask`` is the public
         participation mask, consumed only by the masked wire's pairwise
-        mask derivation. Returns ``(new_global_buf, wire_buffer)`` — the
-        wire buffers ride along for byte accounting / ledger purposes.
+        mask derivation. ``alive`` is the post-fault (N,) survival mask of
+        the privacy wire's dropout-recovery path: dead rows leave the
+        modular sum, the de-bias reweights by the surviving ΣW_k and the
+        residual masks are repaired at the root (see :class:`WirePath`
+        docstring). Returns ``(new_global_buf, wire_buffer)`` — the wire
+        buffers ride along for byte accounting / ledger purposes.
         """
         if self.privacy is not None and self.privacy.active:
+            spec = self.privacy
             y, wq = self.uplink_masked(bufs_q, buf_p1, buf_p2, t=t, w=w,
                                        betas=betas, pmask=pmask)
+            repair = None
+            if alive is not None:
+                if spec.recovery_threshold is None:
+                    raise ValueError(
+                        "fault injection on the privacy wire requires "
+                        "privacy.recovery_threshold (the Shamir t of the "
+                        "dropout-recovery dealing) to be set")
+                n = bufs_q.shape[0]
+                gsz = self.tree.fanout if self.tree is not None else None
+                alive_eff, dead_eff = pvr.effective_masks(
+                    pmask, alive, spec.recovery_threshold, gsz, n)
+                # Post-uplink deaths: each dead row leaves the modular sum
+                # (its weighted fields AND its own net mask), taking its
+                # W_k out of the de-bias; what remains is the survivors'
+                # uncancelled masks toward the dead, repaired below.
+                y = jnp.where(alive_eff[:, None, None] > 0, y,
+                              jnp.zeros_like(y))
+                wq = jnp.where(alive_eff > 0, wq, jnp.zeros_like(wq))
+                if spec.masking_on:
+                    i_idx, j_idx = pvr.repair_pair_index(n, gsz)
+                    keys = pvm.pair_stream_keys(spec.mask_seed, n, t)
+                    if self.tree is not None:
+                        signs = pvm.tree_pair_signs(n, self.tree.fanout,
+                                                    participation=pmask)
+                    else:
+                        signs = pvm.pair_signs(n, participation=pmask)
+                    repair = pvr.repair_coefficients(
+                        keys, signs, alive_eff, dead_eff, i_idx, j_idx)
             if self.tree is not None:
                 y_top = self._tree_fold_masked(y, t=t, pmask=pmask)
             else:
                 y_top = y
+            if repair is not None:
+                # Modular sums commute, so leaf-level residue rides the
+                # tree unchanged and ONE fused launch at the root repairs
+                # every surviving-toward-dead stream. The repair lands in a
+                # static row: even a zeroed dead row still participates in
+                # the master's modular sum.
+                y_top = y_top.at[0].set(ops.flat_mask_repair(
+                    y_top[0], repair[0], repair[1],
+                    interpret=self.interpret, block_rows=self.block_rows))
             buf_pilot = jnp.take(bufs_q, k_star, axis=0)
             new_buf = self.master_masked(buf_pilot, y_top, wq, buf_p1,
                                          buf_p2, t=t)
@@ -527,25 +585,65 @@ class WirePath:
         weight, previous cost carried forward — their ``bufs_q`` row may be
         anything, conventionally the current global buffer).
 
+        With a :class:`~repro.fed.faults.FaultPlan` attached, the round
+        additionally realizes its per-worker fault codes from
+        ``state.round`` (so ``scan_rounds`` needs no extra operand) and
+        excludes faulted workers exactly like non-participants — on the
+        masked wire via the post-uplink dropout-recovery path.
+
         Returns ``(state', new_global_buf, info)`` with ``info`` holding the
-        on-device round records (``k_star``, ``goodness``, ``costs``) that a
-        driver fetches ONCE after all rounds to backfill ledger and pilot
-        history. Exactly two kernel launches; zero host syncs.
+        on-device round records (``k_star``, ``goodness``, ``costs``, plus
+        ``alive`` when faults are active) that a driver fetches ONCE after
+        all rounds to backfill ledger and pilot history. Exactly two kernel
+        launches (plus one repair launch on post-fault masked rounds); zero
+        host syncs.
         """
         t = state.round
         sizes = jnp.asarray(sizes, jnp.float32)
         costs = jnp.asarray(costs, jnp.float32)
+        av = None
+        masked_wire = self.privacy is not None and self.privacy.active
+        if self.faults is not None and self.faults.active:
+            av = self.faults.alive(t, sizes.shape[0])
+        if av is None:
+            sel_mask = mask
+        elif masked_wire:
+            # A sibling group below the recovery threshold degrades to an
+            # exact-zero subtree, so its SURVIVORS contribute nothing
+            # either — the master (which knows the fault set and the
+            # public threshold) excludes them from pilot selection and the
+            # cost carry exactly like the dead.
+            if self.privacy.recovery_threshold is None:
+                raise ValueError(
+                    "fault injection on the privacy wire requires "
+                    "privacy.recovery_threshold (the Shamir t of the "
+                    "dropout-recovery dealing) to be set")
+            sel_mask, _ = pvr.effective_masks(
+                mask, av, self.privacy.recovery_threshold,
+                self.tree.fanout if self.tree is not None else None,
+                sizes.shape[0])
+        elif mask is None:
+            sel_mask = av
+        else:
+            sel_mask = jnp.asarray(mask, jnp.float32) * av
         k_star, scores = select_pilot(costs, state.prev_costs, sizes, t,
-                                      mask)
+                                      sel_mask)
         p_shares = sizes / jnp.sum(sizes)
-        w = self.weights(p_shares, k_star, t, betas=betas, mask=mask)
+        # The masked wire commits Eq. (3) weights BEFORE faults realize —
+        # the uplink is already on the wire when a post-uplink death is
+        # observed — so dead rows are excluded downstream and the de-bias
+        # reweights by the surviving ΣW_k. The plain wire has no such
+        # commitment: faults fold straight into the weights, which IS the
+        # survivors-only aggregate.
+        w_mask = mask if masked_wire else sel_mask
+        w = self.weights(p_shares, k_star, t, betas=betas, mask=w_mask)
         new_buf, _wire = self.round_from_stacked(
             bufs_q, k_star, w, state.buf_p1, state.buf_p2, t=t, betas=betas,
-            pmask=mask)
-        if mask is None:
+            pmask=mask, alive=(av if masked_wire else None))
+        if sel_mask is None:
             costs_eff = costs
-        else:   # non-participants did not train: carry their previous cost
-            costs_eff = jnp.where(jnp.asarray(mask) > 0, costs,
+        else:   # non-participants / faulted workers did not report a cost
+            costs_eff = jnp.where(jnp.asarray(sel_mask) > 0, costs,
                                   state.prev_costs)
         accountant = state.accountant
         if (accountant is not None and self.privacy is not None
@@ -557,6 +655,8 @@ class WirePath:
         info = {"k_star": k_star, "goodness": scores, "costs": costs_eff}
         if mask is not None:
             info["mask"] = jnp.asarray(mask, jnp.float32)
+        if av is not None:
+            info["alive"] = av
         return new_state, new_buf, info
 
 

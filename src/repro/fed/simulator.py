@@ -43,6 +43,7 @@ from repro.core import fedpc as fp
 from repro.core import flat as fl
 from repro.core import protocol as proto
 from repro.core.privacy import LeakageLedger
+from repro.fed import faults as ft
 from repro.fed import rounds as rd
 from repro.fed.worker import Worker
 from repro.privacy import audit as pv_audit
@@ -58,10 +59,14 @@ class SimResult:
     bytes_per_round: list = field(default_factory=list)
     eval_history: list = field(default_factory=list)
     round_state: Optional[rd.RoundState] = None        # FedPC resume handle
+    # Dropout-recovery control-plane bytes (share dealing + reconstruction),
+    # accounted SEPARATELY from the data-plane uplink bytes above.
+    recovery_bytes_per_round: list = field(default_factory=list)
 
     @property
     def total_bytes(self) -> float:
-        return float(np.sum(self.bytes_per_round))
+        return float(np.sum(self.bytes_per_round)
+                     + np.sum(self.recovery_bytes_per_round))
 
 
 def _should_donate() -> bool:
@@ -136,7 +141,41 @@ class FedSimulator:
                            block_workers=wire_block_workers,
                            privacy=cfg.privacy,
                            renorm_shares=cfg.renorm_shares,
-                           tree=cfg.tree)
+                           tree=cfg.tree,
+                           faults=cfg.faults)
+
+    def _fault_codes(self, t0: int, n_rounds: int) -> np.ndarray | None:
+        """(R, N) host copy of the fault schedule, or None without a plan.
+        The plan is a pure function of (seed, round, worker), so the host
+        recomputes it — no extra device→host traffic."""
+        plan = self.fed_cfg.faults
+        if plan is None or not plan.active:
+            return None
+        return np.stack([np.asarray(plan.codes(t0 + i, self.n))
+                         for i in range(n_rounds)])
+
+    def _fault_split(self, row: np.ndarray, codes: np.ndarray
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(live_eff, dead, recoverable) boolean views of one round (the
+        masked wire's viability rule): survivors in VIABLE sibling groups
+        (>= recovery_threshold survivors after a death — the others
+        degrade to zero subtrees), sampled faulted workers, and the
+        subset of the dead whose seeds CAN be reconstructed (dead in a
+        viable group)."""
+        pm = row > 0
+        live = pm & (codes == ft.FAULT_NONE)
+        dead = pm & (codes != ft.FAULT_NONE)
+        spec = self.fed_cfg.privacy
+        thr = spec.recovery_threshold if spec is not None else None
+        g = (self.fed_cfg.tree.fanout if self.fed_cfg.tree is not None
+             else self.n)
+        ng = -(-self.n // g)
+        pad = ng * g - self.n
+        lp = np.pad(live, (0, pad)).reshape(ng, g)
+        dp = np.pad(dead, (0, pad)).reshape(ng, g)
+        viable = (dp.sum(1) == 0) | (lp.sum(1) >= (thr or np.inf))
+        v = np.repeat(viable, g)[:self.n]
+        return live & v, dead, dead & v
 
     def _enforce_privacy(self, runtime: str, wire: rd.WirePath,
                          state: rd.RoundState, betas_arr,
@@ -173,15 +212,32 @@ class FedSimulator:
         spec = self.fed_cfg.privacy
         code_kind = ("masked_words" if spec is not None and spec.active
                      else "packed_ternary")
+        codes_mat = self._fault_codes(t0, len(pilots))
+        recovery_on = (codes_mat is not None and spec is not None
+                       and spec.masking_on
+                       and spec.recovery_threshold is not None)
         for i, k_star in enumerate(pilots):
             t = t0 + i
-            row = None if masks is None else masks[i]
+            row = (np.ones(self.n) if masks is None
+                   else np.asarray(masks[i]))
+            # A pre-uplink death sends NOTHING this round; post-uplink
+            # deaths and stragglers already committed their cost + words.
+            sent = row > 0
+            if codes_mat is not None:
+                sent = sent & (codes_mat[i] != ft.DROP_BEFORE)
+            if recovery_on:
+                _, _, recoverable = self._fault_split(row, codes_mat[i])
+                for k in range(self.n):
+                    if row[k]:   # share dealing precedes the round's faults
+                        self.ledger.record(k, t, "seed_shares", False)
+                for k in np.flatnonzero(recoverable):
+                    self.ledger.record(int(k), t, "mask_recovery", False)
             for k in range(self.n):
-                if row is None or row[k]:
+                if sent[k]:
                     self.ledger.record(k, t, "cost", False)
             self.ledger.record(int(k_star), t, "pilot_params", True)
             for k in range(self.n):
-                if (row is None or row[k]) and k != int(k_star):
+                if sent[k] and k != int(k_star):
                     self.ledger.record(k, t, code_kind, False)
 
     def _finish_fedpc(self, res: SimResult, state: rd.RoundState,
@@ -197,24 +253,63 @@ class FedSimulator:
             self._backfill_ledger(t0, pilots, masks)
         spec = self.fed_cfg.privacy
         masked_wire = spec is not None and spec.active
+        codes_mat = self._fault_codes(t0, len(pilots))
         for i in range(len(pilots)):
             row = np.ones(self.n) if masks is None else masks[i]
-            vals = np.where(row > 0, costs_mat[i], 0.0)
-            res.costs.append(float(np.average(vals,
-                                              weights=self.sizes * row)))
+            # The reported round cost averages only workers whose report
+            # the master USED: sampled, not faulted, and (masked wire) in
+            # a viable sibling group. (The scan driver's costs_mat carries
+            # prev-round values for the excluded, the Python driver their
+            # never-delivered local measurements — both are masked out
+            # here, keeping the drivers bitwise.)
+            if codes_mat is None:
+                eff = row
+            elif masked_wire:
+                live_eff, _, _ = self._fault_split(row, codes_mat[i])
+                eff = row * live_eff
+            else:
+                eff = row * (codes_mat[i] == ft.FAULT_NONE)
+            if np.sum(eff) == 0:   # every report lost: cost track carries
+                res.costs.append(res.costs[-1] if res.costs
+                                 else float("inf"))
+            else:
+                vals = np.where(eff > 0, costs_mat[i], 0.0)
+                res.costs.append(float(np.average(
+                    vals, weights=self.sizes * eff)))
             res.pilot_history.append(int(pilots[i]))
             n_part = int(np.sum(row > 0))
             if self.fed_cfg.tree is not None:
-                res.bytes_per_round.append(proto.fedpc_tree_bytes_per_round(
+                wire_bytes = proto.fedpc_tree_bytes_per_round(
                     model_bytes, n_part, self.fed_cfg.tree.fanout,
                     levels=self.fed_cfg.tree.levels,
-                    word_bits=spec.modulus_bits if masked_wire else None))
+                    word_bits=spec.modulus_bits if masked_wire else None)
             elif masked_wire:
-                res.bytes_per_round.append(proto.fedpc_masked_bytes_per_round(
-                    model_bytes, n_part, word_bits=spec.modulus_bits))
+                wire_bytes = proto.fedpc_masked_bytes_per_round(
+                    model_bytes, n_part, word_bits=spec.modulus_bits)
             else:
-                res.bytes_per_round.append(proto.fedpc_bytes_per_round(
-                    model_bytes, n_part))
+                wire_bytes = proto.fedpc_bytes_per_round(
+                    model_bytes, n_part)
+            rec_bytes = 0.0
+            if codes_mat is not None:
+                codes = codes_mat[i]
+                # pre-uplink deaths never spent their uplink bytes
+                n_pre = int(np.sum((row > 0) & (codes == ft.DROP_BEFORE)))
+                leaf_bits = (float(spec.modulus_bits) if masked_wire
+                             else 2.0)
+                wire_bytes -= model_bytes * n_pre * leaf_bits / 32.0
+                if (spec is not None and spec.masking_on
+                        and spec.recovery_threshold is not None):
+                    g = (self.fed_cfg.tree.fanout
+                         if self.fed_cfg.tree is not None else None)
+                    _, _, recoverable = self._fault_split(row, codes)
+                    rec_bytes = (
+                        proto.recovery_dealing_bytes_per_round(self.n, g)
+                        + proto.recovery_reconstruction_bytes(
+                            int(recoverable.sum()),
+                            spec.recovery_threshold, g,
+                            n_workers=self.n))
+            res.bytes_per_round.append(wire_bytes)
+            res.recovery_bytes_per_round.append(rec_bytes)
         res.params = fl.unflatten_tree(state.buf_p1, layout)
         res.round_state = state
         return res

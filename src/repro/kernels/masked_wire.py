@@ -425,3 +425,106 @@ def masked_master_update_2d(q_pilot, masked, sum_wq, p1, p2, t, alpha0,
         interpret=interpret,
     )(q_pilot, masked, p1, p2, scal, sumw)
     return out
+
+
+def _mask_repair_kernel(y_ref, keys_ref, coeff_ref, out_ref, *,
+                        n_pairs: int, word_bits: int, gridded: bool):
+    """Dropout-repair tile: fold ``coeff[p] * stream(keys[p])`` for every
+    repair pair into a (rows, wide) slab of masked wire words, mod
+    2**word_bits. The accumulation planes START from the slab's own words,
+    so the repaired output is one pass — no separate residue tensor.
+    Zero-coefficient pairs (the common case: coeff is nonzero only for
+    dead-live pairs) skip their stream expansion via ``lax.cond``."""
+    br, wide = y_ref.shape
+    base = (jnp.asarray(pl.program_id(0), jnp.uint32)
+            * jnp.uint32(br * wide) if gridded else jnp.uint32(0))
+    keys = keys_ref[...]                                   # (P,) uint32
+    coeff = coeff_ref[...]                                 # (P,) int32
+    h = _tile_hash(base, br, wide, word_bits)
+    y = y_ref[...]
+    if word_bits == 16:
+        # Same half-plane layout as the uplink: reinterpret uint16 lane
+        # pairs as uint32 words (low lane first), accumulate lo/hi in
+        # separate int32 planes, repack with shift|or at the end.
+        pw = wide // 2
+        w0 = jax.lax.bitcast_convert_type(y.reshape(br, pw, 2), jnp.uint32)
+        planes0 = ((w0 & jnp.uint32(0xFFFF)).astype(jnp.int32),
+                   (w0 >> jnp.uint32(16)).astype(jnp.int32))
+
+        def expand(key):
+            u = pvm.mask_stream(key, h)
+            return ((u & jnp.uint32(0xFFFF)).astype(jnp.int32),
+                    (u >> jnp.uint32(16)).astype(jnp.int32))
+    else:
+        planes0 = (jax.lax.bitcast_convert_type(y, jnp.int32),)
+
+        def expand(key):
+            return (jax.lax.bitcast_convert_type(
+                pvm.mask_stream(key, h), jnp.int32),)
+
+    def fold(p, planes):
+        c = coeff[p]
+        return jax.lax.cond(
+            c == 0, lambda ps: ps,
+            lambda ps: tuple(a + c * v
+                             for a, v in zip(ps, expand(keys[p]))),
+            planes)
+
+    planes = jax.lax.fori_loop(0, n_pairs, fold, planes0)
+    if word_bits == 16:
+        lo, hi = planes
+        lo_u = (jax.lax.bitcast_convert_type(lo, jnp.uint32)
+                & jnp.uint32(0xFFFF))
+        hi_u = (jax.lax.bitcast_convert_type(hi, jnp.uint32)
+                << jnp.uint32(16))
+        out_ref[...] = jax.lax.bitcast_convert_type(
+            lo_u | hi_u, jnp.uint16).reshape(br, wide)
+    else:
+        out_ref[...] = jax.lax.bitcast_convert_type(planes[0], jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def mask_repair_2d(y, pair_keys, pair_coeff, *, interpret: bool = True,
+                   block_rows: int = BLOCK_ROWS):
+    """Repair a masked-word slab after post-uplink deaths, in one launch.
+
+    ``y`` (R, 512) wire words (uint16/uint32 picks the modulus);
+    ``pair_keys`` (P,) uint32 stream keys and ``pair_coeff`` (P,) int32
+    coefficients from ``privacy.recovery.repair_coefficients`` — the term
+    ``sum_p coeff[p] * stream(keys[p])`` is added mod 2**modulus_bits.
+    The stream geometry (flat element index ``r * 512 + c``, halved at the
+    16-bit modulus) is exactly the uplink kernel's, so a dead worker's
+    regenerated words are bitwise the ones it committed. Bitwise invariant
+    under ``block_rows`` (modular addition; each tile hashes its own
+    absolute counter range).
+    """
+    rows, wide = y.shape
+    n_pairs = int(pair_keys.shape[0])
+    if n_pairs == 0:
+        return y
+    word_bits = 16 if y.dtype == jnp.uint16 else 32
+    keys = jnp.asarray(pair_keys, jnp.uint32)
+    coeff = jnp.asarray(pair_coeff, jnp.int32)
+    kern = functools.partial(_mask_repair_kernel, n_pairs=n_pairs,
+                             word_bits=word_bits)
+    if block_rows >= rows:
+        return pl.pallas_call(
+            functools.partial(kern, gridded=False),
+            in_specs=[pl.BlockSpec(y.shape, None),
+                      pl.BlockSpec(memory_space=pl.ANY),
+                      pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec(y.shape, None),
+            out_shape=jax.ShapeDtypeStruct(y.shape, y.dtype),
+            interpret=interpret,
+        )(y, keys, coeff)
+    spec = pl.BlockSpec((block_rows, wide), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(kern, gridded=True),
+        grid=(rows // block_rows,),
+        in_specs=[spec,
+                  pl.BlockSpec(memory_space=pl.ANY),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(y.shape, y.dtype),
+        interpret=interpret,
+    )(y, keys, coeff)

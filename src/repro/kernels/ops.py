@@ -306,6 +306,30 @@ def flat_masked_master_update(buf_q_pilot, masked, sum_wq, buf_p1, buf_p2,
     return out.reshape(rows, LANES)
 
 
+def flat_mask_repair(words, pair_keys, pair_coeff, *,
+                     interpret: bool | None = None,
+                     block_rows: int | None = None):
+    """Dropout repair over one masked-word slab (kernel view): add
+    ``sum_p coeff[p] * stream(keys[p])`` mod 2**modulus_bits to a
+    (rows//4, 512) wire-word buffer in one launch.
+
+    ``pair_keys``/``pair_coeff`` come from
+    ``privacy.recovery.repair_coefficients`` — coefficients are nonzero
+    only for dead-live pairs, and zero-coefficient streams are skipped
+    in-kernel, so a fault-free round's repair is a near-no-op. Plans
+    resolve under kind ``mask_repair16``/``mask_repair`` (by dtype) and
+    chain down to the ``uplink`` row plan when untuned; every plan
+    produces identical bits (modular addition is order-free).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    r4 = words.shape[0]
+    kind = "mask_repair16" if words.dtype == jnp.uint16 else "mask_repair"
+    tuned_br, _ = tune.lookup(kind, r4, 1, interpret=interpret)
+    br = _block_rows_for(r4, block_rows or tuned_br)
+    return mw.mask_repair_2d(words, pair_keys, pair_coeff,
+                             interpret=interpret, block_rows=br)
+
+
 def flat_partial_sum(packed, wq, *, fanout: int, word_bits: int = 32,
                      interpret: bool | None = None,
                      block_rows: int | None = None,

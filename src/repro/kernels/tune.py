@@ -41,7 +41,8 @@ BLOCK_WORKERS = 1
 
 KINDS = ("uplink", "uplink_stacked", "master", "uplink_masked",
          "master_masked", "uplink_masked16", "master_masked16",
-         "partial_sum", "partial_sum_masked", "partial_sum_masked16")
+         "partial_sum", "partial_sum_masked", "partial_sum_masked16",
+         "mask_repair", "mask_repair16")
 
 # Masked kernels share the grid geometry of their plaintext counterparts
 # (same block shapes over the same (rows, N) iteration space), so an
@@ -55,7 +56,9 @@ MASKED_FALLBACK = {"uplink_masked16": "uplink_masked",
                    "uplink_masked": "uplink_stacked",
                    "master_masked": "master",
                    "partial_sum_masked16": "partial_sum_masked",
-                   "partial_sum_masked": "partial_sum"}
+                   "partial_sum_masked": "partial_sum",
+                   "mask_repair16": "mask_repair",
+                   "mask_repair": "uplink"}
 
 # (kind, rows, n_workers, backend) -> {"block_rows": int, "block_workers": int}
 _TABLE: dict[tuple[str, int, int, str], dict] = {}
@@ -427,6 +430,54 @@ def autotune_partial_sum(rows: int, fanout: int, n_children: int, *,
         "block_workers": best["block_workers"]}
     return {"kind": kind, "rows": rows, "n_workers": fanout,
             "n_children": n_children, "backend": backend,
+            "best": {k: best[k] for k in ("block_rows", "block_workers")},
+            "timings": timings}
+
+
+def autotune_mask_repair(rows: int, n_pairs: int, *,
+                         interpret: bool | None = None, reps: int = 2,
+                         seed: int = 0, word_bits: int = 32) -> dict:
+    """Timed sweep of the dropout-repair kernel plans for (rows, P repair
+    pairs) at one wire modulus; fills ``mask_repair16``/``mask_repair``
+    keyed with n_workers=1 (the kernel has no worker axis — only a row
+    grid). Half the coefficients are zero so the sweep times the in-kernel
+    zero-skip path a real faulted round exercises."""
+    from repro.kernels import masked_wire as mw
+    from repro.privacy import masking as pvm
+    itp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    backend = backend_tag(itp)
+    word = jnp.uint16 if word_bits == 16 else jnp.uint32
+    y = jax.random.bits(jax.random.PRNGKey(seed), (rows, 512),
+                        jnp.uint32).astype(word)
+    keys = pvm.stream_key(seed, jnp.arange(max(1, n_pairs)), 3)
+    coeff = jnp.where(jnp.arange(max(1, n_pairs)) % 2 == 0, 1, 0
+                      ).astype(jnp.int32)
+
+    def run_plan(plan):
+        return mw.mask_repair_2d(y, keys, coeff, interpret=itp,
+                                 block_rows=plan["block_rows"])
+
+    kind = "mask_repair16" if word_bits == 16 else "mask_repair"
+    cands, seen = [], set()
+    for c in ({"block_rows": rows, "block_workers": 1},
+              {"block_rows": fit_block_rows(rows, 256), "block_workers": 1},
+              {"block_rows": fit_block_rows(rows, BLOCK_ROWS),
+               "block_workers": 1}):
+        ck = c["block_rows"]
+        steps = rows // c["block_rows"]
+        if ck in seen or (backend == "cpu-interpret"
+                          and steps > _MAX_SWEEP_STEPS_INTERPRET):
+            continue
+        seen.add(ck)
+        cands.append(c)
+    timings = [{**plan, "us": _time_us(lambda p=plan: run_plan(p), reps)}
+               for plan in cands]
+    best = min(timings, key=lambda r: r["us"])
+    _TABLE[(kind, rows, 1, backend)] = {
+        "block_rows": best["block_rows"],
+        "block_workers": best["block_workers"]}
+    return {"kind": kind, "rows": rows, "n_workers": 1,
+            "n_pairs": n_pairs, "backend": backend,
             "best": {k: best[k] for k in ("block_rows", "block_workers")},
             "timings": timings}
 

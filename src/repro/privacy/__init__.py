@@ -9,12 +9,16 @@ that rides the round carry, and traced-program leakage audits that enforce
 the §4.2 information-flow policy in both runtimes. The mask and RR streams
 are COUNTER-based (``masking.mix32`` chains): kernels regenerate them
 in-register from tiny per-pair/per-worker keys, and the host-side
-expansions here are the order-exact reference oracles. See the README
-"Privacy architecture" section for the threat model and math.
+expansions here are the order-exact reference oracles. ``recovery`` adds
+the Bonawitz-style dropout half: t-of-n Shamir shares of the pair seeds
+over GF(2^16) and the traced mask-repair path that keeps the cohort sum
+exact when workers die mid-round. See the README "Privacy architecture"
+and "Failure model" sections for the threat model and math.
 """
 from repro.privacy.accountant import PrivacyAccountant
-from repro.privacy.audit import (check_fed_collectives, check_round_program,
-                                 collective_payloads)
+from repro.privacy.audit import (check_fed_collectives,
+                                 check_recovery_target,
+                                 check_round_program, collective_payloads)
 from repro.privacy.dp import (rr_bits, rr_bits_worker, rr_fields,
                               rr_stream_key, rr_stream_keys)
 from repro.privacy.masking import (mix32, net_mask_slab, net_masks,
@@ -24,13 +28,21 @@ from repro.privacy.masking import (mix32, net_mask_slab, net_masks,
                                    stream_key, tree_activity,
                                    tree_level_seed, tree_pair_signs,
                                    tree_pair_signs_row)
+from repro.privacy.recovery import (deal_shares, deal_worker_shares,
+                                    effective_masks, gf_inv, gf_mul,
+                                    mask_repair_ref, reconstruct,
+                                    recover_worker_keys,
+                                    repair_coefficients, repair_pair_index)
 from repro.privacy.spec import PrivacySpec
 
 __all__ = [
     "PrivacyAccountant", "PrivacySpec", "check_fed_collectives",
-    "check_round_program", "collective_payloads", "mix32", "net_mask_slab",
-    "net_masks", "pair_incidence", "pair_signs", "pair_signs_row",
-    "pair_stream_keys", "pair_stream_keys_row", "quantize_weights",
+    "check_recovery_target", "check_round_program", "collective_payloads",
+    "deal_shares", "deal_worker_shares", "effective_masks", "gf_inv",
+    "gf_mul", "mask_repair_ref", "mix32", "net_mask_slab", "net_masks",
+    "pair_incidence", "pair_signs", "pair_signs_row", "pair_stream_keys",
+    "pair_stream_keys_row", "quantize_weights", "reconstruct",
+    "recover_worker_keys", "repair_coefficients", "repair_pair_index",
     "rr_bits", "rr_bits_worker", "rr_fields", "rr_stream_key",
     "rr_stream_keys", "stream_key", "tree_activity", "tree_level_seed",
     "tree_pair_signs", "tree_pair_signs_row",

@@ -188,6 +188,25 @@ def check_fed_collectives(fn: Callable, *args, n_fed: int,
             "masked": masked}
 
 
+def check_recovery_target(worker: int, alive) -> None:
+    """Guard the dropout-recovery control plane: mask-seed reconstruction
+    may only ever target a DECLARED-DEAD worker.
+
+    Reconstructing a still-live worker's per-pair keys would let the
+    server strip that worker's masks from its committed uplink — the exact
+    attack secure aggregation exists to prevent — so
+    ``recovery.recover_worker_keys`` calls this before combining any
+    shares, and a live target raises :class:`LeakageError` instead of
+    reconstructing. ``alive`` is the public (n,) survival mask of the
+    round (host or device values; >0 means live)."""
+    a = jnp.asarray(alive)
+    if bool(a[int(worker)] > 0):
+        raise LeakageError(
+            f"mask-seed recovery targeted worker {int(worker)}, which is "
+            f"still live this round — recovery may only reconstruct "
+            f"declared-dead workers' seeds")
+
+
 def check_round_program(fn: Callable, *args, n_workers: int,
                         masked: bool = False, **kwargs) -> dict:
     """Audit a simulator round program (``round_step`` or a jitted wrapper).

@@ -47,10 +47,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-# Domain-separation salts (mask vs randomized-response key derivation) and
-# the per-level mixing constants of the key chain.
+# Domain-separation salts (mask vs randomized-response vs fault-plan vs
+# share-dealing key derivation) and the per-level mixing constants of the
+# key chain.
 MASK_DOMAIN = 0x9E3779B9
 RR_DOMAIN = 0x3C6EF372
+FAULT_DOMAIN = 0x94D049BB
+RECOVERY_DOMAIN = 0xBF58476D
 _SALT_STREAM = 0x85EBCA6B
 _SALT_ROUND = 0xC2B2AE35
 _SALT_SHARD = 0x27D4EB2F

@@ -1,0 +1,362 @@
+"""Bonawitz-style dropout recovery: seed secret-sharing + mask repair.
+
+The pairwise-mask wire (``repro.privacy.masking``) cancels exactly only
+over the participation set the masks were derived for. A worker that dies
+AFTER committing its masked uplink (or whose uplink never arrives — a
+pre-uplink death or a straggler past the timeout) must be dropped from the
+aggregate, but every surviving sibling ``l`` already folded
+``sign(l, k) * m_kl`` into its own words, so the survivors-only modular sum
+carries the dead worker's uncancelled net mask as residue. This module
+provides both halves of the classic fix:
+
+* **Control plane — Shamir shares of the pair seeds.** At round setup each
+  worker's row of pair stream keys (restricted to its sibling group — PR
+  7's fanout-scoped masks make a death local to one subtree) is dealt as
+  t-of-n Shamir shares over GF(2^16) to its siblings. After a death, any
+  ``threshold`` surviving siblings reconstruct the dead worker's keys
+  (:func:`recover_worker_keys`); fewer than ``threshold`` shares reveal
+  *nothing* (probe 6 in ``examples/privacy_probes.py`` measures this), and
+  reconstructing a still-LIVE worker's keys is a policy violation —
+  :func:`repro.privacy.audit.check_recovery_target` raises
+  :class:`~repro.core.privacy.LeakageError` before any share is combined.
+  In the simulation the reconstructed keys equal the root-seed-derived
+  ``pair_stream_keys`` row bitwise (the same stand-in-for-key-agreement
+  convention the masking module documents), which is what lets the traced
+  repair below consume the derived keys directly while tests pin the
+  share-reconstruction path against them.
+
+* **Data plane — the traced repair term.** Dropping dead rows from the
+  modular sum removes each dead worker ``k``'s own row (its weighted
+  fields AND its net mask) but leaves ``-sum_{l alive} sign(k, l) m_kl``
+  residue in the survivors. The repair ADDS ``sum_{k dead, l alive}
+  sign(k, l) * m_kl`` mod 2**modulus_bits — regenerated from the same
+  counter PRNG, fused in the ``mask_repair_2d`` Pallas kernel
+  (``repro.kernels.masked_wire``), applied ONCE at the root (modular sums
+  commute, so leaf residue rides up the tree unchanged).
+  :func:`repair_coefficients` builds the per-pair ±1 coefficients;
+  :func:`effective_masks` computes the post-fault activity vectors with
+  the graceful-degradation rule: a sibling group that suffered a death but
+  retains fewer than ``threshold`` survivors cannot reconstruct, so the
+  WHOLE group is zeroed (its subtree contributes exact zero — the PR 7
+  dropped-subtree identity) and the round proceeds.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.privacy import masking as pvm
+
+GF_BITS = 16
+GF_ORDER = 1 << GF_BITS
+#: x^16 + x^12 + x^3 + x + 1 — primitive over GF(2), so GF(2^16) words are
+#: exactly the uint16 wire symbols the masked path already moves.
+GF_POLY = 0x1100B
+
+
+def _gf_mul_scalar(a: int, b: int) -> int:
+    """Carryless multiply mod GF_POLY — pure-Python, table-build only."""
+    r = 0
+    for _ in range(GF_BITS):
+        if b & 1:
+            r ^= a
+        b >>= 1
+        a <<= 1
+        if a & GF_ORDER:
+            a ^= GF_POLY
+    return r
+
+
+@functools.lru_cache(maxsize=1)
+def _tables() -> tuple[np.ndarray, np.ndarray]:
+    """(exp, log) discrete-log tables of GF(2^16)*. The generator is found
+    by search (period asserted == 2^16 - 1, not assumed); ``exp`` is doubled
+    so products index without a mod."""
+    for g in (2, 3, 5, 7):
+        exp = np.zeros(2 * (GF_ORDER - 1), np.uint32)
+        log = np.zeros(GF_ORDER, np.uint32)
+        x, period = 1, 0
+        for i in range(GF_ORDER - 1):
+            exp[i] = x
+            log[x] = i
+            x = _gf_mul_scalar(x, g)
+            period = i + 1
+            if x == 1:
+                break
+        if period == GF_ORDER - 1:
+            exp[GF_ORDER - 1:] = exp[:GF_ORDER - 1]
+            return exp, log
+    raise AssertionError(f"no primitive element found for poly {GF_POLY:#x}")
+
+
+def gf_mul(a, b) -> np.ndarray:
+    """Elementwise GF(2^16) product (vectorized, zero-absorbing)."""
+    exp, log = _tables()
+    a = np.asarray(a, np.uint32) & 0xFFFF
+    b = np.asarray(b, np.uint32) & 0xFFFF
+    out = exp[log[a].astype(np.int64) + log[b].astype(np.int64)]
+    return np.where((a == 0) | (b == 0), 0, out).astype(np.uint32)
+
+
+def gf_inv(a) -> np.ndarray:
+    """Elementwise GF(2^16) inverse; raises on zero."""
+    exp, log = _tables()
+    a = np.asarray(a, np.uint32) & 0xFFFF
+    if np.any(a == 0):
+        raise ZeroDivisionError("gf_inv(0)")
+    return exp[GF_ORDER - 1 - log[a].astype(np.int64)].astype(np.uint32)
+
+
+def _mix32_np(x) -> np.ndarray:
+    """Host-side lowbias32 — bitwise the jnp :func:`masking.mix32` (the
+    share-polynomial coefficients are control-plane data, never traced)."""
+    x = np.asarray(x, np.uint64) & 0xFFFFFFFF
+    x ^= x >> 16
+    x = (x * 0x7FEB352D) & 0xFFFFFFFF
+    x ^= x >> 15
+    x = (x * 0x846CA68B) & 0xFFFFFFFF
+    x ^= x >> 16
+    return x.astype(np.uint32)
+
+
+def _share_coeffs(seed, worker, t, degree: int, size: int) -> np.ndarray:
+    """Deterministic degree-``degree`` Shamir coefficients (uint16 symbols)
+    for ``worker``'s round-``t`` dealing — a RECOVERY_DOMAIN mix32 chain, so
+    they never collide with mask, RR or fault streams."""
+    k = _mix32_np(np.uint64(int(seed) & 0xFFFFFFFF)
+                  ^ np.uint64(pvm.RECOVERY_DOMAIN))
+    k = _mix32_np(k.astype(np.uint64) + np.uint64(int(worker))
+                  * np.uint64(pvm._SALT_STREAM))
+    k = _mix32_np(k.astype(np.uint64) + np.uint64(int(t) & 0xFFFFFFFF)
+                  * np.uint64(pvm._SALT_ROUND))
+    k = _mix32_np(k.astype(np.uint64) + np.uint64(degree)
+                  * np.uint64(pvm._SALT_SHARD))
+    idx = np.arange(size, dtype=np.uint64)
+    return (_mix32_np(k.astype(np.uint64) + idx) & 0xFFFF).astype(np.uint32)
+
+
+def deal_shares(secret, n_shares: int, threshold: int, *,
+                coeffs=None) -> np.ndarray:
+    """t-of-n Shamir shares of uint16 symbols over GF(2^16).
+
+    ``secret`` is any-shape uint16 symbols; share ``j`` (held at evaluation
+    point ``x = j + 1``) is the degree-(threshold-1) polynomial through the
+    secret at ``x = 0``. ``coeffs`` optionally pins the ``threshold - 1``
+    non-constant coefficient planes (each ``secret``-shaped); by default
+    they come from a fresh mix32 chain per call site via
+    :func:`deal_worker_shares`. Returns ``(n_shares, *secret.shape)``.
+    """
+    if threshold < 1:
+        raise ValueError(f"threshold must be >= 1, got {threshold}")
+    if n_shares < threshold:
+        raise ValueError(f"cannot deal {n_shares} shares at threshold "
+                         f"{threshold}")
+    secret = np.asarray(secret, np.uint32) & 0xFFFF
+    if coeffs is None:
+        coeffs = [_share_coeffs(0, 0, 0, d, secret.size).reshape(secret.shape)
+                  for d in range(1, threshold)]
+    out = np.zeros((n_shares,) + secret.shape, np.uint32)
+    for j in range(n_shares):
+        x = np.uint32(j + 1)
+        acc = secret.copy()
+        xp = np.uint32(1)
+        for c in coeffs:
+            xp = gf_mul(xp, x)
+            acc ^= gf_mul(np.asarray(c, np.uint32) & 0xFFFF, xp)
+        out[j] = acc
+    return out.astype(np.uint16)
+
+
+def reconstruct(shares, xs) -> np.ndarray:
+    """Lagrange-interpolate the secret at ``x = 0`` from ``(m, ...)``
+    shares held at points ``xs`` (1-based, distinct). Exact when ``m``
+    reaches the dealing threshold; with fewer shares the interpolation is
+    consistent with EVERY candidate secret (perfect secrecy — probe 6)."""
+    shares = np.asarray(shares, np.uint32) & 0xFFFF
+    xs = np.asarray(xs, np.uint32) & 0xFFFF
+    if len(set(int(x) for x in xs)) != xs.shape[0]:
+        raise ValueError("share points must be distinct")
+    out = np.zeros(shares.shape[1:], np.uint32)
+    for j in range(xs.shape[0]):
+        lj = np.uint32(1)
+        for i in range(xs.shape[0]):
+            if i == j:
+                continue
+            # l_j(0) = prod x_i / (x_i - x_j); subtraction is XOR in GF(2^k)
+            lj = gf_mul(lj, gf_mul(xs[i], gf_inv(xs[i] ^ xs[j])))
+        out ^= gf_mul(shares[j], lj)
+    return out.astype(np.uint16)
+
+
+# ---------------------------------------------------------------------------
+# Worker-level dealing/reconstruction (control plane, host-side)
+# ---------------------------------------------------------------------------
+
+def group_members(worker: int, n: int, group_size: int | None) -> np.ndarray:
+    """The sibling group of ``worker``: the contiguous ``group_size`` block
+    (a tree leaf group) or the whole cohort when ``group_size`` is None
+    (the flat wire — one cohort-wide group)."""
+    if group_size is None:
+        return np.arange(n, dtype=np.int32)
+    g = worker // group_size
+    lo = g * group_size
+    return np.arange(lo, min(lo + group_size, n), dtype=np.int32)
+
+
+def worker_pair_symbols(seed, worker: int, n: int, t, *,
+                        group_size: int | None = None,
+                        shard_idx: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """(members, symbols): the secret to share — ``worker``'s pair stream
+    keys toward its sibling group for round ``t``, each uint32 key split
+    into two GF(2^16) symbols (low half first) -> ``(s, 2)`` uint16."""
+    members = group_members(worker, n, group_size)
+    keys = np.asarray(pvm.pair_stream_keys(seed, n, t, shard_idx))
+    row = keys[worker][members]
+    sym = np.stack([row & 0xFFFF, row >> 16], axis=-1).astype(np.uint16)
+    return members, sym
+
+
+def deal_worker_shares(seed, worker: int, n: int, t, threshold: int, *,
+                       group_size: int | None = None, shard_idx: int = 0
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Deal ``worker``'s per-pair key secret to its sibling group.
+
+    Returns ``(members, xs, shares)``: ``shares[j]`` (shape ``(s, 2)``
+    uint16) is the share held by ``members[j]`` at point ``xs[j] = j + 1``.
+    Coefficients chain deterministically from (seed, worker, round, degree)
+    in the RECOVERY domain, so a re-dealt round reproduces its shares.
+    """
+    members, sym = worker_pair_symbols(seed, worker, n, t,
+                                       group_size=group_size,
+                                       shard_idx=shard_idx)
+    s = members.shape[0]
+    if threshold > s:
+        raise ValueError(f"threshold {threshold} exceeds sibling group "
+                         f"size {s}")
+    coeffs = [_share_coeffs(seed, worker, t, d, sym.size).reshape(sym.shape)
+              for d in range(1, threshold)]
+    shares = deal_shares(sym, s, threshold, coeffs=coeffs)
+    xs = np.arange(1, s + 1, dtype=np.uint16)
+    return members, xs, shares
+
+
+def recover_worker_keys(seed, worker: int, n: int, t, threshold: int, *,
+                        alive, group_size: int | None = None,
+                        shard_idx: int = 0
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Reconstruct a DEAD worker's within-group pair keys from >= threshold
+    surviving siblings' shares.
+
+    Raises :class:`~repro.core.privacy.LeakageError` when ``alive`` still
+    marks the target live (recovery must only ever target declared-dead
+    workers), and :class:`ValueError` when fewer than ``threshold``
+    siblings survive — the caller then degrades the whole group to an
+    exact-zero subtree instead (see :func:`effective_masks`).
+    Returns ``(members, keys)`` with ``keys`` the (s,) uint32 stream keys.
+    """
+    from repro.privacy import audit as pv_audit
+    pv_audit.check_recovery_target(worker, alive)
+    members, xs, shares = deal_worker_shares(seed, worker, n, t, threshold,
+                                             group_size=group_size,
+                                             shard_idx=shard_idx)
+    alive = np.asarray(alive)
+    holders = [j for j, m in enumerate(members)
+               if int(m) != int(worker) and alive[int(m)] > 0]
+    if len(holders) < threshold:
+        raise ValueError(
+            f"sibling group of worker {worker} fell below threshold: "
+            f"{len(holders)} surviving share-holders < {threshold}")
+    sel = np.asarray(holders[:threshold])
+    sym = reconstruct(shares[sel], xs[sel]).astype(np.uint32)
+    keys = (sym[..., 0] | (sym[..., 1] << 16)).astype(np.uint32)
+    return members, keys
+
+
+# ---------------------------------------------------------------------------
+# Traced repair helpers (data plane)
+# ---------------------------------------------------------------------------
+
+def effective_masks(pmask, alive, threshold: int, group_size: int | None,
+                    n: int):
+    """Post-fault activity split: ``(alive_eff, dead_eff)`` float32 (n,).
+
+    ``alive_eff`` marks workers that participated AND survived;
+    ``dead_eff`` marks post-commit deaths whose mask residue needs repair.
+    Both zero out every member of a NON-VIABLE sibling group — one that
+    suffered a death but kept fewer than ``threshold`` survivors, so the
+    keys cannot be reconstructed: the whole subtree degrades to exact zero
+    (the PR 7 dropped-subtree identity) and its deaths need no repair. A
+    group with no deaths is viable regardless of size — reconstruction
+    (and hence the t-of-n threshold) only matters when a death occurred.
+    """
+    av = jnp.asarray(alive) > 0
+    pm = (jnp.ones((n,), bool) if pmask is None
+          else jnp.asarray(pmask) > 0)
+    live = (pm & av).astype(jnp.int32)
+    dead = (pm & ~av).astype(jnp.int32)
+    g = n if group_size is None else group_size
+    ng = -(-n // g)
+    pad = ng * g - n
+    lp = jnp.pad(live, (0, pad)).reshape(ng, g)
+    dp = jnp.pad(dead, (0, pad)).reshape(ng, g)
+    viable = ((jnp.sum(dp, axis=1) == 0)
+              | (jnp.sum(lp, axis=1) >= threshold))
+    v = jnp.repeat(viable, g)[:n].astype(jnp.int32)
+    return ((live * v).astype(jnp.float32),
+            (dead * v).astype(jnp.float32))
+
+
+def repair_pair_index(n: int, sibling: int | None = None
+                      ) -> tuple[np.ndarray, np.ndarray]:
+    """Static endpoint indices of the pairs a repair can touch: all
+    unordered pairs (flat wire) or only within-sibling-group pairs (tree
+    leaves — ``n * (sibling - 1) / 2`` streams instead of ``n(n-1)/2``)."""
+    pairs = [(i, j) for i in range(n) for j in range(i + 1, n)
+             if sibling is None or i // sibling == j // sibling]
+    i_idx = np.asarray([i for i, _ in pairs], np.int32)
+    j_idx = np.asarray([j for _, j in pairs], np.int32)
+    return i_idx, j_idx
+
+
+def repair_coefficients(keys_mat, signs_mat, alive_eff, dead_eff,
+                        i_idx: np.ndarray, j_idx: np.ndarray):
+    """Per-pair (keys, coeff) of the repair term
+    ``sum_{k dead, l alive} sign(k, l) * m_kl``.
+
+    ``signs_mat`` is the SAME participation-scoped antisymmetric matrix the
+    uplink committed (flat or tree-leaf scoped); an unordered pair {i, j}
+    contributes via whichever endpoint died, so its flat coefficient is
+    ``C[i, j] + C[j, i]`` with ``C = signs * (dead x alive)`` — always in
+    {-1, 0, +1} (an endpoint cannot be both dead and alive, and a
+    both-dead pair's masks left with their rows). Returns ``((P,) uint32
+    keys, (P,) int32 coeffs)`` ready for the ``mask_repair_2d`` kernel.
+    """
+    a = (jnp.asarray(alive_eff) > 0).astype(jnp.int32)
+    d = (jnp.asarray(dead_eff) > 0).astype(jnp.int32)
+    c = jnp.asarray(signs_mat, jnp.int32) * (d[:, None] * a[None, :])
+    coeff_mat = c + c.T
+    keys = jnp.asarray(keys_mat, jnp.uint32)[i_idx, j_idx]
+    coeff = coeff_mat[i_idx, j_idx]
+    return keys, coeff
+
+
+def mask_repair_ref(words, pair_keys, pair_coeff, *, word_bits: int):
+    """Order-exact jnp oracle of the fused repair kernel: add
+    ``coeff[p] * stream(keys[p])`` mod 2**word_bits into a (rows, 512)
+    masked-word slab (kernel view; flat element index ``r * 512 + c``)."""
+    rows, wide = words.shape
+    size = rows * wide
+    h = pvm.index_hash(size, word_bits)
+    total = jnp.zeros((size,), jnp.int32)
+    for p in range(int(pair_keys.shape[0])):
+        vals = pvm.stream_values(pair_keys[p], h, word_bits)
+        total = total + pair_coeff[p] * vals.astype(jnp.int32)
+    total = total.reshape(rows, wide)
+    if word_bits == 16:
+        out = (words.astype(jnp.int32) + total) & jnp.int32(0xFFFF)
+        return out.astype(jnp.uint16)
+    acc = jax.lax.bitcast_convert_type(words, jnp.int32) + total
+    return jax.lax.bitcast_convert_type(acc, jnp.uint32)

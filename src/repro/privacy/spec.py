@@ -81,8 +81,14 @@ class PrivacySpec:
     dp_seed: int = 1               # randomized-response bit stream root
     delta: float = 1e-5            # advanced-composition delta
     enforce: bool = True           # audit runtimes' traced round programs
+    recovery_threshold: int | None = None  # Shamir t for dropout recovery
 
     def __post_init__(self):
+        if self.recovery_threshold is not None and self.recovery_threshold < 2:
+            raise ValueError(
+                f"recovery_threshold must be >= 2 (a 1-of-n dealing would "
+                f"hand every sibling the dead worker's seeds outright), "
+                f"got {self.recovery_threshold}")
         if self.modulus_bits not in (16, 32):
             raise ValueError(
                 f"modulus_bits must be 16 or 32 (the wire word is one "

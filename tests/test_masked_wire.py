@@ -348,7 +348,9 @@ def test_masked_kinds_registered():
         "uplink_masked": "uplink_stacked",
         "master_masked": "master",
         "partial_sum_masked16": "partial_sum_masked",
-        "partial_sum_masked": "partial_sum"}
+        "partial_sum_masked": "partial_sum",
+        "mask_repair16": "mask_repair",
+        "mask_repair": "uplink"}
 
 
 def test_lookup_falls_back_to_unmasked_plan():
