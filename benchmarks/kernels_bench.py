@@ -837,4 +837,26 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI; writes BENCH_kernels_smoke.json "
                          "(artifact) instead of BENCH_kernels.json")
-    run(smoke=ap.parse_args().smoke)
+    ap.add_argument("--profile", metavar="DIR", default=None,
+                    help="capture a jax.profiler trace of the whole bench "
+                         "under DIR (kernel launches are named after their "
+                         "tuner keys via telemetry.profile.kernel_scope)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="stream every autotune sweep's timed plans to a "
+                         "telemetry JSONL trace at PATH (one plan event per "
+                         "candidate — BENCH_kernels.json provenance)")
+    cli = ap.parse_args()
+    from contextlib import ExitStack
+
+    from repro.kernels import tune as _tune
+    from repro.telemetry import profile as _tprof
+    from repro.telemetry import trace as _tmt
+    with ExitStack() as stack:
+        if cli.trace:
+            writer = stack.enter_context(
+                _tmt.TraceWriter(cli.trace, source="kernels_bench"))
+            _tune.set_trace_writer(_tmt.plan_emitter(writer.emit))
+            stack.callback(_tune.set_trace_writer, None)
+        if cli.profile:
+            stack.enter_context(_tprof.profile_session(cli.profile))
+        run(smoke=cli.smoke)

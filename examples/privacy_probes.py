@@ -20,7 +20,12 @@ Probes the ``repro.privacy`` subsystem end-to-end:
   6. dropout recovery: a dead worker's mask seeds reconstruct exactly
      from t Shamir share-holders, while the server colluding with t-1
      holders recovers 0% of a LIVE worker's mask words — and the audit
-     layer refuses live-target reconstruction outright.
+     layer refuses live-target reconstruction outright;
+  7. the telemetry boundary: the observability layer's round records ride
+     the scan carry off-device, so the §4.2 audit also scans the exported
+     info/trace payloads — the real telemetry (counts + public scalars)
+     passes, while a round program smuggling a per-worker float buffer
+     into its trace record is refused outright.
 
 Run:  PYTHONPATH=src python examples/privacy_probes.py
 """
@@ -239,6 +244,61 @@ def probe_dropout_recovery():
           f"recovered mask stream exact: {exact}\n")
 
 
+def probe_telemetry_trace():
+    """Probe 7: telemetry rides the carry; the trace leaks no payloads.
+
+    The observability layer threads a ``RoundTelemetry`` record through
+    every ``round_step`` — device-resident counts and public scalars,
+    fetched once post-run and exported as a JSONL trace. The audit's
+    masked policy shape-evaluates the round program and scans its
+    dict-carried outputs (exactly what a driver exports off-device): the
+    real telemetry record passes, and a round program that smuggles a
+    per-worker float buffer into its trace record raises LeakageError."""
+    from repro.core import flat as fl
+    from repro.privacy import check_round_program
+
+    n = 4
+    k = jax.random.PRNGKey(11)
+    tree = {"w": jax.random.normal(k, (41, 23)),
+            "b": jax.random.normal(jax.random.fold_in(k, 1), (23,))}
+    layout = fl.layout_of(tree)
+    spec = PrivacySpec()
+    state = rd.init_round_state(tree, n, layout, privacy=spec)
+    wire = rd.WirePath(rd.WireConfig(), interpret=True, privacy=spec)
+    sizes = jnp.linspace(20.0, 80.0, n)
+    bufs = jax.ShapeDtypeStruct((n,) + state.buf_p1.shape, jnp.float32)
+    costs = jax.ShapeDtypeStruct((n,), jnp.float32)
+
+    def step(s, b, c):
+        return wire.round_step(s, b, c, sizes)
+
+    report = check_round_program(step, state, bufs, costs,
+                                 n_workers=n, masked=True)
+    rec = jax.eval_shape(step, state, bufs, costs)[2]["telemetry"]
+    print("probe 7 — telemetry boundary: the trace leaks nothing")
+    print(f"  telemetry-carrying round program passes the masked audit "
+          f"({report['n_launches']} launches, counts + public scalars "
+          f"only): True")
+    print(f"  per-round record fields exported off-device: "
+          f"{sorted(rec._fields)}")
+
+    def leaky(s, b, c):
+        new_s, new_buf, info = step(s, b, c)
+        info = dict(info)
+        # a (N, rows*128) float export — per-worker parameter payload
+        info["trace_payload"] = b.reshape(n, -1)
+        return new_s, new_buf, info
+
+    try:
+        check_round_program(leaky, state, bufs, costs,
+                            n_workers=n, masked=True)
+        refused = False
+    except LeakageError:
+        refused = True
+    print(f"  a per-worker float payload smuggled into the trace record "
+          f"is refused (LeakageError): {refused}\n")
+
+
 def main():
     probe_mask_removal(16)
     probe_mask_removal(32)
@@ -246,6 +306,7 @@ def main():
     probe_randomized_response()
     probe_accountant_and_enforcement()
     probe_dropout_recovery()
+    probe_telemetry_trace()
 
 
 if __name__ == "__main__":

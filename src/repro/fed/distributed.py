@@ -52,6 +52,7 @@ from repro.privacy import dp as pdp
 from repro.privacy import masking as pvm
 from repro.privacy import recovery as pvr
 from repro.privacy.spec import PrivacySpec
+from repro.telemetry import record as tmr
 from repro.utils import PyTree
 
 from repro.sharding.specs import param_specs, wire_specs
@@ -378,7 +379,11 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
              state: dict, mask: jax.Array | None = None
              ) -> tuple[PyTree, dict]:
         t = state["round"]
-        av = None if fault_plan is None else fault_plan.alive(t, F)
+        codes = dead_eff = None
+        av = None
+        if fault_plan is not None:
+            codes = fault_plan.codes(t, F)
+            av = (codes == tmr.FAULT_NONE).astype(jnp.float32)
         if av is None:
             sel_mask = mask
         elif masked_wire:
@@ -386,7 +391,7 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
             # exact-zero subtree — exclude them from pilot selection and
             # the cost carry along with the dead (the threshold and fault
             # set are public, so every instance computes the same split).
-            sel_mask, _ = pvr.effective_masks(
+            sel_mask, dead_eff = pvr.effective_masks(
                 mask, av, privacy.recovery_threshold,
                 tree.fanout if tree is not None else None, F)
         elif mask is None:
@@ -489,7 +494,16 @@ def build_fed_sync(model: Model, mesh: Mesh, fed_axis: str = "data",
             "prev_costs": costs_eff,
             "round": t + 1,
         }
-        aux = {"k_star": k_star, "goodness": scores}
+        # The same device-resident round record the simulator drivers
+        # emit — the mesh runtime's per-round observability rides aux (all
+        # scalars; fetch-when-you-want, nothing syncs here).
+        rec = tmr.build_round_record(
+            t=t, k_star=k_star, n=F, costs=costs, sizes=sizes, mask=mask,
+            codes=codes, sel_mask=sel_mask, dead_eff=dead_eff,
+            modulus_bits=privacy.modulus_bits if masked_wire else 0,
+            fanout=tree.fanout if tree is not None else 0,
+            levels=tree.n_levels(F) if tree is not None else 0)
+        aux = {"k_star": k_star, "goodness": scores, "telemetry": rec}
         return new_params, {"state": new_state, **aux}
 
     return sync

@@ -57,6 +57,7 @@ from repro.privacy import masking as pvm
 from repro.privacy import recovery as pvr
 from repro.privacy.accountant import PrivacyAccountant
 from repro.privacy.spec import PrivacySpec
+from repro.telemetry import record as tmr
 from repro.utils import PyTree
 
 #: The plain (no-privacy) tree rides the integer wire so that float
@@ -95,17 +96,21 @@ class RoundState(NamedTuple):
     prev_costs: jax.Array  # (N,) — C_k^{t-1}, +inf before round 1
     round: jax.Array       # scalar int32, 1-based round about to run
     accountant: Any = None  # PrivacyAccountant when the DP wire is on
+    telemetry: Any = None   # TelemetryCarry — cumulative round counters
 
 
 def init_round_state(init_params: PyTree, n_workers: int,
                      layout: fl.FlatLayout | None = None, *,
-                     privacy: PrivacySpec | None = None) -> RoundState:
+                     privacy: PrivacySpec | None = None,
+                     telemetry: bool = True) -> RoundState:
     """Fresh :class:`RoundState` at round 1 (P^{t-2} = 0, costs = +inf).
 
     With a DP-enabled ``privacy`` spec the state carries a zeroed
     :class:`~repro.privacy.accountant.PrivacyAccountant` — four device
     scalars that ride the scan carry and the checkpoint alongside the
-    history buffers.
+    history buffers. ``telemetry`` (default on) seeds a zeroed
+    :class:`~repro.telemetry.record.TelemetryCarry` the same way, so the
+    cumulative round counters checkpoint and resume with the federation.
     """
     layout = layout or fl.layout_of(init_params)
     buf_p1 = fl.flatten_tree(init_params, layout)
@@ -116,6 +121,7 @@ def init_round_state(init_params: PyTree, n_workers: int,
         round=jnp.asarray(1, jnp.int32),
         accountant=(PrivacyAccountant.zero()
                     if privacy is not None and privacy.dp_on else None),
+        telemetry=tmr.TelemetryCarry.zero() if telemetry else None,
     )
 
 
@@ -601,10 +607,12 @@ class WirePath:
         t = state.round
         sizes = jnp.asarray(sizes, jnp.float32)
         costs = jnp.asarray(costs, jnp.float32)
-        av = None
+        n = sizes.shape[0]
+        av = codes = dead_eff = None
         masked_wire = self.privacy is not None and self.privacy.active
         if self.faults is not None and self.faults.active:
-            av = self.faults.alive(t, sizes.shape[0])
+            codes = self.faults.codes(t, n)
+            av = (codes == tmr.FAULT_NONE).astype(jnp.float32)
         if av is None:
             sel_mask = mask
         elif masked_wire:
@@ -618,10 +626,10 @@ class WirePath:
                     "fault injection on the privacy wire requires "
                     "privacy.recovery_threshold (the Shamir t of the "
                     "dropout-recovery dealing) to be set")
-            sel_mask, _ = pvr.effective_masks(
+            sel_mask, dead_eff = pvr.effective_masks(
                 mask, av, self.privacy.recovery_threshold,
                 self.tree.fanout if self.tree is not None else None,
-                sizes.shape[0])
+                n)
         elif mask is None:
             sel_mask = av
         else:
@@ -649,10 +657,24 @@ class WirePath:
         if (accountant is not None and self.privacy is not None
                 and self.privacy.dp_on):
             accountant = accountant.add(self.privacy.eps_round)
+        # The round's device-resident telemetry record: jnp reductions over
+        # operands computed above — no extra launches, no host syncs. The
+        # record rides info (stacked by the scan for the one post-run
+        # fetch); the cumulative carry rides the state like the accountant.
+        rec = tmr.build_round_record(
+            t=t, k_star=k_star, n=n, costs=costs, sizes=sizes, mask=mask,
+            codes=codes, sel_mask=sel_mask, dead_eff=dead_eff,
+            modulus_bits=self.privacy.modulus_bits if masked_wire else 0,
+            fanout=self.tree.fanout if self.tree is not None else 0,
+            levels=(self.tree.n_levels(n) if self.tree is not None else 0))
+        telemetry = state.telemetry
+        if telemetry is not None:
+            telemetry = telemetry.add(rec)
         new_state = RoundState(buf_p1=new_buf, buf_p2=state.buf_p1,
                                prev_costs=costs_eff, round=t + 1,
-                               accountant=accountant)
-        info = {"k_star": k_star, "goodness": scores, "costs": costs_eff}
+                               accountant=accountant, telemetry=telemetry)
+        info = {"k_star": k_star, "goodness": scores, "costs": costs_eff,
+                "telemetry": rec}
         if mask is not None:
             info["mask"] = jnp.asarray(mask, jnp.float32)
         if av is not None:

@@ -47,6 +47,7 @@ from repro.fed import faults as ft
 from repro.fed import rounds as rd
 from repro.fed.worker import Worker
 from repro.privacy import audit as pv_audit
+from repro.telemetry import trace as tmt
 from repro.utils import PyTree
 
 
@@ -56,12 +57,30 @@ class SimResult:
     params: PyTree
     costs: list = field(default_factory=list)          # per-round mean cost
     pilot_history: list = field(default_factory=list)  # FedPC only
-    bytes_per_round: list = field(default_factory=list)
     eval_history: list = field(default_factory=list)
     round_state: Optional[rd.RoundState] = None        # FedPC resume handle
-    # Dropout-recovery control-plane bytes (share dealing + reconstruction),
-    # accounted SEPARATELY from the data-plane uplink bytes above.
-    recovery_bytes_per_round: list = field(default_factory=list)
+    # The FedPC drivers' byte accounting lives in the telemetry rollup (the
+    # device-recorded counts pushed through core.protocol and cross-checked
+    # in build_trace); bytes_per_round / recovery_bytes_per_round are thin
+    # views over it. The baseline drivers (fedavg/phong/centralized) have
+    # no traced round program and append into the backing lists directly.
+    telemetry: Optional[tmt.TraceSummary] = None
+    _bytes: list = field(default_factory=list)
+    _recovery_bytes: list = field(default_factory=list)
+
+    @property
+    def bytes_per_round(self) -> list:
+        if self.telemetry is not None:
+            return self.telemetry.bytes_per_round
+        return self._bytes
+
+    @property
+    def recovery_bytes_per_round(self) -> list:
+        # Dropout-recovery control-plane bytes (share dealing +
+        # reconstruction), accounted SEPARATELY from the data-plane bytes.
+        if self.telemetry is not None:
+            return self.telemetry.recovery_bytes_per_round
+        return self._recovery_bytes
 
     @property
     def total_bytes(self) -> float:
@@ -244,9 +263,19 @@ class FedSimulator:
                       layout: fl.FlatLayout, t0: int,
                       k_stars: list, raw_costs: list,
                       masks: np.ndarray | None, model_bytes: int,
-                      ledger_done: bool) -> SimResult:
-        """The ONE post-run device→host fetch: pilot history + costs come
-        back together; ledger, byte accounting and summaries are host work."""
+                      ledger_done: bool, records=None,
+                      driver: str = "run_fedpc",
+                      check_costs: bool = True) -> SimResult:
+        """The ONE post-run device→host fetch: pilot history, costs and the
+        stacked telemetry records come back together; ledger, byte
+        accounting and trace assembly are host work.
+
+        The host recomputes every round's participation/fault/byte model
+        from its own schedules (the legacy ledger math) and
+        ``telemetry.trace.build_trace`` cross-checks the device-recorded
+        counts and the derived bytes against it — any divergence raises
+        ``TelemetryMismatch`` instead of returning a wrong ledger.
+        """
         pilots = np.asarray(jnp.stack(k_stars))
         costs_mat = np.asarray(jnp.stack(raw_costs))        # (R, N)
         if not ledger_done:
@@ -254,6 +283,7 @@ class FedSimulator:
         spec = self.fed_cfg.privacy
         masked_wire = spec is not None and spec.active
         codes_mat = self._fault_codes(t0, len(pilots))
+        host_rounds: list[dict] = []
         for i in range(len(pilots)):
             row = np.ones(self.n) if masks is None else masks[i]
             # The reported round cost averages only workers whose report
@@ -262,11 +292,14 @@ class FedSimulator:
             # prev-round values for the excluded, the Python driver their
             # never-delivered local measurements — both are masked out
             # here, keeping the drivers bitwise.)
+            n_recoverable = 0
             if codes_mat is None:
                 eff = row
             elif masked_wire:
-                live_eff, _, _ = self._fault_split(row, codes_mat[i])
+                live_eff, _, recoverable = self._fault_split(
+                    row, codes_mat[i])
                 eff = row * live_eff
+                n_recoverable = int(recoverable.sum())
             else:
                 eff = row * (codes_mat[i] == ft.FAULT_NONE)
             if np.sum(eff) == 0:   # every report lost: cost track carries
@@ -308,8 +341,34 @@ class FedSimulator:
                             int(recoverable.sum()),
                             spec.recovery_threshold, g,
                             n_workers=self.n))
-            res.bytes_per_round.append(wire_bytes)
-            res.recovery_bytes_per_round.append(rec_bytes)
+            host_rounds.append({
+                "row": row > 0,
+                "codes": None if codes_mat is None else codes_mat[i],
+                "used": np.asarray(eff) > 0,
+                "n_recoverable": n_recoverable,
+                "pilot": int(pilots[i]), "cost": res.costs[-1],
+                "wire_bytes": wire_bytes, "recovery_bytes": rec_bytes})
+        if records is not None:
+            tree = self.fed_cfg.tree
+            meta = tmt.trace_meta(
+                source="fed_simulator", algorithm="fedpc", driver=driver,
+                n_workers=self.n, t0=t0, rounds=len(pilots),
+                model_bytes=model_bytes,
+                wire="masked" if masked_wire else "plain",
+                masking=bool(spec is not None and spec.masking_on),
+                modulus_bits=spec.modulus_bits if masked_wire else 0,
+                fanout=tree.fanout if tree is not None else 0,
+                levels=(tree.levels or 0) if tree is not None else 0,
+                recovery_threshold=((spec.recovery_threshold or 0)
+                                    if spec is not None else 0),
+                faults_active=codes_mat is not None)
+            recs_host = jax.tree_util.tree_map(np.asarray, records)
+            res.telemetry = tmt.build_trace(meta, recs_host, host_rounds,
+                                            check_costs=check_costs)
+        else:       # telemetry disabled on the carry: legacy byte lists
+            for h in host_rounds:
+                res._bytes.append(h["wire_bytes"])
+                res._recovery_bytes.append(h["recovery_bytes"])
         res.params = fl.unflatten_tree(state.buf_p1, layout)
         res.round_state = state
         return res
@@ -363,6 +422,7 @@ class FedSimulator:
                           if self.evade_streak else [np.inf] * self.n)
         k_stars: list = []
         raw_costs: list = []
+        recs: list = []
 
         for i in range(rounds):
             t = t0 + i
@@ -398,6 +458,7 @@ class FedSimulator:
             params = fl.unflatten_tree(new_buf, layout)
             k_stars.append(info["k_star"])
             raw_costs.append(jnp.stack(costs))   # reported costs, un-evaded
+            recs.append(info["telemetry"])       # device scalars, no sync
             prev_costs_rep = rep_costs
 
             if self.evade_streak:     # defence needs the ledger live
@@ -406,9 +467,17 @@ class FedSimulator:
             if eval_every and self.eval_fn and (t - t0 + 1) % eval_every == 0:
                 res.eval_history.append((t, self.eval_fn(params)))
 
+        # Stack the per-round records like the scan would — the trace is
+        # driver-invariant (pinned bitwise by tests/test_telemetry.py).
+        records = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *recs)
+        # With the evasion defence the device averaged the REPORTED costs
+        # (what the master acted on) while res.costs tracks the measured
+        # ones — the cost cross-check is meaningless there by design.
         return self._finish_fedpc(res, state, layout, t0, k_stars,
                                   raw_costs, masks, model_bytes,
-                                  ledger_done=bool(self.evade_streak))
+                                  ledger_done=bool(self.evade_streak),
+                                  records=records, driver="run_fedpc",
+                                  check_costs=not bool(self.evade_streak))
 
     # ------------------------------------------------------------------
     # FedPC — scan driver: ALL rounds inside one jitted lax.scan
@@ -536,7 +605,9 @@ class FedSimulator:
         raw_costs = list(infos["costs"])
         return self._finish_fedpc(res, state, layout, t0, k_stars,
                                   raw_costs, masks, model_bytes,
-                                  ledger_done=False)
+                                  ledger_done=False,
+                                  records=infos["telemetry"],
+                                  driver="run_fedpc_scan")
 
     # ------------------------------------------------------------------
     # FedAvg baseline

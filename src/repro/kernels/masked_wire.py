@@ -54,6 +54,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.fused_wire import _codes_any
 from repro.privacy import masking as pvm
+from repro.telemetry import profile as tprof
 from repro.privacy.dp import rr_fields
 
 LANES = 128
@@ -319,6 +320,7 @@ def ternary_pack_masked_2d(q, p1, p2, t, beta, alpha1, wq, pair_keys,
     n, rows, _ = q.shape
     cohort = pair_keys.shape[1]
     out_dtype = jnp.uint16 if word_bits == 16 else jnp.uint32
+    kind = "uplink_masked16" if word_bits == 16 else "uplink_masked"
     betas = jnp.broadcast_to(
         jnp.asarray(beta, jnp.float32).reshape(-1, 1), (n, 1))
     wq2 = jnp.asarray(wq, jnp.uint32).reshape(n, 1)
@@ -327,6 +329,18 @@ def ternary_pack_masked_2d(q, p1, p2, t, beta, alpha1, wq, pair_keys,
     keys = jnp.asarray(pair_keys, jnp.uint32)
     signs = jnp.asarray(pair_signs, jnp.int32)
     rrk = jnp.asarray(rr_keys, jnp.uint32).reshape(n)
+    with tprof.kernel_scope(kind, rows, n, interpret):
+        return _masked_pack_call(
+            q, p1, p2, betas, wq2, keys, signs, rrk, scal, n=n, rows=rows,
+            cohort=cohort, word_bits=word_bits, use_masks=use_masks,
+            rr_threshold=rr_threshold, out_dtype=out_dtype,
+            interpret=interpret, block_rows=block_rows,
+            block_workers=block_workers)
+
+
+def _masked_pack_call(q, p1, p2, betas, wq2, keys, signs, rrk, scal, *, n,
+                      rows, cohort, word_bits, use_masks, rr_threshold,
+                      out_dtype, interpret, block_rows, block_workers):
     wide = LANES * PACK
     if block_rows >= rows and block_workers >= n:
         return pl.pallas_call(
@@ -392,39 +406,41 @@ def masked_master_update_2d(q_pilot, masked, sum_wq, p1, p2, t, alpha0,
     if word_bits == 16:
         sumw = (sumw & jnp.uint32(0xFFFF)).astype(jnp.uint16)
     sumw = sumw.reshape(1)
-    if block_rows >= rows and block_workers >= n:
-        return pl.pallas_call(
-            functools.partial(_masked_master_oneshot_kernel, n_workers=n,
+    kind = "master_masked16" if word_bits == 16 else "master_masked"
+    with tprof.kernel_scope(kind, rows, n, interpret):
+        if block_rows >= rows and block_workers >= n:
+            return pl.pallas_call(
+                functools.partial(_masked_master_oneshot_kernel, n_workers=n,
+                                  word_bits=word_bits),
+                in_specs=[pl.BlockSpec(q_pilot.shape, None),
+                          pl.BlockSpec(masked.shape, None),
+                          pl.BlockSpec(p1.shape, None),
+                          pl.BlockSpec(p2.shape, None),
+                          pl.BlockSpec(memory_space=pl.ANY),
+                          pl.BlockSpec(memory_space=pl.ANY)],
+                out_specs=pl.BlockSpec(q_pilot.shape, None),
+                out_shape=jax.ShapeDtypeStruct(q_pilot.shape, q_pilot.dtype),
+                interpret=interpret,
+            )(q_pilot, masked, p1, p2, scal, sumw)
+        grid = (rows // block_rows, n // block_workers)
+        spec_f = pl.BlockSpec((block_rows, LANES * PACK), lambda i, k: (i, 0))
+        spec_y = pl.BlockSpec((block_workers, block_rows, LANES * PACK),
+                              lambda i, k: (k, i, 0))
+        out, _acc = pl.pallas_call(
+            functools.partial(_masked_master_kernel,
+                              block_workers=block_workers,
+                              last_k=n // block_workers - 1,
                               word_bits=word_bits),
-            in_specs=[pl.BlockSpec(q_pilot.shape, None),
-                      pl.BlockSpec(masked.shape, None),
-                      pl.BlockSpec(p1.shape, None),
-                      pl.BlockSpec(p2.shape, None),
+            grid=grid,
+            in_specs=[spec_f, spec_y, spec_f, spec_f,
                       pl.BlockSpec(memory_space=pl.ANY),
                       pl.BlockSpec(memory_space=pl.ANY)],
-            out_specs=pl.BlockSpec(q_pilot.shape, None),
-            out_shape=jax.ShapeDtypeStruct(q_pilot.shape, q_pilot.dtype),
+            out_specs=[spec_f, spec_f],
+            out_shape=[jax.ShapeDtypeStruct(q_pilot.shape, q_pilot.dtype),
+                       jax.ShapeDtypeStruct(q_pilot.shape, masked.dtype)],
             interpret=interpret,
         )(q_pilot, masked, p1, p2, scal, sumw)
-    grid = (rows // block_rows, n // block_workers)
-    spec_f = pl.BlockSpec((block_rows, LANES * PACK), lambda i, k: (i, 0))
-    spec_y = pl.BlockSpec((block_workers, block_rows, LANES * PACK),
-                          lambda i, k: (k, i, 0))
-    out, _acc = pl.pallas_call(
-        functools.partial(_masked_master_kernel,
-                          block_workers=block_workers,
-                          last_k=n // block_workers - 1,
-                          word_bits=word_bits),
-        grid=grid,
-        in_specs=[spec_f, spec_y, spec_f, spec_f,
-                  pl.BlockSpec(memory_space=pl.ANY),
-                  pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=[spec_f, spec_f],
-        out_shape=[jax.ShapeDtypeStruct(q_pilot.shape, q_pilot.dtype),
-                   jax.ShapeDtypeStruct(q_pilot.shape, masked.dtype)],
-        interpret=interpret,
-    )(q_pilot, masked, p1, p2, scal, sumw)
-    return out
+        return out
 
 
 def _mask_repair_kernel(y_ref, keys_ref, coeff_ref, out_ref, *,
@@ -507,24 +523,26 @@ def mask_repair_2d(y, pair_keys, pair_coeff, *, interpret: bool = True,
     coeff = jnp.asarray(pair_coeff, jnp.int32)
     kern = functools.partial(_mask_repair_kernel, n_pairs=n_pairs,
                              word_bits=word_bits)
-    if block_rows >= rows:
+    kind = "mask_repair16" if word_bits == 16 else "mask_repair"
+    with tprof.kernel_scope(kind, rows, 1, interpret):
+        if block_rows >= rows:
+            return pl.pallas_call(
+                functools.partial(kern, gridded=False),
+                in_specs=[pl.BlockSpec(y.shape, None),
+                          pl.BlockSpec(memory_space=pl.ANY),
+                          pl.BlockSpec(memory_space=pl.ANY)],
+                out_specs=pl.BlockSpec(y.shape, None),
+                out_shape=jax.ShapeDtypeStruct(y.shape, y.dtype),
+                interpret=interpret,
+            )(y, keys, coeff)
+        spec = pl.BlockSpec((block_rows, wide), lambda i: (i, 0))
         return pl.pallas_call(
-            functools.partial(kern, gridded=False),
-            in_specs=[pl.BlockSpec(y.shape, None),
+            functools.partial(kern, gridded=True),
+            grid=(rows // block_rows,),
+            in_specs=[spec,
                       pl.BlockSpec(memory_space=pl.ANY),
                       pl.BlockSpec(memory_space=pl.ANY)],
-            out_specs=pl.BlockSpec(y.shape, None),
+            out_specs=spec,
             out_shape=jax.ShapeDtypeStruct(y.shape, y.dtype),
             interpret=interpret,
         )(y, keys, coeff)
-    spec = pl.BlockSpec((block_rows, wide), lambda i: (i, 0))
-    return pl.pallas_call(
-        functools.partial(kern, gridded=True),
-        grid=(rows // block_rows,),
-        in_specs=[spec,
-                  pl.BlockSpec(memory_space=pl.ANY),
-                  pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=spec,
-        out_shape=jax.ShapeDtypeStruct(y.shape, y.dtype),
-        interpret=interpret,
-    )(y, keys, coeff)

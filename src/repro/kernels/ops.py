@@ -19,6 +19,7 @@ from repro.kernels import master_update as mu
 from repro.kernels import partial_sum as ps
 from repro.kernels import ternary_encode as te
 from repro.kernels import tune
+from repro.telemetry import profile as tprof
 from repro.utils import round_up
 
 LANES = 128
@@ -145,14 +146,15 @@ def flat_ternary_pack(buf_q, buf_p1, buf_p2, *, t: int, beta: float,
     q4 = buf_q.reshape(r4, LANES * fw.PACK)
     br = _block_rows_for(
         r4, block_rows or tune.lookup("uplink", r4, interpret=interpret)[0])
-    if t <= 1:
-        return fw.ternary_pack_round1_2d(
-            q4, buf_p1.reshape(r4, LANES * fw.PACK), alpha1,
+    with tprof.kernel_scope("uplink", r4, 1, interpret):
+        if t <= 1:
+            return fw.ternary_pack_round1_2d(
+                q4, buf_p1.reshape(r4, LANES * fw.PACK), alpha1,
+                interpret=interpret, block_rows=br)
+        return fw.ternary_pack_2d(
+            q4, buf_p1.reshape(r4, LANES * fw.PACK),
+            buf_p2.reshape(r4, LANES * fw.PACK), beta,
             interpret=interpret, block_rows=br)
-    return fw.ternary_pack_2d(
-        q4, buf_p1.reshape(r4, LANES * fw.PACK),
-        buf_p2.reshape(r4, LANES * fw.PACK), beta,
-        interpret=interpret, block_rows=br)
 
 
 def flat_ternary_pack_traced(buf_q, buf_p1, buf_p2, *, t, beta,
@@ -172,10 +174,11 @@ def flat_ternary_pack_traced(buf_q, buf_p1, buf_p2, *, t, beta,
     wide = LANES * fw.PACK
     br = _block_rows_for(
         r4, block_rows or tune.lookup("uplink", r4, interpret=interpret)[0])
-    return fw.ternary_pack_any_2d(
-        buf_q.reshape(r4, wide), buf_p1.reshape(r4, wide),
-        buf_p2.reshape(r4, wide), t, beta, alpha1,
-        interpret=interpret, block_rows=br)
+    with tprof.kernel_scope("uplink", r4, 1, interpret):
+        return fw.ternary_pack_any_2d(
+            buf_q.reshape(r4, wide), buf_p1.reshape(r4, wide),
+            buf_p2.reshape(r4, wide), t, beta, alpha1,
+            interpret=interpret, block_rows=br)
 
 
 def flat_ternary_pack_stacked(bufs_q, buf_p1, buf_p2, *, t, beta,
@@ -198,10 +201,11 @@ def flat_ternary_pack_stacked(bufs_q, buf_p1, buf_p2, *, t, beta,
     wide = LANES * fw.PACK
     br, bw = _stacked_plan("uplink_stacked", r4, n, block_rows,
                            block_workers, interpret)
-    return fw.ternary_pack_stacked_2d(
-        bufs_q.reshape(n, r4, wide), buf_p1.reshape(r4, wide),
-        buf_p2.reshape(r4, wide), t, beta, alpha1,
-        interpret=interpret, block_rows=br, block_workers=bw)
+    with tprof.kernel_scope("uplink_stacked", r4, n, interpret):
+        return fw.ternary_pack_stacked_2d(
+            bufs_q.reshape(n, r4, wide), buf_p1.reshape(r4, wide),
+            buf_p2.reshape(r4, wide), t, beta, alpha1,
+            interpret=interpret, block_rows=br, block_workers=bw)
 
 
 def flat_master_update(buf_q_pilot, packed_stacked, w, buf_p1, buf_p2, *,
@@ -228,11 +232,12 @@ def flat_master_update(buf_q_pilot, packed_stacked, w, buf_p1, buf_p2, *,
     wide = LANES * fw.PACK
     br, bw = _stacked_plan("master", r4, n, block_rows, block_workers,
                            interpret)
-    out = fw.packed_master_update_2d(
-        buf_q_pilot.reshape(r4, wide), packed_stacked,
-        w.astype(jnp.float32), buf_p1.reshape(r4, wide),
-        buf_p2.reshape(r4, wide), t, alpha0,
-        interpret=interpret, block_rows=br, block_workers=bw)
+    with tprof.kernel_scope("master", r4, n, interpret):
+        out = fw.packed_master_update_2d(
+            buf_q_pilot.reshape(r4, wide), packed_stacked,
+            w.astype(jnp.float32), buf_p1.reshape(r4, wide),
+            buf_p2.reshape(r4, wide), t, alpha0,
+            interpret=interpret, block_rows=br, block_workers=bw)
     return out.reshape(rows, LANES)
 
 
@@ -267,12 +272,13 @@ def flat_ternary_pack_masked(bufs_q, buf_p1, buf_p2, *, t, beta,
     kind = "uplink_masked16" if word_bits == 16 else "uplink_masked"
     br, bw = _stacked_plan(kind, r4, n, block_rows, block_workers,
                            interpret)
-    return mw.ternary_pack_masked_2d(
-        bufs_q.reshape(n, r4, wide), buf_p1.reshape(r4, wide),
-        buf_p2.reshape(r4, wide), t, beta, alpha1, wq, pair_keys,
-        pair_signs, rr_keys, rr_threshold=int(rr_threshold),
-        word_bits=word_bits, use_masks=use_masks, interpret=interpret,
-        block_rows=br, block_workers=bw)
+    with tprof.kernel_scope(kind, r4, n, interpret):
+        return mw.ternary_pack_masked_2d(
+            bufs_q.reshape(n, r4, wide), buf_p1.reshape(r4, wide),
+            buf_p2.reshape(r4, wide), t, beta, alpha1, wq, pair_keys,
+            pair_signs, rr_keys, rr_threshold=int(rr_threshold),
+            word_bits=word_bits, use_masks=use_masks, interpret=interpret,
+            block_rows=br, block_workers=bw)
 
 
 def flat_masked_master_update(buf_q_pilot, masked, sum_wq, buf_p1, buf_p2,
@@ -299,10 +305,12 @@ def flat_masked_master_update(buf_q_pilot, masked, sum_wq, buf_p1, buf_p2,
             else "master_masked")
     br, bw = _stacked_plan(kind, r4, n, block_rows, block_workers,
                            interpret)
-    out = mw.masked_master_update_2d(
-        buf_q_pilot.reshape(r4, wide), masked, sum_wq,
-        buf_p1.reshape(r4, wide), buf_p2.reshape(r4, wide), t, alpha0,
-        scale_mult, interpret=interpret, block_rows=br, block_workers=bw)
+    with tprof.kernel_scope(kind, r4, n, interpret):
+        out = mw.masked_master_update_2d(
+            buf_q_pilot.reshape(r4, wide), masked, sum_wq,
+            buf_p1.reshape(r4, wide), buf_p2.reshape(r4, wide), t, alpha0,
+            scale_mult, interpret=interpret, block_rows=br,
+            block_workers=bw)
     return out.reshape(rows, LANES)
 
 
@@ -326,8 +334,9 @@ def flat_mask_repair(words, pair_keys, pair_coeff, *,
     kind = "mask_repair16" if words.dtype == jnp.uint16 else "mask_repair"
     tuned_br, _ = tune.lookup(kind, r4, 1, interpret=interpret)
     br = _block_rows_for(r4, block_rows or tuned_br)
-    return mw.mask_repair_2d(words, pair_keys, pair_coeff,
-                             interpret=interpret, block_rows=br)
+    with tprof.kernel_scope(kind, r4, 1, interpret):
+        return mw.mask_repair_2d(words, pair_keys, pair_coeff,
+                                 interpret=interpret, block_rows=br)
 
 
 def flat_partial_sum(packed, wq, *, fanout: int, word_bits: int = 32,
@@ -358,9 +367,10 @@ def flat_partial_sum(packed, wq, *, fanout: int, word_bits: int = 32,
     if pad:
         packed = jnp.pad(packed, ((0, pad), (0, 0), (0, 0)))
         wq = jnp.pad(wq, (0, pad))
-    return ps.partial_sum_2d(packed, wq, fanout=fanout,
-                             word_bits=word_bits, interpret=interpret,
-                             block_rows=br, block_groups=bg)
+    with tprof.kernel_scope("partial_sum", r4, fanout, interpret):
+        return ps.partial_sum_2d(packed, wq, fanout=fanout,
+                                 word_bits=word_bits, interpret=interpret,
+                                 block_rows=br, block_groups=bg)
 
 
 def flat_masked_partial_sum(words, keys, signs, *, fanout: int,
@@ -389,10 +399,11 @@ def flat_masked_partial_sum(words, keys, signs, *, fanout: int,
     pad = g * fanout - c
     if pad:
         words = jnp.pad(words, ((0, pad), (0, 0), (0, 0)))
-    return ps.masked_partial_sum_2d(words, keys, signs, fanout=fanout,
-                                    sibling=sibling, use_masks=use_masks,
-                                    interpret=interpret, block_rows=br,
-                                    block_groups=bg)
+    with tprof.kernel_scope(kind, r4, fanout, interpret):
+        return ps.masked_partial_sum_2d(
+            words, keys, signs, fanout=fanout, sibling=sibling,
+            use_masks=use_masks, interpret=interpret, block_rows=br,
+            block_groups=bg)
 
 
 def master_update(q_pilot, tern_stacked, w, p1, p2,

@@ -36,6 +36,7 @@ from jax.experimental import pallas as pl
 
 from repro.kernels.masked_wire import _tile_hash
 from repro.privacy import masking as pvm
+from repro.telemetry import profile as tprof
 
 LANES = 128
 PACK = 4
@@ -197,28 +198,29 @@ def partial_sum_2d(packed, wq, *, fanout: int, word_bits: int = 32,
     wq2 = jnp.asarray(wq, jnp.uint32).reshape(c, 1)
     kern = functools.partial(_partial_sum_kernel, fanout=fanout,
                              word_bits=word_bits)
-    if block_rows >= rows and block_groups >= g:
+    with tprof.kernel_scope("partial_sum", rows, fanout, interpret):
+        if block_rows >= rows and block_groups >= g:
+            return pl.pallas_call(
+                kern,
+                in_specs=[pl.BlockSpec(packed.shape, None),
+                          pl.BlockSpec(wq2.shape, None)],
+                out_specs=pl.BlockSpec((g, rows, wide), None),
+                out_shape=jax.ShapeDtypeStruct((g, rows, wide), out_dtype),
+                interpret=interpret,
+            )(packed, wq2)
+        grid = (rows // block_rows, g // block_groups)
+        pk_spec = pl.BlockSpec((block_groups * fanout, block_rows, LANES),
+                               lambda i, k: (k, i, 0))
+        wq_spec = pl.BlockSpec((block_groups * fanout, 1), lambda i, k: (k, 0))
+        out_spec = pl.BlockSpec((block_groups, block_rows, wide),
+                                lambda i, k: (k, i, 0))
         return pl.pallas_call(
-            kern,
-            in_specs=[pl.BlockSpec(packed.shape, None),
-                      pl.BlockSpec(wq2.shape, None)],
-            out_specs=pl.BlockSpec((g, rows, wide), None),
+            kern, grid=grid,
+            in_specs=[pk_spec, wq_spec],
+            out_specs=out_spec,
             out_shape=jax.ShapeDtypeStruct((g, rows, wide), out_dtype),
             interpret=interpret,
         )(packed, wq2)
-    grid = (rows // block_rows, g // block_groups)
-    pk_spec = pl.BlockSpec((block_groups * fanout, block_rows, LANES),
-                           lambda i, k: (k, i, 0))
-    wq_spec = pl.BlockSpec((block_groups * fanout, 1), lambda i, k: (k, 0))
-    out_spec = pl.BlockSpec((block_groups, block_rows, wide),
-                            lambda i, k: (k, i, 0))
-    return pl.pallas_call(
-        kern, grid=grid,
-        in_specs=[pk_spec, wq_spec],
-        out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((g, rows, wide), out_dtype),
-        interpret=interpret,
-    )(packed, wq2)
 
 
 @functools.partial(jax.jit, static_argnames=("fanout", "sibling",
@@ -252,29 +254,32 @@ def masked_partial_sum_2d(words, keys, signs, *, fanout: int, sibling: int,
     signs = jnp.asarray(signs, jnp.int32)
     kern_kw = dict(fanout=fanout, word_bits=word_bits, use_masks=use_masks,
                    sibling=sibling)
-    if block_rows >= rows and block_groups >= g:
+    kind = ("partial_sum_masked16" if word_bits == 16
+            else "partial_sum_masked")
+    with tprof.kernel_scope(kind, rows, fanout, interpret):
+        if block_rows >= rows and block_groups >= g:
+            return pl.pallas_call(
+                functools.partial(_masked_partial_kernel, gridded=False,
+                                  **kern_kw),
+                in_specs=[pl.BlockSpec(words.shape, None),
+                          pl.BlockSpec(memory_space=pl.ANY),
+                          pl.BlockSpec(memory_space=pl.ANY)],
+                out_specs=pl.BlockSpec((g, rows, wide), None),
+                out_shape=jax.ShapeDtypeStruct((g, rows, wide), words.dtype),
+                interpret=interpret,
+            )(words, keys, signs)
+        grid = (rows // block_rows, g // block_groups)
+        y_spec = pl.BlockSpec((block_groups * fanout, block_rows, wide),
+                              lambda i, k: (k, i, 0))
+        out_spec = pl.BlockSpec((block_groups, block_rows, wide),
+                                lambda i, k: (k, i, 0))
         return pl.pallas_call(
-            functools.partial(_masked_partial_kernel, gridded=False,
-                              **kern_kw),
-            in_specs=[pl.BlockSpec(words.shape, None),
+            functools.partial(_masked_partial_kernel, gridded=True, **kern_kw),
+            grid=grid,
+            in_specs=[y_spec,
                       pl.BlockSpec(memory_space=pl.ANY),
                       pl.BlockSpec(memory_space=pl.ANY)],
-            out_specs=pl.BlockSpec((g, rows, wide), None),
+            out_specs=out_spec,
             out_shape=jax.ShapeDtypeStruct((g, rows, wide), words.dtype),
             interpret=interpret,
         )(words, keys, signs)
-    grid = (rows // block_rows, g // block_groups)
-    y_spec = pl.BlockSpec((block_groups * fanout, block_rows, wide),
-                          lambda i, k: (k, i, 0))
-    out_spec = pl.BlockSpec((block_groups, block_rows, wide),
-                            lambda i, k: (k, i, 0))
-    return pl.pallas_call(
-        functools.partial(_masked_partial_kernel, gridded=True, **kern_kw),
-        grid=grid,
-        in_specs=[y_spec,
-                  pl.BlockSpec(memory_space=pl.ANY),
-                  pl.BlockSpec(memory_space=pl.ANY)],
-        out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((g, rows, wide), words.dtype),
-        interpret=interpret,
-    )(words, keys, signs)

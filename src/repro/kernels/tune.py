@@ -72,6 +72,24 @@ _FALLBACK_LOGGED: set[tuple[str, int, int, str]] = set()
 # plans a cpu sweep will even try so autotuning stays seconds, not minutes.
 _MAX_SWEEP_STEPS_INTERPRET = 16
 
+# Optional sweep-trace sink: hook(kind, rows, n, backend, timings, best)
+# called once per completed sweep so BENCH_kernels.json provenance is
+# reconstructable from a telemetry trace (telemetry.trace.plan_emitter
+# adapts a TraceWriter into this signature). None = off.
+_TRACE_HOOK = None
+
+
+def set_trace_writer(hook) -> None:
+    """Install (or clear, with None) the sweep-trace hook every autotune
+    sweep reports through — one call per sweep with its full timing list."""
+    global _TRACE_HOOK
+    _TRACE_HOOK = hook
+
+
+def _emit_sweep(kind, rows, n, backend, timings, best) -> None:
+    if _TRACE_HOOK is not None:
+        _TRACE_HOOK(kind, rows, n, backend, timings, best)
+
 
 def backend_tag(interpret: bool | None = None) -> str:
     """The table's backend key: 'cpu-interpret' for interpret mode (the
@@ -242,6 +260,7 @@ def _sweep(kind: str, rows: int, n: int, run_plan: Callable, *,
     _TABLE[(kind, rows, n, backend)] = {
         "block_rows": best["block_rows"],
         "block_workers": best["block_workers"]}
+    _emit_sweep(kind, rows, n, backend, timings, best)
     return {"kind": kind, "rows": rows, "n_workers": n, "backend": backend,
             "best": {k: best[k] for k in ("block_rows", "block_workers")},
             "timings": timings}
@@ -428,6 +447,7 @@ def autotune_partial_sum(rows: int, fanout: int, n_children: int, *,
     _TABLE[(kind, rows, fanout, backend)] = {
         "block_rows": best["block_rows"],
         "block_workers": best["block_workers"]}
+    _emit_sweep(kind, rows, fanout, backend, timings, best)
     return {"kind": kind, "rows": rows, "n_workers": fanout,
             "n_children": n_children, "backend": backend,
             "best": {k: best[k] for k in ("block_rows", "block_workers")},
@@ -476,6 +496,7 @@ def autotune_mask_repair(rows: int, n_pairs: int, *,
     _TABLE[(kind, rows, 1, backend)] = {
         "block_rows": best["block_rows"],
         "block_workers": best["block_workers"]}
+    _emit_sweep(kind, rows, 1, backend, timings, best)
     return {"kind": kind, "rows": rows, "n_workers": 1,
             "n_pairs": n_pairs, "backend": backend,
             "best": {k: best[k] for k in ("block_rows", "block_workers")},

@@ -222,7 +222,13 @@ def check_round_program(fn: Callable, *args, n_workers: int,
     RR streams must be generated in-kernel from counter keys, never
     materialized in HBM and fed to the uplink (the pre-in-kernel-PRNG
     signature). Interior tree launches after the uplink legitimately
-    consume stacked masked-word partials and are exempt from (b).
+    consume stacked masked-word partials and are exempt from (b), and (c)
+    no dict-carried output of the program (the info/telemetry record the
+    driver fetches to the host) holds a float payload stacked over the
+    worker axis — the trace must record counts and public per-worker
+    scalars, never parameter-bearing buffers. Only dict subtrees are
+    audited for (c): the carry's (rows, 128) buffer slabs are shared
+    state, not per-worker exports, even when rows happens to equal N.
     """
     jaxpr = _jaxpr_of(fn, *args, **kwargs)
     launches = [e for e in iter_jaxpr_eqns(jaxpr, into_pallas=False)
@@ -265,5 +271,29 @@ def check_round_program(fn: Callable, *args, n_workers: int,
                         f"tensor: shape {tuple(aval.shape)} {aval.dtype} — "
                         f"mask/RR streams must be generated in-kernel from "
                         f"counter keys, not round-tripped through HBM")
+        _check_info_payloads(fn, args, kwargs, n_workers)
     return {"boundary": "round-step", "n_launches": len(launches),
             "masked": masked}
+
+
+def _check_info_payloads(fn: Callable, args, kwargs, n_workers: int) -> None:
+    """Part (c) of the masked audit: shape-evaluate the program and scan
+    its dict-carried outputs (the info/telemetry records a driver exports
+    off-device) for per-worker float payloads."""
+    from jax.tree_util import DictKey, tree_flatten_with_path
+    spec_args, spec_kwargs = as_specs((args, kwargs))
+    out = jax.eval_shape(lambda a, k: fn(*a, **k), spec_args, spec_kwargs)
+    for path, leaf in tree_flatten_with_path(out)[0]:
+        if not any(isinstance(p, DictKey) for p in path):
+            continue
+        shape = getattr(leaf, "shape", None)
+        dtype = getattr(leaf, "dtype", None)
+        if shape is None:
+            continue
+        if _stacked_float_buffer(tuple(shape), dtype, n_workers):
+            name = jax.tree_util.keystr(path)
+            raise LeakageError(
+                f"round info/trace record carries a per-worker float "
+                f"payload at {name}: shape {tuple(shape)} {dtype} — "
+                f"telemetry must export counts and public scalars only, "
+                f"never parameter-bearing buffers")

@@ -1,0 +1,44 @@
+"""Profiler integration: named kernel scopes + opt-in trace sessions.
+
+Every kernel wrapper in ``repro.kernels.ops`` (and the tree/masked entry
+points it fronts) launches inside a :func:`kernel_scope` named after the
+tuner's table key — ``wire/<kind>/r<rows>n<N>/<backend>`` — so a real-TPU
+``jax.profiler`` capture attributes device time to the same identities the
+autotuner plans and ``BENCH_kernels.json`` reports. ``jax.named_scope``
+annotates metadata only: it adds no jaxpr equations, so the round program
+still counts exactly two pallas launches and zero host syncs with scopes
+on (pinned by tests/test_telemetry.py).
+
+:func:`profile_session` wraps ``jax.profiler.start_trace/stop_trace`` as a
+context manager; ``benchmarks/kernels_bench.py --profile DIR`` drives it.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+import jax
+
+
+def scope_name(kind: str, rows: int, n: int = 1,
+               interpret: bool | None = None) -> str:
+    """The profiler label of one launch site, keyed like the tune table."""
+    from repro.kernels import tune
+    return f"wire/{kind}/r{int(rows)}n{max(1, int(n))}/" \
+           f"{tune.backend_tag(interpret)}"
+
+
+def kernel_scope(kind: str, rows: int, n: int = 1,
+                 interpret: bool | None = None):
+    """``jax.named_scope`` over a kernel launch, named by its tuner key."""
+    return jax.named_scope(scope_name(kind, rows, n, interpret))
+
+
+@contextmanager
+def profile_session(logdir: str):
+    """Opt-in ``jax.profiler`` capture: every named kernel scope inside the
+    block lands in the trace under ``logdir`` (TensorBoard/Perfetto)."""
+    jax.profiler.start_trace(logdir)
+    try:
+        yield logdir
+    finally:
+        jax.profiler.stop_trace()
